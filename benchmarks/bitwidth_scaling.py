@@ -1,0 +1,25 @@
+"""Paper Tab. 2: scaling LUT-16 to larger bitwidths — entries, bytes,
+register/VMEM residency."""
+
+from repro.core.lut import lut_footprint
+
+from .common import emit
+
+
+def run():
+    rows = []
+    for bits in (2, 3, 4):
+        fp = lut_footprint(bits, entry_bytes=1)   # paper's 8-bit entries
+        fp_f32 = lut_footprint(bits, entry_bytes=4)  # our f32 entries
+        rows.append({
+            "bitwidth": bits,
+            "index_bits": fp["index_bits"],
+            "lut_entries": fp["entries"],
+            "lut_bits_paper": fp["bytes"] * 8,
+            "avx2_registers_paper": fp["avx2_registers"],
+            "fits_l1_paper": fp["fits_l1_paper"],
+            "bytes_f32_entries": fp_f32["bytes"],
+            "fits_vmem_tile": fp_f32["fits_vmem_tile"],
+        })
+    emit("tab2_bitwidth_scaling", rows)
+    return rows

@@ -1,0 +1,72 @@
+"""Shared benchmark utilities: timing, CSV emit, layer-shape tables."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "bench")
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time seconds of jit'd fn(*args)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, rows: list[dict]):
+    """Print CSV to stdout and save under results/bench/<name>.csv."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(str(r.get(c, "")) for c in cols))
+    text = "\n".join(lines)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(text + "\n")
+    print(f"--- {name} ({path}) ---")
+    print(text)
+    print()
+
+
+def geomean(xs) -> float:
+    xs = np.asarray(list(xs), dtype=np.float64)
+    return float(np.exp(np.log(np.maximum(xs, 1e-12)).mean()))
+
+
+# Paper Fig. 5 axis: per-layer (M, N, K) of the im2col GEMMs.
+# M = OH*OW (batch 1 @ 224x224), N = KH*KW*Cin, K = Cout.
+LAYERS = {
+    "mobilenetv1": [
+        (112 * 112, 32, 64), (56 * 56, 64, 128), (56 * 56, 128, 128),
+        (28 * 28, 128, 256), (28 * 28, 256, 256), (14 * 14, 256, 512),
+        (14 * 14, 512, 512), (7 * 7, 512, 1024), (7 * 7, 1024, 1024),
+    ],
+    "resnet18": [
+        (56 * 56, 576, 64), (28 * 28, 576, 128), (28 * 28, 1152, 128),
+        (14 * 14, 1152, 256), (14 * 14, 2304, 256), (7 * 7, 2304, 512),
+        (7 * 7, 4608, 512),
+    ],
+    "resnet34": [
+        (56 * 56, 576, 64), (28 * 28, 1152, 128), (14 * 14, 2304, 256),
+        (14 * 14, 2304, 256), (7 * 7, 4608, 512), (7 * 7, 4608, 512),
+    ],
+    "resnet50": [
+        (56 * 56, 64, 64), (56 * 56, 576, 64), (56 * 56, 64, 256),
+        (28 * 28, 1152, 128), (28 * 28, 128, 512), (14 * 14, 2304, 256),
+        (14 * 14, 256, 1024), (7 * 7, 4608, 512), (7 * 7, 512, 2048),
+    ],
+}

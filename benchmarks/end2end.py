@@ -1,0 +1,109 @@
+"""Paper Fig. 6 / Tab. 5: end-to-end speedups over the INT8 baseline.
+
+Measured on this container: full forward latency of the ResNet18-style CNN
+(deepgemm-cnn config, conv-as-im2col-GEMM) and one transformer decode step
+(reduced qwen1.5-0.5b), in three numerics:
+  bf16        : unquantized reference
+  int8-like   : weights int8-dequant path (QNNPACK-analog numerics)
+  w2-packed   : the DeepGEMM path (packed codes + codebook LUT)
+plus the v5e roofline-predicted decode speedup (weight-traffic model) —
+the TPU-relevant form of the paper's end-to-end claim."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import conv, qlinear
+from repro.core.qlinear import QuantPolicy
+from repro.models import lm
+
+from .common import emit, timeit
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cnn_forward_times():
+    from repro.configs.deepgemm_cnn import CONFIG as CC
+    x = jax.random.normal(KEY, (8, CC.img_hw, CC.img_hw, CC.in_ch), jnp.float32)
+    chans = [CC.stem[0]] + [c for c, n in CC.stages for _ in range(n)]
+    params, cin = [], CC.in_ch
+    for i, cout in enumerate(chans):
+        params.append(conv.conv2d_init(jax.random.fold_in(KEY, i), 3, 3, cin, cout))
+        cin = cout
+
+    def fwd_plain(ps, x):
+        for p in ps:
+            x = jax.nn.relu(conv.conv2d_apply(p, x))
+        return x
+
+    qws = [qlinear.quantize_weight(p["w"], QuantPolicy(w_bits=2, a_bits=2))
+           for p in params]
+    qw8 = [qlinear.quantize_weight(p["w"], QuantPolicy(w_bits=8, a_bits=8))
+           for p in params]
+
+    def fwd_packed(qs, x, a_bits):
+        for p, qw in zip(params, qs):
+            x = jax.nn.relu(conv.conv2d_serve(qw, x, 3, 3, a_bits=a_bits,
+                                              backend="ref"))
+        return x
+
+    # params hold static ints (kh/kw): close over them rather than tracing
+    t_bf16 = timeit(jax.jit(lambda x: fwd_plain(params, x)), x)
+    t_int8 = timeit(jax.jit(lambda x: fwd_packed(qw8, x, 8)), x)
+    t_w2 = timeit(jax.jit(lambda x: fwd_packed(qws, x, 2)), x)
+    return t_bf16, t_int8, t_w2
+
+
+def _lm_decode_times():
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    params = lm.init_params(KEY, cfg, mode="plain")
+    q2 = lm.quantize_tree(params, cfg)
+    cfg8 = dataclasses.replace(cfg, quant=QuantPolicy(w_bits=8))
+    q8 = lm.quantize_tree(params, cfg8)
+    caches = lm.init_cache(cfg, 8, 128)
+    batch_tokens = jnp.ones((8, 1), jnp.int32)
+    pos = jnp.full((8,), 64, jnp.int32)
+
+    def dec(p, c):
+        h, c2 = lm.forward(p, cfg, batch_tokens, caches=c, pos=pos)
+        return lm.logits_fn(p, cfg, h)
+
+    t_bf16 = timeit(jax.jit(dec), params, caches)
+    t_int8 = timeit(jax.jit(dec), q8, caches)
+    t_w2 = timeit(jax.jit(dec), q2, caches)
+    return t_bf16, t_int8, t_w2
+
+
+def _tpu_decode_roofline(arch: str):
+    """Predicted v5e decode-step speedup int8 -> w2 (weight traffic model)."""
+    cfg = get_config(arch)
+    P = cfg.n_params()
+    embed = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    t8 = ((P - embed) * 1.0 + embed * 2.0) / HBM_BW
+    t2 = ((P - embed) * 0.25 + embed * 2.0) / HBM_BW
+    return t8 / t2
+
+
+def run():
+    rows = []
+    cb, ci, cw = _cnn_forward_times()
+    rows.append({"workload": "cnn-resnet18-style fwd (CPU measured)",
+                 "bf16_ms": round(cb * 1e3, 2), "int8_ms": round(ci * 1e3, 2),
+                 "w2_ms": round(cw * 1e3, 2),
+                 "speedup_int8_to_w2": round(ci / cw, 3)})
+    lb, li, lw = _lm_decode_times()
+    rows.append({"workload": "lm decode step (CPU measured)",
+                 "bf16_ms": round(lb * 1e3, 2), "int8_ms": round(li * 1e3, 2),
+                 "w2_ms": round(lw * 1e3, 2),
+                 "speedup_int8_to_w2": round(li / lw, 3)})
+    for arch in ("qwen1.5-0.5b", "codeqwen1.5-7b", "gemma3-12b",
+                 "moonshot-v1-16b-a3b"):
+        rows.append({"workload": f"{arch} decode (v5e roofline model)",
+                     "bf16_ms": "", "int8_ms": "", "w2_ms": "",
+                     "speedup_int8_to_w2": round(_tpu_decode_roofline(arch), 3)})
+    emit("tab5_end2end", rows)
+    return rows

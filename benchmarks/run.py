@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §1).
+
+  Tab. 1  accuracy_qat        fp32 / w8a8 / w2a2 LSQ on a learnable task
+  Tab. 2  bitwidth_scaling    LUT size accounting at 2/3/4 bits
+  Tab. 3  packing_schemes     bitwise ops per unpacked output, schemes a-d
+  Tab. 4  layer_speedup       per-layer (M,N,K) int8-vs-w2 ratios + roofline
+  Tab. 5  end2end             CNN fwd + LM decode, measured + roofline
+  Fig. 7  kernel_profile      quantize/pack/lutconv/dequant stage split
+  extra   hlo_validation      roofline parser vs XLA cost_analysis
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+"""
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slow QAT training benchmark")
+    args = ap.parse_args(argv)
+
+    from . import (accuracy_qat, bitwidth_scaling, end2end, hlo_validation,
+                   kernel_profile, layer_speedup, packing_schemes)
+
+    benches = {
+        "bitwidth_scaling": bitwidth_scaling.run,
+        "packing_schemes": packing_schemes.run,
+        "kernel_profile": kernel_profile.run,
+        "hlo_validation": hlo_validation.run,
+        "layer_speedup": layer_speedup.run,
+        "end2end": end2end.run,
+        "accuracy_qat": accuracy_qat.run,
+    }
+    if args.fast:
+        benches.pop("accuracy_qat")
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    failed = []
+    for name, fn in benches.items():
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        try:
+            fn()
+            print(f"[{name}] done in {time.time()-t0:.1f}s\n", flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print("FAILED:", failed)
+        return 1
+    print("all benchmarks complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,52 @@
+"""Batched serving example with packed 2-bit weights: the paper's deployment
+story end-to-end — offline pack, prefill a batch of prompts, decode with a
+ring/global KV cache, compare uniform vs non-uniform (k-means) codebooks.
+
+Run: PYTHONPATH=src python examples/serve_quantized.py
+"""
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.qlinear import QuantPolicy
+from repro.launch import steps as St
+from repro.models import lm
+
+ARCH = "gemma3-12b"           # 5:1 local:global — exercises ring caches
+B, P, GEN = 4, 48, 16
+
+key = jax.random.PRNGKey(0)
+cfg = reduce_for_smoke(get_config(ARCH))
+
+for scheme in ("uniform", "kmeans"):
+    qcfg = dataclasses.replace(
+        cfg, quant=QuantPolicy(w_bits=2, nonuniform=(scheme == "kmeans")))
+    params = lm.init_params(key, qcfg, mode="plain")
+    qparams = lm.quantize_tree(params, qcfg)
+
+    prefill = jax.jit(St.make_prefill_step(qcfg, max_len=P + GEN))
+    decode = jax.jit(St.make_decode_step(qcfg), donate_argnums=(1,))
+
+    tokens = jax.random.randint(key, (B, P), 0, qcfg.vocab_size)
+    logits, caches = prefill(qparams, {"tokens": tokens})
+    out = [jnp.argmax(logits[:, -1], -1)]
+    t0 = time.time()
+    for i in range(GEN - 1):
+        batch = {"tokens": out[-1][:, None],
+                 "pos": jnp.full((B,), P + i, jnp.int32)}
+        logits, caches = decode(qparams, caches, batch)
+        out.append(jnp.argmax(logits[:, -1], -1))
+    jax.block_until_ready(out[-1])
+    dt = time.time() - t0
+    # fidelity vs the unquantized model on the same prompt
+    h_q, _ = lm.forward(qparams, qcfg, tokens)
+    h_f, _ = lm.forward(params, qcfg, tokens)
+    rel = float(jnp.abs(h_q - h_f).mean() / jnp.abs(h_f).mean())
+    print(f"[{scheme:8s}] {B*(GEN-1)} tokens in {dt*1e3:.0f} ms "
+          f"({B*(GEN-1)/dt:.1f} tok/s) | hidden-state rel err vs fp: {rel:.3f}")
+    print(f"           sample: {jnp.stack(out, 1)[0].tolist()}")
+print("OK")

@@ -1,0 +1,82 @@
+"""End-to-end driver: QAT-train a ~100M-parameter decoder LM for a few
+hundred steps with 2-bit LSQ fake-quant, checkpointing + crash recovery on.
+
+This is the (b) deliverable's end-to-end driver. ~100M params is real work
+on one CPU: by default we run a 4-layer d=512 model (~100M with the 152k
+vocab) at short sequence length; pass --tiny for a faster sanity run.
+
+Run: PYTHONPATH=src python examples/train_qat.py [--tiny] [--steps N]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro import optim
+from repro.configs import ShapeConfig, get_config
+from repro.core.qlinear import QuantPolicy
+from repro.data import make_pipeline
+from repro.dist.fault import FaultConfig, run_resilient
+from repro.launch import steps as St
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_qat_example")
+    args = ap.parse_args()
+
+    base = get_config("qwen1.5-0.5b")
+    if args.tiny:
+        cfg = dataclasses.replace(
+            base, n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+            head_dim=32, d_ff=256, vocab_size=2048, microbatch=1,
+            remat="none", quant=QuantPolicy(w_bits=2))
+        shape = ShapeConfig("ex", 64, 8, "train")
+        steps = min(args.steps, 60)
+    else:
+        # ~100M: embed 152k x 512 = 78M + 4 layers x ~5.5M
+        cfg = dataclasses.replace(
+            base, n_layers=4, d_model=512, n_heads=8, n_kv_heads=8,
+            head_dim=64, d_ff=1408, microbatch=1, remat="none",
+            quant=QuantPolicy(w_bits=2))
+        shape = ShapeConfig("ex", 128, 8, "train")
+        steps = args.steps
+
+    print(f"[example] {cfg.n_params()/1e6:.1f}M params, w2 LSQ QAT, "
+          f"{steps} steps of {shape.global_batch}x{shape.seq_len} tokens")
+    opt = optim.adamw(optim.warmup_cosine(1e-3, 30, steps))
+    state = St.init_train_state(jax.random.PRNGKey(0), cfg, opt, mode="qat")
+    step_fn = jax.jit(St.make_train_step(cfg, opt, mode="qat"),
+                      donate_argnums=(0,))
+    pipe = make_pipeline(cfg, shape, seed=0)
+    fc = FaultConfig(ckpt_dir=args.ckpt_dir, ckpt_every=100)
+
+    t0 = time.time()
+    hist = []
+
+    def on_metrics(m):
+        hist.append(float(m["loss"]))
+        if m["step"] % 20 == 0:
+            print(f"  step {m['step']:4d}  loss {hist[-1]:.4f}  "
+                  f"({m['dt']*1e3:.0f} ms/step)", flush=True)
+
+    state, log = run_resilient(state, step_fn, pipe.batch, steps, fc,
+                               on_metrics=on_metrics)
+    if not hist:
+        print(f"[example] checkpoint in {args.ckpt_dir} already at/after "
+              f"step {steps} — nothing to do (restart semantics). "
+              f"Remove the directory for a fresh run.")
+        print("OK")
+        return
+    print(f"[example] {len(log)} steps in {time.time()-t0:.0f}s — "
+          f"loss {hist[0]:.3f} -> {min(hist):.3f}")
+    assert min(hist) < hist[0], "loss should improve"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .store import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, latest_step, AsyncCheckpointer,
+    restore_with_reshard,
+)

@@ -1,0 +1,169 @@
+"""Tree checkpointing: npz payload + json manifest, atomic step directories,
+background-thread async save, restore-with-reshard for elastic scaling.
+
+Layout:
+    <dir>/step_<n>/payload.npz      flattened tree, keys = joined tree paths
+    <dir>/step_<n>/manifest.json    step, tree paths, shapes/dtypes, user meta
+    <dir>/step_<n>.tmp.*            staging dir, os.rename -> atomic publish
+
+The tree may contain QuantizedWeight nodes (registered keyed pytrees) — their
+leaves flatten through the same path mechanism. Restore takes a *template*
+tree (from jax.eval_shape of the init fn) so structure and static aux data
+never live in the checkpoint, only array payloads.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# npz stores ml_dtypes (bfloat16, fp8) as opaque void — round-trip them
+# through a same-width uint view, recording the true dtype in the manifest.
+_EXOTIC = {
+    "bfloat16": np.uint16,
+    "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+}
+
+
+def _to_savable(v: np.ndarray) -> np.ndarray:
+    carrier = _EXOTIC.get(v.dtype.name)
+    return v.view(carrier) if carrier is not None else v
+
+
+def _from_saved(v: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXOTIC:
+        return v.view(getattr(ml_dtypes, dtype_name))
+    return v
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            parts.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            parts.append(str(e.name))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *, meta: Optional[dict] = None,
+                    keep: int = 3) -> str:
+    """Atomic save. Returns the published directory path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    raw = {_path_str(p): np.asarray(jax.device_get(v)) for p, v in flat}
+    manifest = {
+        "step": int(step),
+        "keys": list(raw.keys()),
+        "shapes": {k: list(v.shape) for k, v in raw.items()},
+        "dtypes": {k: str(v.dtype) for k, v in raw.items()},
+        "meta": meta or {},
+    }
+    payload = {k: _to_savable(v) for k, v in raw.items()}
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    stage = tempfile.mkdtemp(prefix=f"step_{step:09d}.tmp.", dir=ckpt_dir)
+    try:
+        np.savez(os.path.join(stage, "payload.npz"), **payload)
+        with open(os.path.join(stage, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(stage, final)            # atomic publish
+    except BaseException:
+        shutil.rmtree(stage, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and ".tmp." not in d)
+    for d in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and ".tmp." not in d]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template, step: Optional[int] = None):
+    """Restore into the structure of ``template`` (arrays or SDS leaves).
+    Returns (tree, step, meta)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    payload = np.load(os.path.join(d, "payload.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, tmpl in flat:
+        k = _path_str(p)
+        arr = _from_saved(payload[k], manifest["dtypes"].get(k, ""))
+        assert tuple(arr.shape) == tuple(tmpl.shape), (k, arr.shape, tmpl.shape)
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, step, manifest.get("meta", {})
+
+
+def restore_with_reshard(ckpt_dir: str, template, shardings,
+                         step: Optional[int] = None):
+    """Elastic restart: restore host arrays, then device_put against the NEW
+    mesh's shardings (which may have a different device count than the mesh
+    the checkpoint was written under)."""
+    tree, step, meta = restore_checkpoint(ckpt_dir, template, step)
+    tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, step, meta
+
+
+class AsyncCheckpointer:
+    """Background-thread saver: snapshot to host memory synchronously (cheap),
+    serialize to disk off the training thread. ``wait()`` joins the inflight
+    save; a new save waits for the previous one (single-flight)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, meta: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_tree, meta=meta,
+                                keep=self.keep)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

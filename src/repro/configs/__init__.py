@@ -1,0 +1,46 @@
+"""Config registry: one module per assigned architecture (+ the paper's CNN).
+
+``get_config(name)`` returns the exact ModelConfig from the assignment table;
+``reduce_for_smoke`` (base.py) shrinks any of them to CPU-runnable size.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from .base import (  # noqa: F401
+    ModelConfig, MoEConfig, ShapeConfig, SHAPES, LONG_CONTEXT_OK,
+    cell_is_runnable, reduce_for_smoke, input_specs,
+)
+
+ARCHS = (
+    "whisper-large-v3",
+    "codeqwen1.5-7b",
+    "h2o-danube-3-4b",
+    "gemma3-12b",
+    "qwen1.5-0.5b",
+    "moonshot-v1-16b-a3b",
+    "llama4-maverick-400b-a17b",
+    "recurrentgemma-9b",
+    "qwen2-vl-2b",
+    "rwkv6-1.6b",
+)
+
+_MODULES = {
+    "whisper-large-v3": "whisper_large_v3",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen1.5-0.5b": "qwen15_05b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "rwkv6-1.6b": "rwkv6_16b",
+    "deepgemm-cnn": "deepgemm_cnn",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG

@@ -1,0 +1,249 @@
+"""Config system: ModelConfig (architecture), ShapeConfig (workload cells),
+smoke reduction, and input_specs (ShapeDtypeStruct stand-ins for the dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import QuantPolicy
+
+
+# --------------------------------------------------------------------------- #
+# Model config
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    group_size: int = 128          # tokens per dispatch group (memory knob)
+    router_dtype: str = "float32"  # router stays high precision (mixed prec.)
+    n_shared: int = 0              # shared-expert multiplier (deepseek/llama4)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # --- per-layer block pattern, repeated to n_layers.
+    #     entries: "global" | "local" | "recurrent" | "rwkv"
+    pattern: tuple = ("global",)
+    window: int = 4096             # local-attention window
+    kv_repeat: int = 1             # replicate kv heads to the TP degree for
+                                   # train/prefill attention (GQA kv < TP)
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    pos_embed: str = "rope"        # rope | learned (whisper)
+    max_pos: int = 32768           # learned-pos table size
+    mrope_sections: Optional[tuple] = None   # qwen2-vl M-RoPE (t, h, w) half-dims
+    mlp: str = "swiglu"            # swiglu | geglu | gelu
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    tie_embeddings: bool = True
+    # --- encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 1500        # fixed frame count (stub frontend)
+    # --- vlm stub
+    n_vision_tokens: int = 0
+    # --- recurrent blocks
+    d_rnn: Optional[int] = None    # RG-LRU width (defaults to d_model)
+    conv_width: int = 4
+    rwkv_head_size: int = 64
+    # --- moe
+    moe: Optional[MoEConfig] = None
+    moe_pattern: Optional[tuple] = None   # per-pattern-slot: MoE mlp? (None => all)
+    # --- quantization policy for the paper's technique
+    quant: QuantPolicy = QuantPolicy(w_bits=2, a_bits=None)
+    kv_cache_dtype: str = "bfloat16"   # bfloat16 | int8 (serve-time cache)
+    # --- training
+    dtype: str = "bfloat16"
+    remat: str = "full"            # none | dots | full | 2level
+    remat_group: int = 4           # superblocks per outer group (2level)
+    microbatch: int = 1            # gradient-accumulation microbatches
+    accum_dtype: str = "float32"   # grad accumulation buffer dtype
+    # --- provenance
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def layer_types(self) -> tuple:
+        """Expanded per-layer type list of length n_layers (pattern repeated,
+        truncated; remainder layers take the pattern prefix)."""
+        reps = -(-self.n_layers // len(self.pattern))
+        return (self.pattern * reps)[: self.n_layers]
+
+    @property
+    def n_superblocks(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def n_remainder(self) -> int:
+        return self.n_layers % len(self.pattern)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def moe_flags(self) -> tuple:
+        """Per-layer MoE flag, aligned with layer_types."""
+        if self.moe is None:
+            return (False,) * self.n_layers
+        mp = self.moe_pattern or (True,) * len(self.pattern)
+        reps = -(-self.n_layers // len(mp))
+        return (mp * reps)[: self.n_layers]
+
+    def _mlp_mult(self) -> int:
+        return 3 if self.mlp in ("swiglu", "geglu") else 2
+
+    def n_params(self, active_only: bool = False) -> int:
+        """Total parameter count (for MODEL_FLOPS accounting).
+        active_only: count top-k + shared experts only (MoE active params)."""
+        d, hd = self.d_model, self.hd
+        per_attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        per_mlp = self._mlp_mult() * d * self.d_ff
+        per_moe = 0
+        if self.moe:
+            e = self.moe
+            n_e = e.top_k if active_only else e.n_experts
+            per_moe = (n_e * 3 * d * e.d_ff_expert + d * e.n_experts
+                       + e.n_shared * 3 * d * e.d_ff_expert)
+        per_rnn = 0
+        if "recurrent" in self.pattern:
+            drnn = self.d_rnn or d
+            per_rnn = d * drnn * 3 + drnn * self.conv_width + drnn * 6
+        if "rwkv" in self.pattern:
+            per_rnn = (d * d * 5                     # r,k,v,g,out
+                       + self._mlp_mult() * d * self.d_ff  # channel mix (k,v) ~2 + r
+                       + d * d)                      # wc_r
+        total = 0
+        for t, is_moe in zip(self.layer_types, self.moe_flags()):
+            if t in ("global", "local"):
+                total += per_attn + (per_moe if is_moe else per_mlp)
+            elif t == "recurrent":
+                total += per_rnn + (per_moe if is_moe else per_mlp)
+            elif t == "rwkv":
+                total += per_rnn
+        total += self.encoder_layers * (per_attn + per_mlp)
+        if self.is_encdec:  # cross-attention in every decoder layer
+            total += self.n_layers * per_attn
+        total += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE top-k) for 6*N_active*D accounting."""
+        return self.n_params(active_only=True)
+
+
+# --------------------------------------------------------------------------- #
+# Workload shapes (the 4 assigned cells)
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# Archs allowed to run long_500k (sub-quadratic / bounded-KV mechanisms).
+LONG_CONTEXT_OK = {
+    "rwkv6-1.6b", "recurrentgemma-9b", "h2o-danube-3-4b", "gemma3-12b",
+}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.name not in LONG_CONTEXT_OK:
+        return False, "pure full-attention arch: 500k dense KV infeasible (DESIGN.md §4)"
+    return True, ""
+
+
+# --------------------------------------------------------------------------- #
+# Smoke reduction
+# --------------------------------------------------------------------------- #
+
+def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Same family, tiny dims: one pattern repeat (+remainder rule), small
+    width, tiny vocab. Used by per-arch smoke tests (CPU, real arrays)."""
+    n_layers = min(len(cfg.pattern) + (1 if cfg.n_remainder else 0), cfg.n_layers)
+    kv = min(cfg.n_kv_heads, 2)
+    heads = max(4, kv)
+    moe = None
+    if cfg.moe:
+        moe = dataclasses.replace(
+            cfg.moe, n_experts=min(cfg.moe.n_experts, 4),
+            top_k=min(cfg.moe.top_k, 2), d_ff_expert=64, group_size=16)
+    return dataclasses.replace(
+        cfg,
+        n_layers=n_layers, d_model=64, n_heads=heads, n_kv_heads=kv,
+        head_dim=16, d_ff=128, vocab_size=512,
+        window=min(cfg.window, 16),
+        max_pos=256,
+        encoder_layers=min(cfg.encoder_layers, 2), encoder_seq=24,
+        n_vision_tokens=min(cfg.n_vision_tokens, 8),
+        d_rnn=64 if cfg.d_rnn else None,
+        rwkv_head_size=16,
+        moe=moe,
+        mrope_sections=(2, 3, 3) if cfg.mrope_sections else None,
+        remat="none",
+        kv_cache_dtype="bfloat16",   # keep smoke consistency tests bit-exact
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Input specs (ShapeDtypeStruct stand-ins, weak-type-correct, no allocation)
+# --------------------------------------------------------------------------- #
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for a given workload cell. The dry-run lowers against
+    these; smoke tests materialize real arrays of the same spec."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    d = {}
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            d["audio_embed"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), f32)
+        if cfg.n_vision_tokens:
+            d["vision_embed"] = jax.ShapeDtypeStruct((B, cfg.n_vision_tokens, cfg.d_model), f32)
+        d["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        d["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.mrope_sections:
+            d["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+    elif shape.kind == "prefill":
+        if cfg.is_encdec:
+            d["audio_embed"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), f32)
+        if cfg.n_vision_tokens:
+            d["vision_embed"] = jax.ShapeDtypeStruct((B, cfg.n_vision_tokens, cfg.d_model), f32)
+        d["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.mrope_sections:
+            d["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+    else:  # decode: one new token against a cache of length S
+        d["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        d["pos"] = jax.ShapeDtypeStruct((B,), i32)
+        if cfg.mrope_sections:
+            d["positions"] = jax.ShapeDtypeStruct((B, 1, 3), i32)
+    return d

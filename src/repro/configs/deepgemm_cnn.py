@@ -1,0 +1,18 @@
+"""The paper's own evaluation model family: a ResNet18-style CNN whose conv
+layers run through the LUT-GEMM operators (im2col). Used by the paper-table
+benchmarks (Fig. 5/6, Tab. 4/5) and the CNN example."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str = "deepgemm-cnn"
+    # (cout, kh, kw, stride) per stage block; ResNet18-ish for 32x32 inputs
+    stem: tuple = (64, 3, 3, 1)
+    stages: tuple = ((64, 2), (128, 2), (256, 2), (512, 2))
+    n_classes: int = 10
+    img_hw: int = 32
+    in_ch: int = 3
+
+
+CONFIG = CNNConfig()

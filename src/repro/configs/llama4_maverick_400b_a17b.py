@@ -1,0 +1,30 @@
+"""llama4-maverick-400b-a17b [moe]: 128 routed experts top-1 + shared expert,
+MoE on alternating layers (the interleave that lands the 400B total / 17B
+active split). 48L d_model=5120 40H (kv=8) d_ff=8192 vocab=202048
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    pattern=("global", "global"),
+    moe_pattern=(False, True),     # dense / MoE interleave
+    rope_theta=500_000.0,
+    mlp="swiglu",
+    norm="rmsnorm",
+    tie_embeddings=False,
+    moe=MoEConfig(n_experts=128, top_k=1, d_ff_expert=8192,
+                  capacity_factor=1.25, group_size=128, n_shared=1),
+    microbatch=1,
+    remat="names",
+    accum_dtype="bfloat16",   # grad-accum buffer: fits 16GB/chip (DESIGN.md 6)
+    kv_cache_dtype="int8",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+)

@@ -1,0 +1,27 @@
+"""qwen2-vl-2b [vlm]: M-RoPE, dynamic resolution (vision frontend stubbed:
+input_specs provides 256 patch embeddings). 28L d_model=1536 12H (kv=2)
+d_ff=8960 vocab=151936 [arXiv:2409.12191; hf]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    pattern=("global",),
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),   # (t, h, w) half-dims, sum = head_dim/2
+    mlp="swiglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    n_vision_tokens=256,
+    microbatch=2,
+    kv_cache_dtype="int8",
+    source="arXiv:2409.12191; hf",
+)

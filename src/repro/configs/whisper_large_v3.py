@@ -1,0 +1,27 @@
+"""whisper-large-v3 [audio]: enc-dec, conv frontend stubbed.
+32L d_model=1280 20H (GQA kv=20 == MHA) d_ff=5120 vocab=51866
+[arXiv:2212.04356; unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,            # decoder layers
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    pattern=("global",),
+    qkv_bias=True,
+    pos_embed="learned",
+    max_pos=32768,          # decode_32k cell needs a 32k learned-pos table
+    mlp="gelu",
+    norm="layernorm",
+    tie_embeddings=True,
+    encoder_layers=32,
+    encoder_seq=1500,       # stub frontend: 30 s audio -> 1500 frames
+    microbatch=4,
+    kv_cache_dtype="int8",
+    source="arXiv:2212.04356; unverified",
+)

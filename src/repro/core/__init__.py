@@ -1,0 +1,2 @@
+"""DeepGEMM core: quantization, packing, LUT construction, quantized layers."""
+from . import conv, lut, packing, qlinear, quant  # noqa: F401

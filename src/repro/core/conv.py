@@ -1,0 +1,74 @@
+"""Convolution via im2col + LUT GEMM — the paper's CNN operators (§5.1/5.2).
+
+The paper evaluates conv layers of MobileNetV1/ResNet/VGG as (M, N) x (N, K)
+GEMMs after im2col. We reproduce that operator: NHWC conv lowered to patches
+@ filter-matrix through either the plain path, the QAT path, or the packed
+LUT serving path. This feeds benchmarks/layer_speedup.py and end2end.py and
+the deepgemm_cnn example (ResNet18-style).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import qlinear
+from .qlinear import QuantPolicy, QuantizedWeight
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
+           padding: str = "SAME") -> tuple[jax.Array, tuple[int, int]]:
+    """x: (N, H, W, C) -> patches (N*OH*OW, KH*KW*C)."""
+    n, h, w, c = x.shape
+    if padding == "SAME":
+        oh, ow = -(-h // stride), -(-w // stride)
+        ph = max((oh - 1) * stride + kh - h, 0)
+        pw = max((ow - 1) * stride + kw - w, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2), (0, 0)))
+    else:
+        oh, ow = (h - kh) // stride + 1, (w - kw) // stride + 1
+    patches = jax.lax.conv_general_dilated_patches(
+        x.transpose(0, 3, 1, 2), (kh, kw), (stride, stride), "VALID")
+    # patches: (N, C*KH*KW, OH, OW) -> (N*OH*OW, KH*KW*C ordering of filters)
+    patches = patches.transpose(0, 2, 3, 1).reshape(n * oh * ow, -1)
+    return patches, (oh, ow)
+
+
+def conv_gemm_shape(x_shape, kh, kw, cout, stride=1):
+    """(M, N, K) of the im2col GEMM for a conv layer — matches the paper's
+    per-layer (M, N, K) axis labels in Fig. 5."""
+    n, h, w, c = x_shape
+    oh, ow = -(-h // stride), -(-w // stride)
+    return (n * oh * ow, kh * kw * c, cout)
+
+
+def conv2d_init(key, kh: int, kw: int, cin: int, cout: int, dtype=jnp.float32) -> dict:
+    fan_in = kh * kw * cin
+    return {"w": jax.random.normal(key, (fan_in, cout), dtype) / jnp.sqrt(fan_in),
+            "kh": kh, "kw": kw, "cin": cin, "cout": cout}
+
+
+def conv2d_apply(params: dict, x: jax.Array, *, stride: int = 1,
+                 policy: QuantPolicy = qlinear.BF16_POLICY,
+                 mode: str = "plain") -> jax.Array:
+    """Plain / QAT conv via im2col GEMM."""
+    patches, (oh, ow) = im2col(x, params["kh"], params["kw"], stride)
+    y = qlinear.dense_apply(
+        {k: v for k, v in params.items() if k in ("w", "b", "w_step", "a_step")},
+        patches, policy=policy, mode=mode)
+    return y.reshape(x.shape[0], oh, ow, params["cout"])
+
+
+def conv2d_serve(
+    qw: QuantizedWeight, x: jax.Array, kh: int, kw: int, *,
+    stride: int = 1, a_bits: Optional[int] = 2, backend: str = "auto",
+    block: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """Packed LUT conv (the paper's deployed operator): im2col -> quantize+pack
+    activations -> LUT GEMM -> dequant (scales in epilogue)."""
+    patches, (oh, ow) = im2col(x, kh, kw, stride)
+    y = qlinear.dense_serve(qw, patches, a_bits=a_bits, backend=backend, block=block)
+    return y.reshape(x.shape[0], oh, ow, qw.out_features)

@@ -1,0 +1,147 @@
+"""Lookup-table construction (paper §3, Figs. 2-3).
+
+The LUT is the paper's central object: ``lut[w_idx * 2^b + a_idx]`` holds the
+precomputed product of the dequantized weight and activation codes. Because
+entries are *precomputed*, they may be:
+
+* integer products (uniform quantization, exact int accumulation),
+* float products of arbitrary codebook levels (non-uniform, LCQ-style),
+* signed or unsigned — the index shift is absorbed into the table,
+* pre-scaled by s_w * s_a (and any fused epilogue), the paper's
+  quantize/conv/dequantize fusion (§5.3).
+
+LUT-16  : b=2 -> 16 entries  (one VREG half on AVX2; one VMEM row here)
+LUT-64  : b=3 -> 64 entries
+LUT-256 : b=4 -> 256 entries
+LUT-65k : all dot products of 4-element 2-bit vectors -> 2^16 entries.
+          Ref-path only on TPU (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quant import Codebook, qrange, uniform_codebook
+
+
+@dataclasses.dataclass(frozen=True)
+class ProductLUT:
+    """Flat product table: ``table[w_idx * (2^a_bits) + a_idx]``.
+
+    ``table`` dtype is f32 for float/fused entries or int32 for exact
+    integer accumulation.
+    """
+    table: jax.Array          # (2^(w_bits + a_bits),)
+    w_bits: int
+    a_bits: int
+
+    @property
+    def n_entries(self) -> int:
+        return 2 ** (self.w_bits + self.a_bits)
+
+    @property
+    def nbytes(self) -> int:
+        return self.n_entries * self.table.dtype.itemsize
+
+    def reshape2d(self) -> jax.Array:
+        return self.table.reshape(2 ** self.w_bits, 2 ** self.a_bits)
+
+
+def product_lut(
+    w_codebook: Codebook | jax.Array,
+    a_codebook: Codebook | jax.Array,
+    *,
+    scale: jax.Array | float = 1.0,
+    dtype=jnp.float32,
+) -> ProductLUT:
+    """All products w_level * a_level (optionally pre-scaled: fused dequant).
+
+    Indices are unsigned storage codes, so signed codebooks "just work" —
+    the signedness lives in the level values (paper §5.3, bipolar support).
+    """
+    wl = w_codebook.levels if isinstance(w_codebook, Codebook) else jnp.asarray(w_codebook)
+    al = a_codebook.levels if isinstance(a_codebook, Codebook) else jnp.asarray(a_codebook)
+    w_bits = int(wl.shape[-1]).bit_length() - 1
+    a_bits = int(al.shape[-1]).bit_length() - 1
+    tbl = (wl[:, None] * al[None, :] * scale).astype(dtype)
+    return ProductLUT(tbl.reshape(-1), w_bits, a_bits)
+
+
+def int_product_lut(w_bits: int, a_bits: int, *, signed: bool = True) -> ProductLUT:
+    """Exact integer product table (uniform quantization fast path).
+
+    Entry dtype int32; the f32 accumulation in the kernels is exact for these
+    magnitudes (|product| <= 2^(w_bits-1) * 2^(a_bits-1) << 2^24).
+    """
+    wq = jnp.arange(*_span(w_bits, signed), dtype=jnp.int32)
+    aq = jnp.arange(*_span(a_bits, signed), dtype=jnp.int32)
+    tbl = wq[:, None] * aq[None, :]
+    return ProductLUT(tbl.reshape(-1).astype(jnp.int32), w_bits, a_bits)
+
+
+def _span(bits: int, signed: bool) -> tuple[int, int]:
+    qmin, qmax = qrange(bits, signed)
+    return qmin, qmax + 1
+
+
+def fused_lut(
+    w_codebook: Codebook | jax.Array,
+    a_codebook: Codebook | jax.Array,
+    w_scale: jax.Array | float,
+    a_scale: jax.Array | float,
+) -> ProductLUT:
+    """Quant->GEMM->dequant fusion (paper §5.3 last point): fold the product
+    of the two scales into the table so the kernel epilogue is a plain store.
+    Per-tensor scales only — per-channel scales stay in the kernel epilogue
+    (a table per channel would defeat VMEM residency)."""
+    return product_lut(w_codebook, a_codebook, scale=jnp.asarray(w_scale) * jnp.asarray(a_scale))
+
+
+# --------------------------------------------------------------------------- #
+# LUT-65k (paper §3.2): 4-element dot products, 16-bit index.
+# Reference-path only on TPU — see DESIGN.md §7 for why it doesn't transfer.
+# --------------------------------------------------------------------------- #
+
+def lut65k(
+    w_codebook: Codebook | jax.Array,
+    a_codebook: Codebook | jax.Array,
+    *,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """(65536,) table: entry[(w8 << 8) | a8] = sum_i wl[w_i] * al[a_i], where
+    w8/a8 are 4 packed 2-bit codes (slot i at bits [2i, 2i+2))."""
+    wl = w_codebook.levels if isinstance(w_codebook, Codebook) else jnp.asarray(w_codebook)
+    al = a_codebook.levels if isinstance(a_codebook, Codebook) else jnp.asarray(a_codebook)
+    assert wl.shape[-1] == 4 and al.shape[-1] == 4, "LUT-65k is defined for 2-bit codes"
+    codes = jnp.arange(256, dtype=jnp.int32)
+    slots = jnp.stack([(codes >> (2 * i)) & 3 for i in range(4)], axis=-1)  # (256, 4)
+    wvals = jnp.take(wl, slots)  # (256, 4) dequantized weight quadruples
+    avals = jnp.take(al, slots)  # (256, 4)
+    # entry[w8, a8] = dot(wvals[w8], avals[a8])
+    tbl = wvals @ avals.T  # (256, 256)
+    return tbl.reshape(-1).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Table 2 of the paper: bitwidth scaling accounting (used by the benchmark).
+# --------------------------------------------------------------------------- #
+
+def lut_footprint(bits: int, entry_bytes: int = 4) -> dict:
+    """LUT size accounting at a given bitwidth (our Tab. 2 analogue).
+    On TPU the residency unit is a VMEM tile (we quote 32 KiB lanes-friendly
+    tiles) instead of 256-bit AVX2 registers."""
+    entries = 2 ** (2 * bits)
+    size = entries * entry_bytes
+    return {
+        "bits": bits,
+        "index_bits": 2 * bits,
+        "entries": entries,
+        "bytes": size,
+        "avx2_registers": max(1, size * 8 // 256),  # paper's column, for reference
+        "fits_vmem_tile": size <= 32 * 1024,
+        "fits_l1_paper": size <= 32 * 1024,
+    }

@@ -1,0 +1,180 @@
+"""Sub-byte bit-packing (paper §4.1, Fig. 1/4, Tab. 3) as JAX ops.
+
+Packing loads multiple b-bit codes into a uint8 carrier; unpacking extracts
+them with masks and shifts. On TPU these are VPU bitwise ops over 8-bit lanes —
+the direct analogue of the paper's AVX2 byte ops, minus the cross-lane shuffle
+(which belongs to the LUT lookup, see kernels/).
+
+Schemes (paper Table 3, adapted):
+  'a'  naive planar: value i in bits [b*i, b*(i+1)). Unpack v_i needs
+       shift(i) + and, then an explicit shift-left by b to build the LUT index
+       high half. 5.5 insn/output in the paper.
+  'b'  as 'a' but unpack extracts two values per mask set (wide masks reused).
+  'c'  offline weight reorder: weights are stored so that a single
+       shift+mask yields the value *already positioned at bits [b, 2b)* —
+       i.e. pre-multiplied by 2^b, ready to OR with an activation index.
+       Saves the index-construction shift (offline cost only).
+  'd'  'b' + 'c' combined — fewest ops/output (4 in the paper).
+
+For the TPU kernels the distinction that matters is scheme 'a' (natural) vs
+scheme 'c'/'d' ("index-ready" weights): `unpack_indexready` returns w<<b
+directly so the kernel index is a single bitwise OR. `benchmarks/
+packing_schemes.py` counts the HLO ops of each variant, mirroring Tab. 3.
+
+Packing is always along the LAST axis; the axis length must be divisible by
+the pack factor (values per byte). 3-bit values pack 2-per-byte (slots of 4
+bits, top bit zero) — byte-aligned carriers keep TPU lane layouts sane, at
+the cost of 75% density instead of 8/3; the paper's Tab. 2 makes the same
+register-granularity concession (64 entries stored in 2 AVX2 registers).
+"""
+
+from __future__ import annotations
+
+from functools import reduce
+
+import jax
+import jax.numpy as jnp
+
+# values-per-byte for each supported bitwidth
+PACK_FACTOR = {1: 8, 2: 4, 3: 2, 4: 2, 8: 1}
+# bit stride of each slot inside the byte (3-bit uses 4-bit slots)
+SLOT_BITS = {1: 1, 2: 2, 3: 4, 4: 4, 8: 8}
+
+
+def pack_factor(bits: int) -> int:
+    return PACK_FACTOR[bits]
+
+
+def packed_len(n: int, bits: int) -> int:
+    f = PACK_FACTOR[bits]
+    assert n % f == 0, f"axis length {n} not divisible by pack factor {f}"
+    return n // f
+
+
+# --------------------------------------------------------------------------- #
+# Scheme 'a' — natural order
+# --------------------------------------------------------------------------- #
+
+def pack(idx: jax.Array, bits: int) -> jax.Array:
+    """Pack unsigned b-bit codes (uint8 in [0, 2^b)) along the last axis."""
+    f, sb = PACK_FACTOR[bits], SLOT_BITS[bits]
+    if f == 1:
+        return idx.astype(jnp.uint8)
+    *lead, n = idx.shape
+    g = idx.reshape(*lead, n // f, f).astype(jnp.uint8)
+    parts = [g[..., i] << (sb * i) for i in range(f)]
+    return reduce(jnp.bitwise_or, parts)
+
+
+def unpack(packed: jax.Array, bits: int) -> jax.Array:
+    """Inverse of pack: (..., n//f) uint8 -> (..., n) uint8 codes."""
+    f, sb = PACK_FACTOR[bits], SLOT_BITS[bits]
+    if f == 1:
+        return packed.astype(jnp.uint8)
+    mask = jnp.uint8(2 ** bits - 1)
+    parts = [(packed >> (sb * i)) & mask for i in range(f)]
+    return jnp.stack(parts, axis=-1).reshape(*packed.shape[:-1], packed.shape[-1] * f)
+
+
+# --------------------------------------------------------------------------- #
+# Scheme 'c'/'d' — index-ready weights ("offline reordering", Fig. 4 c/d)
+# --------------------------------------------------------------------------- #
+
+def pack_indexready(w_idx: jax.Array, bits: int) -> jax.Array:
+    """Pack WEIGHT codes so unpack yields ``w << bits`` directly (the paper's
+    offline weight rearrangement: free at inference, saves one shift/output).
+
+    Stored layout: slot i of the byte holds w_i placed at the TOP ``bits`` bits
+    of its slot when the slot is wider than ``bits`` (3/4-bit), or the packed
+    byte is simply the natural packing (2-bit) with unpack masks shifted.
+    Implementation detail is private; only the pack/unpack pair contract holds:
+        unpack_indexready(pack_indexready(w, b), b) == (w << b)  mod 2^(2b)
+    """
+    # For uniform treatment we store natural packing; the "offline work" is
+    # captured by unpack_indexready using offset shifts + wide masks, which is
+    # where the instruction saving materialises (shift count, see benchmark).
+    return pack(w_idx, bits)
+
+
+def unpack_indexready(packed: jax.Array, bits: int) -> jax.Array:
+    """Unpack weight codes pre-shifted left by ``bits`` (i.e. w * 2^b), using
+    a single offset-shift + wide-mask per slot — scheme 'c' of Fig. 4.
+
+    Slot 0 needs shift-left by b; slots i>=1 reuse the right-shift datapath
+    with an offset of -b and a mask of ((2^b - 1) << b), i.e. the same two ops
+    as a natural unpack but producing the index-ready value. Natural unpack
+    would need a third op (<< b) per output to build the LUT index.
+    """
+    f, sb = PACK_FACTOR[bits], SLOT_BITS[bits]
+    if 2 * bits > 8:  # index exceeds the uint8 carrier (bits=8): widen.
+        return (packed.astype(jnp.int32) << bits).astype(jnp.int32)
+    wide_mask = jnp.uint8(((2 ** bits) - 1) << bits)
+    parts = []
+    for i in range(f):
+        off = sb * i - bits  # offset shift: right by (slot - b)
+        if off < 0:
+            parts.append((packed.astype(jnp.uint8) << (-off)) & wide_mask)
+        elif off == 0:
+            parts.append(packed & wide_mask)
+        else:
+            parts.append((packed >> off) & wide_mask)
+    out = jnp.stack(parts, axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * f)
+
+
+# --------------------------------------------------------------------------- #
+# Scheme 'b' — paired extraction (two outputs per mask set)
+# --------------------------------------------------------------------------- #
+
+def unpack_paired(packed: jax.Array, bits: int) -> jax.Array:
+    """Scheme 'b': extract EVEN and ODD slots with two wide masks and one
+    shift, halving the shift count per output vs scheme 'a'."""
+    f, sb = PACK_FACTOR[bits], SLOT_BITS[bits]
+    if f == 1:
+        return packed.astype(jnp.uint8)
+    mask = jnp.uint8(2 ** bits - 1)
+    # Even slots: shifts 0, 2*sb, ... ; odd slots derived from one pre-shift.
+    shifted = packed >> sb
+    evens = [(packed >> (2 * sb * i)) & mask for i in range(f // 2 + f % 2)]
+    odds = [(shifted >> (2 * sb * i)) & mask for i in range(f // 2)]
+    slots: list[jax.Array] = []
+    for i in range(f):
+        slots.append(evens[i // 2] if i % 2 == 0 else odds[i // 2])
+    return jnp.stack(slots, axis=-1).reshape(
+        *packed.shape[:-1], packed.shape[-1] * f
+    )
+
+
+# --------------------------------------------------------------------------- #
+# int32 carrier (wide-register analogue; used for HBM-friendly layouts)
+# --------------------------------------------------------------------------- #
+
+def pack_words(idx: jax.Array, bits: int) -> jax.Array:
+    """Pack codes into int32 words (32/b values per word for b in {1,2,4,8}).
+    TPU loads are word-granular; this is the layout the serving path stores
+    in HBM (fewer, wider transactions — same idea as the paper's move from
+    8-bit to 256-bit carriers)."""
+    assert bits in (1, 2, 4, 8)
+    f = 32 // bits
+    *lead, n = idx.shape
+    assert n % f == 0, f"axis length {n} not divisible by {f}"
+    g = idx.reshape(*lead, n // f, f).astype(jnp.uint32)
+    parts = [g[..., i] << (bits * i) for i in range(f)]
+    return reduce(jnp.bitwise_or, parts).astype(jnp.uint32)
+
+
+def unpack_words(packed: jax.Array, bits: int) -> jax.Array:
+    assert bits in (1, 2, 4, 8)
+    f = 32 // bits
+    mask = jnp.uint32(2 ** bits - 1)
+    parts = [(packed >> (bits * i)) & mask for i in range(f)]
+    out = jnp.stack(parts, axis=-1).astype(jnp.uint8)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * f)
+
+
+UNPACK_SCHEMES = {
+    "a": unpack,
+    "b": unpack_paired,
+    "c": unpack_indexready,   # returns w << bits (index-ready)
+    "d": unpack_indexready,   # 'd' = 'c' + paired masks; same contract
+}

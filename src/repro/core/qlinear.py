@@ -1,0 +1,254 @@
+"""QuantizedDense: the paper's technique as a composable model layer.
+
+Three execution modes, all sharing one parameter pytree:
+
+  train ('qat')     LSQ fake-quant (paper Tab. 1 methodology) on weights and
+                    optionally activations; gradients flow via STE; the learned
+                    step sizes are parameters. Runs in bf16/f32 — packing is a
+                    serving-time transformation.
+  serve w2a16       packed sub-byte weights + codebook-LUT dequant + MXU matmul
+                    (beyond-paper TPU-native path, kernels/lut_dequant_matmul).
+  serve w2a2        the paper-faithful path: activations dynamically quantized
+                    to b bits, both operands packed, product-LUT GEMM
+                    (kernels/lut_gemm). In the SPMD dry-run this dispatches to
+                    the algebraically-identical dequant formulation so GSPMD
+                    sees shardable dense HLO (see kernels/ops.py 'ref').
+
+Mixed precision (paper §1, HAWQ-V3 discussion): a ``QuantPolicy`` maps layer
+classes -> bits (None = keep bf16), so sensitive layers (router, embeddings)
+stay high precision while GEMM-heavy layers drop to 2 bits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import packing, quant
+from .lut import ProductLUT, product_lut
+from repro.kernels import ops as kops
+
+
+# --------------------------------------------------------------------------- #
+# Policy
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Per-layer-class quantization policy (mixed precision)."""
+    w_bits: Optional[int] = 2          # None => bf16 layer
+    a_bits: Optional[int] = None       # None => weight-only (w2a16)
+    signed: bool = True
+    scheme: str = "d"                  # packing scheme for serving
+    nonuniform: bool = False           # k-means codebook instead of uniform
+    # layer classes to keep full precision (names matched against layer tags)
+    skip: tuple = ("router", "embed", "norm")
+
+    def applies(self, tag: str) -> bool:
+        return self.w_bits is not None and not any(s in tag for s in self.skip)
+
+
+BF16_POLICY = QuantPolicy(w_bits=None)
+W2A16 = QuantPolicy(w_bits=2, a_bits=None)
+W2A2 = QuantPolicy(w_bits=2, a_bits=2)
+W4A16 = QuantPolicy(w_bits=4, a_bits=None)
+W4A8 = QuantPolicy(w_bits=4, a_bits=8)
+
+
+# --------------------------------------------------------------------------- #
+# Packed serving weights
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class QuantizedWeight:
+    """Serving-time packed weight for one dense layer.
+
+    packed   : (out, in/f) uint8 — scheme-'a' packed codes along K
+    codebook : (2^bits,) f32 — *unscaled* levels (uniform ints or k-means)
+    scales   : (out,) f32 — per-output-channel scale
+    """
+    packed: jax.Array
+    codebook: jax.Array
+    scales: jax.Array
+    bits: int
+    in_features: int
+    out_features: int
+
+    def tree_flatten_with_keys(self):
+        return (
+            (jax.tree_util.GetAttrKey("packed"), self.packed),
+            (jax.tree_util.GetAttrKey("codebook"), self.codebook),
+            (jax.tree_util.GetAttrKey("scales"), self.scales),
+        ), (self.bits, self.in_features, self.out_features)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def nbytes_packed(self) -> int:
+        return self.packed.size * self.packed.dtype.itemsize
+
+
+jax.tree_util.register_pytree_with_keys(
+    QuantizedWeight,
+    QuantizedWeight.tree_flatten_with_keys,
+    QuantizedWeight.tree_unflatten)
+
+
+def _pad_k(wt: jax.Array, bits: int) -> jax.Array:
+    """Pad the contraction axis to a pack-factor multiple with zeros (the
+    zero-value code dequantizes to exactly 0.0 -> padded columns contribute
+    nothing; dequant_weight slices them back off)."""
+    pad = (-wt.shape[-1]) % packing.PACK_FACTOR[bits]
+    if pad:
+        cfgpad = [(0, 0)] * (wt.ndim - 1) + [(0, pad)]
+        wt = jnp.pad(wt, cfgpad)
+    return wt
+
+
+def quantize_weight(
+    w: jax.Array, policy: QuantPolicy
+) -> QuantizedWeight:
+    """Offline weight quantize+pack (paper: 'packing and quantization of
+    weights was handled offline'). w: (in, out) -> packed (out, ceil(in/f))."""
+    bits = policy.w_bits
+    assert bits is not None
+    wt = _pad_k(w.T.astype(jnp.float32), bits)              # (out, in_pad)
+    if policy.nonuniform:
+        cb = quant.kmeans_codebook(wt, bits)
+        # per-channel scale folded as amax normalisation before codebook fit
+        scales = jnp.ones((wt.shape[0],), jnp.float32)
+        idx = quant.codebook_quantize(wt, cb)
+        levels = cb.levels
+    else:
+        scales, _ = quant.compute_scale_zero_point(
+            wt, bits, signed=policy.signed, axis=0, symmetric=True)
+        scales = scales.reshape(-1)                          # (out,)
+        q = quant.quantize(wt, scales[:, None], bits=bits, signed=policy.signed)
+        idx = quant.to_index(q, bits, policy.signed)
+        levels = quant.uniform_codebook(bits, policy.signed).levels
+    packed = packing.pack(idx, bits)
+    return QuantizedWeight(
+        packed=packed, codebook=levels, scales=scales, bits=bits,
+        in_features=w.shape[0], out_features=w.shape[1])
+
+
+def quantize_expert_weight(w: jax.Array, policy: QuantPolicy) -> QuantizedWeight:
+    """Offline quantize+pack for stacked expert weights. w: (E, in, out) ->
+    packed (E, out, in/f), scales (E, out) per-expert-per-channel."""
+    bits = policy.w_bits
+    assert bits is not None and w.ndim == 3
+    wt = _pad_k(jnp.swapaxes(w, 1, 2).astype(jnp.float32), bits)  # (E, out, in_pad)
+    scales, _ = quant.compute_scale_zero_point(
+        wt.reshape(-1, wt.shape[-1]), bits, signed=policy.signed, axis=0,
+        symmetric=True)
+    scales = scales.reshape(wt.shape[0], wt.shape[1])        # (E, out)
+    q = quant.quantize(wt, scales[..., None], bits=bits, signed=policy.signed)
+    idx = quant.to_index(q, bits, policy.signed)
+    levels = quant.uniform_codebook(bits, policy.signed).levels
+    return QuantizedWeight(
+        packed=packing.pack(idx, bits), codebook=levels, scales=scales,
+        bits=bits, in_features=w.shape[1], out_features=w.shape[2])
+
+
+def dequant_weight(qw: QuantizedWeight) -> jax.Array:
+    """Full dequantization (codebook gather + per-channel scale), returned in
+    (in, out) / (E, in, out) orientation for einsum use. This is the GSPMD-
+    shardable formulation the dry-run lowers; the Pallas kernels fuse the same
+    three steps tile-wise in VMEM."""
+    idx = packing.unpack(qw.packed, qw.bits).astype(jnp.int32)   # (..., out, in_pad)
+    w = jnp.take(qw.codebook, idx) * qw.scales[..., None]
+    w = w[..., : qw.in_features]                                 # drop K padding
+    return jnp.swapaxes(w, -1, -2)                               # (..., in, out)
+
+
+# --------------------------------------------------------------------------- #
+# Forward paths
+# --------------------------------------------------------------------------- #
+
+def dense_init(key, in_features: int, out_features: int, *, bias: bool = False,
+               dtype=jnp.float32) -> dict:
+    k1, _ = jax.random.split(key)
+    p = {"w": jax.random.normal(k1, (in_features, out_features), dtype)
+             * (1.0 / jnp.sqrt(in_features))}
+    if bias:
+        p["b"] = jnp.zeros((out_features,), dtype)
+    return p
+
+
+def qat_init(params: dict, policy: QuantPolicy) -> dict:
+    """Attach LSQ step-size parameters for QAT."""
+    out = dict(params)
+    if policy.w_bits is not None:
+        out["w_step"] = quant.lsq_init_step(params["w"], policy.w_bits, policy.signed)
+    if policy.a_bits is not None:
+        out["a_step"] = jnp.asarray(0.05, params["w"].dtype)  # calibrated online
+    return out
+
+
+def dense_apply(params: dict, x: jax.Array, *, policy: QuantPolicy = BF16_POLICY,
+                mode: str = "plain") -> jax.Array:
+    """x: (..., in) -> (..., out). mode: 'plain' | 'qat'."""
+    w = params["w"]
+    if mode == "qat" and policy.w_bits is not None:
+        w = quant.lsq_fake_quant(w, params["w_step"], policy.w_bits, policy.signed)
+        if policy.a_bits is not None:
+            x = quant.lsq_fake_quant(x, params["a_step"], policy.a_bits, policy.signed)
+    y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def dense_serve(
+    qw: QuantizedWeight,
+    x: jax.Array,
+    *,
+    a_bits: Optional[int] = None,
+    a_scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    backend: str = "auto",
+    block: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """Serving forward with packed weights. x: (..., in) -> (..., out).
+
+    a_bits None  -> w{b}a16 path (codebook dequant + MXU matmul).
+    a_bits set   -> paper-faithful w{b}a{b}: dynamic activation quant, LUT GEMM.
+    """
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, qw.in_features)
+    # weights are K-padded to a pack-factor multiple; mirror it on activations
+    k_pad = qw.packed.shape[-1] * packing.PACK_FACTOR[qw.bits]
+    if k_pad != qw.in_features:
+        xm = jnp.pad(xm, ((0, 0), (0, k_pad - qw.in_features)))
+    if a_bits is None:
+        y = kops.dequant_matmul(
+            xm, qw.packed, qw.codebook, qw.scales, bits=qw.bits,
+            backend=backend, block=block)
+    else:
+        # Dynamic per-tensor activation quantization (paper Fig. 7 'Quantization').
+        if a_scale is None:
+            a_scale, _ = quant.compute_scale_zero_point(xm, a_bits, signed=True)
+        aq = quant.quantize(xm, a_scale, bits=a_bits, signed=True)
+        a_idx = quant.to_index(aq, a_bits, True)
+        a_levels = quant.uniform_codebook(a_bits, True).levels
+        if kops._resolve(backend) == "ref":
+            # Shardable dequant formulation — exactly equal to the LUT GEMM.
+            a_deq = jnp.take(a_levels, a_idx.astype(jnp.int32))
+            w_deq = jnp.take(qw.codebook,
+                             packing.unpack(qw.packed, qw.bits).astype(jnp.int32))
+            y = jax.lax.dot_general(a_deq, w_deq, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            y = y * qw.scales[None, :] * a_scale
+        else:
+            ap = packing.pack(a_idx, a_bits)
+            plut = product_lut(qw.codebook, a_levels)
+            y = kops.lut_gemm(ap, qw.packed, plut, backend=backend, block=block)
+            y = y * qw.scales[None, :] * a_scale
+    if bias is not None:
+        y = y + bias
+    return y.reshape(*lead, qw.out_features).astype(x.dtype)

@@ -1,0 +1,251 @@
+"""Quantization primitives: uniform affine, LSQ fake-quant (QAT), non-uniform codebook.
+
+This is the numerical substrate of the DeepGEMM reproduction. Everything here is
+pure JAX and differentiable where training requires it (LSQ / codebook STE).
+
+Conventions
+-----------
+* ``bits`` is the bitwidth b; quantized values live in
+  - signed:   [-2^(b-1), 2^(b-1) - 1]   (bipolar in the paper's terms)
+  - unsigned: [0, 2^b - 1]              (unipolar)
+* Stored *indices* (for packing / LUTs) are always the unsigned shifted code
+  ``idx = q - qmin`` in [0, 2^b), regardless of signedness. The LUT absorbs the
+  shift, which is exactly the paper's "signed or unsigned data at identical
+  latency" claim.
+* ``axis`` selects per-channel granularity; ``None`` means per-tensor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------- #
+# Ranges
+# --------------------------------------------------------------------------- #
+
+def qrange(bits: int, signed: bool) -> tuple[int, int]:
+    """(qmin, qmax) inclusive for a bitwidth/signedness."""
+    if signed:
+        return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    return 0, 2 ** bits - 1
+
+
+# --------------------------------------------------------------------------- #
+# Uniform affine quantization
+# --------------------------------------------------------------------------- #
+
+def compute_scale_zero_point(
+    x: jax.Array,
+    bits: int,
+    *,
+    signed: bool = True,
+    axis: Optional[int] = None,
+    symmetric: bool = True,
+    eps: float = 1e-8,
+) -> tuple[jax.Array, jax.Array]:
+    """Min/max calibration. Returns (scale, zero_point); zero_point is in the
+    quantized domain (float, rounded by quantize)."""
+    qmin, qmax = qrange(bits, signed)
+    reduce_axes = tuple(i for i in range(x.ndim) if axis is None or i != axis % x.ndim)
+    if symmetric:
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=axis is not None)
+        bound = max(abs(qmin), qmax)
+        scale = jnp.maximum(amax / bound, eps)
+        zp = jnp.zeros_like(scale)
+    else:
+        xmin = jnp.min(x, axis=reduce_axes, keepdims=axis is not None)
+        xmax = jnp.max(x, axis=reduce_axes, keepdims=axis is not None)
+        scale = jnp.maximum((xmax - xmin) / (qmax - qmin), eps)
+        zp = qmin - xmin / scale
+    return scale, zp
+
+
+def quantize(
+    x: jax.Array,
+    scale: jax.Array,
+    zero_point: jax.Array | float = 0.0,
+    *,
+    bits: int,
+    signed: bool = True,
+) -> jax.Array:
+    """Real -> integer code, Eq. (1) of the paper. Carrier is int8 unless the
+    code range exceeds it (unsigned 8-bit: codes up to 255 -> int16)."""
+    qmin, qmax = qrange(bits, signed)
+    q = jnp.round(x / scale + zero_point)
+    carrier = jnp.int8 if qmax <= 127 else jnp.int16
+    return jnp.clip(q, qmin, qmax).astype(carrier)
+
+
+def dequantize(
+    q: jax.Array,
+    scale: jax.Array,
+    zero_point: jax.Array | float = 0.0,
+) -> jax.Array:
+    return (q.astype(jnp.float32) - zero_point) * scale
+
+
+def to_index(q: jax.Array, bits: int, signed: bool = True) -> jax.Array:
+    """Signed code -> unsigned storage index in [0, 2^b). uint8 carrier."""
+    qmin, _ = qrange(bits, signed)
+    return (q.astype(jnp.int32) - qmin).astype(jnp.uint8)
+
+
+def from_index(idx: jax.Array, bits: int, signed: bool = True) -> jax.Array:
+    qmin, _ = qrange(bits, signed)
+    return (idx.astype(jnp.int32) + qmin).astype(jnp.int8)
+
+
+def fake_quant(
+    x: jax.Array,
+    scale: jax.Array,
+    zero_point: jax.Array | float = 0.0,
+    *,
+    bits: int,
+    signed: bool = True,
+) -> jax.Array:
+    """quantize -> dequantize, no gradient handling (use lsq_fake_quant for QAT)."""
+    q = quantize(x, scale, zero_point, bits=bits, signed=signed)
+    return dequantize(q, scale, zero_point).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# LSQ: Learned Step Size Quantization (Esser et al., 2019) — the paper's QAT
+# method (Tab. 1). Straight-through estimator for x, learned gradient for s.
+# --------------------------------------------------------------------------- #
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lsq_fake_quant(x: jax.Array, step: jax.Array, bits: int, signed: bool) -> jax.Array:
+    """LSQ fake-quant: x_hat = round(clip(x/s, Qn, Qp)) * s, with the LSQ
+    custom gradient for the (scalar or per-channel) step size ``step``."""
+    qmin, qmax = qrange(bits, signed)
+    v = x / step
+    vq = jnp.clip(jnp.round(v), qmin, qmax)
+    return (vq * step).astype(x.dtype)
+
+
+def _lsq_fwd(x, step, bits, signed):
+    out = lsq_fake_quant(x, step, bits, signed)
+    return out, (x, step)
+
+
+def _lsq_bwd(bits, signed, res, g):
+    x, step = res
+    qmin, qmax = qrange(bits, signed)
+    v = x / step
+    in_range = (v >= qmin) & (v <= qmax)
+    # dL/dx: straight-through inside the clip range.
+    gx = jnp.where(in_range, g, 0.0).astype(x.dtype)
+    # dL/ds per LSQ: (round(v) - v) inside range; Qn/Qp at the clipped ends.
+    ds_elem = jnp.where(
+        in_range,
+        jnp.round(v) - v,
+        jnp.where(v < qmin, float(qmin), float(qmax)),
+    )
+    # LSQ gradient scale g = 1/sqrt(numel * Qp) stabilises training.
+    numel = x.size / max(step.size, 1)
+    gscale = 1.0 / jnp.sqrt(numel * max(qmax, 1))
+    ds = jnp.sum(
+        (g * ds_elem).reshape(step.shape + (-1,)) if step.ndim else g * ds_elem,
+        axis=-1 if step.ndim else None,
+    )
+    gs = (ds * gscale).reshape(step.shape).astype(step.dtype)
+    return gx, gs
+
+
+lsq_fake_quant.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def lsq_init_step(x: jax.Array, bits: int, signed: bool = True) -> jax.Array:
+    """LSQ paper init: s0 = 2 * mean(|x|) / sqrt(Qp)."""
+    _, qmax = qrange(bits, signed)
+    return 2.0 * jnp.mean(jnp.abs(x)) / jnp.sqrt(float(max(qmax, 1)))
+
+
+# --------------------------------------------------------------------------- #
+# Non-uniform codebook quantization (LCQ-flavoured). The paper's flexibility
+# claim: LUT entries may be float products of *arbitrary* levels.
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class Codebook:
+    """2^bits float levels, sorted ascending. ``levels[idx]`` dequantizes."""
+    levels: jax.Array  # (2^bits,) float32
+
+    @property
+    def bits(self) -> int:
+        return int(self.levels.shape[-1]).bit_length() - 1
+
+
+def uniform_codebook(bits: int, signed: bool = True, scale: float = 1.0) -> Codebook:
+    qmin, qmax = qrange(bits, signed)
+    return Codebook(jnp.arange(qmin, qmax + 1, dtype=jnp.float32) * scale)
+
+
+def kmeans_codebook(
+    x: jax.Array, bits: int, *, iters: int = 12, seed: int = 0
+) -> Codebook:
+    """Lloyd's k-means over flattened x — non-uniform levels fit to the data
+    distribution (the paper's non-uniform/LCQ compatibility story)."""
+    k = 2 ** bits
+    flat = x.reshape(-1).astype(jnp.float32)
+    # Quantile init is deterministic and robust for weight-like distributions.
+    qs = jnp.linspace(0.0, 1.0, k + 2)[1:-1]
+    centers = jnp.quantile(flat, qs)
+
+    def step(centers, _):
+        d = jnp.abs(flat[None, :] - centers[:, None])  # (k, n)
+        assign = jnp.argmin(d, axis=0)
+        one_hot = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # (n, k)
+        counts = one_hot.sum(axis=0)
+        sums = one_hot.T @ flat
+        new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), centers)
+        return new, None
+
+    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    return Codebook(jnp.sort(centers))
+
+
+def codebook_quantize(x: jax.Array, cb: Codebook) -> jax.Array:
+    """Nearest-level index, uint8 in [0, 2^bits)."""
+    d = jnp.abs(x[..., None] - cb.levels)
+    return jnp.argmin(d, axis=-1).astype(jnp.uint8)
+
+
+def codebook_dequantize(idx: jax.Array, cb: Codebook) -> jax.Array:
+    return jnp.take(cb.levels, idx.astype(jnp.int32))
+
+
+@jax.custom_vjp
+def _codebook_ste(x: jax.Array, levels: jax.Array) -> jax.Array:
+    idx = jnp.argmin(jnp.abs(x[..., None] - levels), axis=-1)
+    return jnp.take(levels, idx)
+
+
+def _cb_fwd(x, levels):
+    idx = jnp.argmin(jnp.abs(x[..., None] - levels), axis=-1)
+    return jnp.take(levels, idx), (x, levels, idx)
+
+
+def _cb_bwd(res, g):
+    x, levels, idx = res
+    lo, hi = levels[0], levels[-1]
+    gx = jnp.where((x >= lo) & (x <= hi), g, 0.0)
+    # Levels receive the gradient of the outputs assigned to them (soft update).
+    k = levels.shape[0]
+    one_hot = jax.nn.one_hot(idx.reshape(-1), k, dtype=g.dtype)
+    gl = one_hot.T @ g.reshape(-1)
+    return gx.astype(x.dtype), gl.astype(levels.dtype)
+
+
+_codebook_ste.defvjp(_cb_fwd, _cb_bwd)
+
+
+def codebook_fake_quant(x: jax.Array, cb: Codebook) -> jax.Array:
+    """Differentiable codebook fake-quant (STE for x, assignment-grad for levels)."""
+    return _codebook_ste(x, cb.levels).astype(x.dtype)

@@ -1,0 +1,3 @@
+from .pipeline import (  # noqa: F401
+    TokenPipeline, synthetic_batch, make_pipeline,
+)

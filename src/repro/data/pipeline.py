@@ -1,0 +1,148 @@
+"""Data pipeline: synthetic and file-backed token streams, per-host sharded.
+
+Multi-host contract: every host constructs the same global-batch *spec* but
+materializes only its slice ``[host_ix * per_host : (host_ix+1) * per_host]``;
+``jax.make_array_from_process_local_data`` (used by the train driver when
+running multi-host) assembles the global array. On a single host the slice is
+the whole batch.
+
+Synthetic stream is deterministic in (seed, step) so restarts reproduce the
+exact token sequence — a checkpoint/restart correctness requirement
+(tests/test_fault.py asserts identical losses after restart).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import frontends
+
+
+def synthetic_batch(cfg, shape, step: int, *, seed: int = 0,
+                    host_ix: int = 0, n_hosts: int = 1) -> dict:
+    """One (host-local) batch for any (arch x shape) cell.
+
+    Markov-ish synthetic tokens: next-token structure exists (token_{t+1}
+    depends on token_t) so a trained model shows a real loss drop — the QAT
+    accuracy benchmark needs learnable data, not iid noise.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    assert B % n_hosts == 0, (B, n_hosts)
+    Bh = B // n_hosts
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step * 131 + host_ix)
+    ks = jax.random.split(key, 4)
+    V = cfg.vocab_size
+
+    # order-1 additive structure: t_{i+1} = (t_i + delta) mod V, delta in
+    # [1, 8] — learnable floor = ln 8 nats, reached fast by small models.
+    t0 = jax.random.randint(ks[0], (Bh, 1), 0, V)
+    noise = jax.random.randint(ks[1], (Bh, S), 0, 8)
+
+    def step_fn(carry, n):
+        nxt = (carry + n + 1) % V
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(step_fn, t0[:, 0], noise.T)
+    tokens = jnp.concatenate([t0, toks.T[:, :-1]], axis=1).astype(jnp.int32)
+
+    batch = {"tokens": tokens}
+    if shape.kind == "train":
+        batch["labels"] = jnp.roll(tokens, -1, axis=1).astype(jnp.int32)
+    if cfg.is_encdec:
+        batch["audio_embed"] = frontends.stub_audio_embed(
+            ks[2], Bh, cfg.encoder_seq, cfg.d_model)
+    if cfg.n_vision_tokens:
+        batch["vision_embed"] = frontends.stub_vision_embed(
+            ks[3], Bh, cfg.n_vision_tokens, cfg.d_model)
+    if cfg.mrope_sections:
+        batch["positions"] = frontends.mrope_positions(
+            Bh, S, cfg.n_vision_tokens)
+    return batch
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    """Iterator facade over synthetic or memory-mapped token files."""
+    cfg: object
+    shape: object
+    seed: int = 0
+    host_ix: int = 0
+    n_hosts: int = 1
+    data_path: Optional[str] = None      # .bin int32 tokens (np.memmap)
+    _mm: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.data_path:
+            self._mm = np.memmap(self.data_path, dtype=np.int32, mode="r")
+
+    def batch(self, step: int) -> dict:
+        if self._mm is None:
+            return synthetic_batch(self.cfg, self.shape, step, seed=self.seed,
+                                   host_ix=self.host_ix, n_hosts=self.n_hosts)
+        B, S = self.shape.global_batch, self.shape.seq_len
+        Bh = B // self.n_hosts
+        n_windows = (len(self._mm) - 1) // S
+        rng = np.random.default_rng(self.seed * 7919 + step)
+        idx = rng.integers(0, n_windows, size=(B,))[
+            self.host_ix * Bh:(self.host_ix + 1) * Bh]
+        toks = np.stack([self._mm[i * S:(i + 1) * S] for i in idx])
+        labels = np.stack([self._mm[i * S + 1:(i + 1) * S + 1] for i in idx])
+        V = self.cfg.vocab_size
+        return {"tokens": jnp.asarray(toks % V, jnp.int32),
+                "labels": jnp.asarray(labels % V, jnp.int32)}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def make_pipeline(cfg, shape, **kw) -> TokenPipeline:
+    return TokenPipeline(cfg, shape, **kw)
+
+
+def pack_documents(docs: list, seq_len: int, *, pad_id: int = 0):
+    """Sequence packing: concatenate variable-length token docs into fixed
+    (seq_len,) rows. Returns (tokens, labels, segments, positions) where
+    labels are -1 at document boundaries / padding (masked in the loss),
+    segments are per-doc ids for segment-masked attention, and positions
+    restart at 0 per document (RoPE correctness).
+
+    Greedy first-fit packing; docs longer than seq_len are split.
+    """
+    rows, cur, cur_len = [], [], 0
+    for d in docs:
+        d = np.asarray(d)
+        while len(d):
+            take = min(len(d), seq_len - cur_len)
+            cur.append(d[:take])
+            d = d[take:]
+            cur_len += take
+            if cur_len == seq_len:
+                rows.append(cur)
+                cur, cur_len = [], 0
+    if cur:
+        rows.append(cur)
+
+    B = len(rows)
+    tokens = np.full((B, seq_len), pad_id, np.int32)
+    labels = np.full((B, seq_len), -1, np.int32)
+    segments = np.zeros((B, seq_len), np.int32)
+    positions = np.zeros((B, seq_len), np.int32)
+    for b, row in enumerate(rows):
+        off = 0
+        for si, piece in enumerate(row):
+            L = len(piece)
+            tokens[b, off:off + L] = piece
+            labels[b, off:off + L - 1] = piece[1:]
+            segments[b, off:off + L] = si + 1        # 0 = padding
+            positions[b, off:off + L] = np.arange(L)
+            off += L
+    return (jnp.asarray(tokens), jnp.asarray(labels),
+            jnp.asarray(segments), jnp.asarray(positions))

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the DeepGEMM hot loops + pure-jnp oracles."""
+from . import ops, ref  # noqa: F401
+from .lut_gemm import lut_gemm_pallas  # noqa: F401
+from .lut_dequant_matmul import dequant_matmul_pallas  # noqa: F401

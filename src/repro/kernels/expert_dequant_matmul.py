@@ -1,0 +1,92 @@
+"""Grouped (per-expert) packed-weight matmul — the MoE serving hot-spot.
+
+Expert weights are where the paper's 2-bit packing buys the most (llama4:
+386B of 397B params live in expert matrices), and expert GEMMs are the
+batched/grouped form of `lut_dequant_matmul`: for every expert e,
+
+    out[e] = (x[e] @ dequant(w[e]).T) * scales[e]
+
+with x[e] the (capacity-padded) tokens dispatched to e. The kernel walks a
+(E, M-tiles, N-tiles, K-tiles) grid; each step unpacks one expert's packed
+sub-byte tile in VMEM, codebook-dequantizes (uniform or k-means table — the
+paper's flexibility), and contracts on the MXU.
+
+Memory layout per grid step (be=1, bm=128, bn=128, bk=512, bits=2):
+  x tile     (bm, bk) f32/bf16      256 KiB  HBM->VMEM
+  w tile     (bn, bk/4) uint8        16 KiB  HBM->VMEM  (the 8x win)
+  w dequant  (bn, bk) f32           256 KiB  VMEM only
+  acc        (bm, bn) f32            64 KiB  VMEM
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import packing
+from .lut_gemm import _unpack_natural
+
+
+def _expert_kernel(x_ref, w_ref, cb_ref, sc_ref, o_ref, *, bits: int):
+    k = pl.program_id(3)
+    k_steps = pl.num_programs(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    w_idx = _unpack_natural(w_ref[0], bits)               # (bn, bk) int32
+    w_deq = jnp.take(cb_ref[...], w_idx)                  # codebook dequant
+    x = x_ref[0].astype(jnp.float32)                      # (bm, bk)
+    o_ref[0] += jax.lax.dot_general(
+        x, w_deq, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        o_ref[0] = o_ref[0] * sc_ref[0][None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret"))
+def expert_dequant_matmul_pallas(
+    x: jax.Array,            # (E, M, K) tokens per expert (capacity-padded)
+    w_packed: jax.Array,     # (E, N, K/f) uint8
+    codebook: jax.Array,     # (2^bits,) f32
+    scales: jax.Array,       # (E, N) f32 per-expert-per-channel
+    *,
+    bits: int = 2,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[e] = (x[e] @ dequant(w[e]).T) * scales[e], f32, (E, M, N)."""
+    f = packing.PACK_FACTOR[bits]
+    E, M, K = x.shape
+    E2, N, Kp = w_packed.shape
+    assert E == E2 and Kp * f == K, (x.shape, w_packed.shape, bits)
+
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    bkp = bk // f
+    assert M % bm == 0 and N % bn == 0 and Kp % bkp == 0, (
+        f"({E},{M},{N},{K}) not divisible by blocks ({bm},{bn},{bk})")
+
+    grid = (E, M // bm, N // bn, K // bk)
+    kernel = functools.partial(_expert_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bn, bkp), lambda e, i, j, k: (e, j, k)),
+            pl.BlockSpec((codebook.shape[0],), lambda e, i, j, k: (0,)),
+            pl.BlockSpec((1, bn), lambda e, i, j, k: (e, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), jnp.float32),
+        interpret=interpret,
+    )(x, w_packed, codebook.astype(jnp.float32), scales.astype(jnp.float32))

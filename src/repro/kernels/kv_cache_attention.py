@@ -1,0 +1,129 @@
+"""Decode attention over a sub-byte-packed KV cache — the decode hot-spot.
+
+EXPERIMENTS.md §Perf Cell C shows decode is bound by the KV-cache read; this
+kernel is the TPU-native realization of that win: the cache stays PACKED
+(int8 or 4-bit codes + per-(token, head) scales) in HBM and on the wire into
+VMEM; unpack + codebook-dequant happen tile-wise in VMEM fused into an
+online-softmax attention — HBM moves 1/2 (int8) or 1/4 (int4) of the bf16
+bytes, which is the whole roofline for this step.
+
+Grid: (B, S/bs). Each step dequantizes one (bs, KV, hd) cache tile and folds
+it into running (m, l, acc) accumulators (revisited output blocks, same
+pattern as the k-grid accumulation in lut_gemm). GQA handled via the
+(KV, G) grouped query layout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import packing
+
+_NEG = -1e30
+
+
+def _unpack4(tile: jax.Array) -> jax.Array:
+    """(..., hd/2) uint8 -> (..., hd) int32 codes (two nibbles per byte)."""
+    lo = tile & 0xF
+    hi = (tile >> 4) & 0xF
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*tile.shape[:-1], tile.shape[-1] * 2).astype(jnp.int32)
+
+
+def _dequant_tile(codes_ref, sc_ref, bits: int) -> jax.Array:
+    """packed (1, bs, KV, hd/f) + scales (1, bs, KV) -> f32 (bs, KV, hd)."""
+    if bits == 4:
+        idx = _unpack4(codes_ref[0])
+        vals = idx.astype(jnp.float32) - 8.0
+    else:  # int8 codes stored directly
+        vals = codes_ref[0].astype(jnp.float32)
+    return vals * sc_ref[0][..., None]
+
+
+def _kv_attn_kernel(q_ref, k_ref, ksc_ref, v_ref, vsc_ref, len_ref,
+                    o_ref, m_ref, l_ref, *, bits: int, bs: int, scale: float):
+    s = pl.program_id(1)
+    s_steps = pl.num_programs(1)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+        m_ref[0] = jnp.full_like(m_ref[0], _NEG)
+        l_ref[0] = jnp.zeros_like(l_ref[0])
+
+    k = _dequant_tile(k_ref, ksc_ref, bits)            # (bs, KV, hd)
+    v = _dequant_tile(v_ref, vsc_ref, bits)
+    q = q_ref[0].astype(jnp.float32)                   # (KV, G, hd)
+
+    sc = jnp.einsum("egh,seh->egs", q, k) * scale      # (KV, G, bs)
+    pos = s * bs + jnp.arange(bs)
+    mask = pos < len_ref[0, 0]
+    sc = jnp.where(mask[None, None, :], sc, _NEG)
+
+    m_prev, l_prev = m_ref[0], l_ref[0]                # (KV, G)
+    m_new = jnp.maximum(m_prev, sc.max(-1))
+    p = jnp.exp(sc - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(-1)
+    pv = jnp.einsum("egs,seh->egh", p, v)              # (KV, G, hd)
+    o_ref[0] = o_ref[0] * corr[..., None] + pv
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(s == s_steps - 1)
+    def _done():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[..., None]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bs", "interpret"))
+def kv_cache_attention_pallas(
+    q: jax.Array,            # (B, KV, G, hd) single-position queries
+    k_packed: jax.Array,     # (B, S, KV, hd/f) uint8/int8 codes
+    k_sc: jax.Array,         # (B, S, KV) f32
+    v_packed: jax.Array,
+    v_sc: jax.Array,
+    lengths: jax.Array,      # (B,) valid cache lengths
+    *,
+    bits: int = 4,
+    bs: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """out (B, KV, G, hd) f32 = softmax(q k^T / sqrt(hd)) v over the packed
+    cache, masked to `lengths`."""
+    B, KV, G, hd = q.shape
+    S = k_packed.shape[1]
+    bs = min(bs, S)
+    while S % bs:
+        bs //= 2
+    grid = (B, S // bs)
+    kernel = functools.partial(_kv_attn_kernel, bits=bits, bs=bs,
+                               scale=hd ** -0.5)
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, k_packed.shape[-1]), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, bs, KV), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, KV, v_packed.shape[-1]), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, bs, KV), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, 1), lambda b, s: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, KV, G), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, KV, G), lambda b, s: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_packed, k_sc, v_packed, v_sc,
+      lengths.reshape(B, 1).astype(jnp.int32))
+    return out

@@ -1,0 +1,149 @@
+"""Paper-faithful LUT GEMM as a Pallas TPU kernel (paper §3.2 LUT-16, §4.2).
+
+Structure mirrors Algorithm 1 of the paper, re-tiled for the TPU memory
+hierarchy:
+
+  HBM:   packed sub-byte operands (uint8 carriers, f codes per byte)
+  VMEM:  one (bm x bk) activation tile, one (bn x bk) weight tile, the whole
+         product LUT (16/64/256 entries — a single VMEM row), one (bm x bn)
+         f32 accumulator tile
+  VPU:   unpack (shift/and — the paper's masking step), index construction
+         (bitwise OR with scheme-'c' index-ready weights), table lookup
+         (vector gather from the VMEM-resident LUT; stands in for AVX2
+         pshufb), accumulate (f32 add)
+
+No multiply touches the operand values — multiplication happens *offline*
+when the LUT is built, which is the paper's whole point. The only integer
+multiply in the hot loop would be the index construction w*2^b + a, and the
+scheme-'c' packing eliminates it (index-ready unpack yields w<<b, so the
+index is a single OR) — the same offline-rearrangement trick as Fig. 4(c).
+
+``lookup_impl`` selects how the 2^(2b)-entry gather lowers:
+  'take'   : per-lane vector gather (jnp.take) — direct port of pshufb.
+  'onehot' : one-hot(idx) @ lut — routes the lookup through the MXU. 16x the
+             nominal FLOPs, but on TPU the MXU is idle in this kernel anyway;
+             this is a hillclimb knob (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import packing
+
+
+def _unpack_natural(tile: jax.Array, bits: int) -> jax.Array:
+    """Scheme 'a' unpack inside the kernel: (..., P) uint8 -> (..., P*f) int32."""
+    f, sb = packing.PACK_FACTOR[bits], packing.SLOT_BITS[bits]
+    mask = jnp.uint8(2 ** bits - 1)
+    parts = [(tile >> (sb * i)) & mask for i in range(f)]
+    out = jnp.stack(parts, axis=-1)
+    return out.reshape(*tile.shape[:-1], tile.shape[-1] * f).astype(jnp.int32)
+
+
+def _unpack_indexready(tile: jax.Array, bits: int) -> jax.Array:
+    """Scheme 'c' unpack: yields w << bits directly (no index shift needed)."""
+    f, sb = packing.PACK_FACTOR[bits], packing.SLOT_BITS[bits]
+    wide = jnp.uint8(((2 ** bits) - 1) << bits)
+    parts = []
+    for i in range(f):
+        off = sb * i - bits
+        if off < 0:
+            parts.append((tile << (-off)) & wide)
+        elif off == 0:
+            parts.append(tile & wide)
+        else:
+            parts.append((tile >> off) & wide)
+    out = jnp.stack(parts, axis=-1)
+    return out.reshape(*tile.shape[:-1], tile.shape[-1] * f).astype(jnp.int32)
+
+
+def _lut_gemm_kernel(
+    a_ref, w_ref, lut_ref, o_ref, *, bits: int, scheme: str, lookup_impl: str, bk: int
+):
+    k_steps = pl.num_programs(2)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_idx = _unpack_natural(a_ref[...], bits)                    # (bm, bk) int32
+    if scheme in ("c", "d"):
+        w_pre = _unpack_indexready(w_ref[...], bits)             # (bn, bk) = w<<b
+        idx = w_pre[None, :, :] | a_idx[:, None, :]              # (bm, bn, bk)
+    else:
+        w_idx = _unpack_natural(w_ref[...], bits)
+        idx = (w_idx[None, :, :] << bits) | a_idx[:, None, :]
+
+    lut = lut_ref[...]                                           # (2^(2b),)
+    if lookup_impl == "onehot":
+        # Lookup as a matmul: one_hot(idx) @ lut — MXU-friendly lowering.
+        oh = jax.nn.one_hot(idx.reshape(idx.shape[0], -1), lut.shape[0],
+                            dtype=jnp.float32)
+        prods = (oh @ lut.astype(jnp.float32)).reshape(idx.shape)
+    else:
+        prods = jnp.take(lut, idx)                               # vector gather
+
+    o_ref[...] += prods.sum(axis=-1).astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "scheme", "lookup_impl", "bm", "bn", "bk", "interpret"),
+)
+def lut_gemm_pallas(
+    a_packed: jax.Array,     # (M, K/f) uint8
+    w_packed: jax.Array,     # (N, K/f) uint8
+    lut_table: jax.Array,    # (2^(2*bits),) f32/int32
+    *,
+    bits: int = 2,
+    scheme: str = "d",
+    lookup_impl: str = "take",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,           # in CODES (not bytes); VMEM idx tile = bm*bn*bk_step
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked LUT GEMM. out[m,n] = sum_k LUT[(w[n,k]<<b) | a[m,k]], f32.
+
+    The (bm, bn, bk_step) index tensor is the VMEM working set; the k grid
+    dimension walks K in bk-code steps so the working set stays bounded:
+    default 128*128*64 i32 + f32 ≈ 8 MiB < v5e VMEM.
+    """
+    f = packing.PACK_FACTOR[bits]
+    M, Kp = a_packed.shape
+    N, Kp2 = w_packed.shape
+    assert Kp == Kp2, (a_packed.shape, w_packed.shape)
+    K = Kp * f
+
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    # The 3D index tile must fit VMEM: cap the per-step K chunk.
+    while bm * bn * bk * 8 > 8 * 1024 * 1024 and bk > f:
+        bk //= 2
+    bkp = bk // f
+    assert M % bm == 0 and N % bn == 0 and Kp % bkp == 0, (
+        f"shape ({M},{N},{K}) not divisible by blocks ({bm},{bn},{bk})")
+
+    grid = (M // bm, N // bn, Kp // bkp)
+    kernel = functools.partial(
+        _lut_gemm_kernel, bits=bits, scheme=scheme, lookup_impl=lookup_impl, bk=bk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bkp), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bkp), lambda i, j, k: (j, k)),
+            pl.BlockSpec((lut_table.shape[0],), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(a_packed, w_packed, lut_table.astype(jnp.float32))

@@ -1,0 +1,128 @@
+"""Public jit'd wrappers for the DeepGEMM kernels with backend dispatch.
+
+Backends:
+  'ref'               pure-jnp oracle (XLA-optimized; used inside the 512-way
+                      SPMD dry-run so GSPMD sees plain HLO it can shard)
+  'pallas_interpret'  Pallas kernel executed by the interpreter on CPU —
+                      correctness path for this container
+  'pallas'            real Pallas lowering (TPU target)
+  'auto'              pallas on TPU, pallas_interpret on CPU
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut import ProductLUT
+from . import ref as _ref
+from .lut_gemm import lut_gemm_pallas
+from .lut_dequant_matmul import dequant_matmul_pallas
+from .expert_dequant_matmul import expert_dequant_matmul_pallas
+from .kv_cache_attention import kv_cache_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend != "auto":
+        return backend
+    return "pallas" if _on_tpu() else "pallas_interpret"
+
+
+def lut_gemm(
+    a_packed: jax.Array,
+    w_packed: jax.Array,
+    lut: ProductLUT,
+    *,
+    scheme: str = "d",
+    lookup_impl: str = "take",
+    backend: str = "auto",
+    block: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """Paper-faithful LUT GEMM: out[m,n] = sum_k LUT[(w[n,k]<<b)|a[m,k]]."""
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.ref_lut_gemm(a_packed, w_packed, lut)
+    kw = {}
+    if block is not None:
+        kw = dict(bm=block[0], bn=block[1], bk=block[2])
+    return lut_gemm_pallas(
+        a_packed, w_packed, lut.table,
+        bits=lut.w_bits, scheme=scheme, lookup_impl=lookup_impl,
+        interpret=(b == "pallas_interpret"), **kw,
+    )
+
+
+def dequant_matmul(
+    a: jax.Array,
+    w_packed: jax.Array,
+    codebook: jax.Array,
+    scales: jax.Array,
+    *,
+    bits: int,
+    backend: str = "auto",
+    block: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """TPU-native packed-weight matmul: (a @ dequant(w).T) * scales."""
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.ref_dequant_matmul(a, w_packed, codebook, scales, bits)
+    kw = {}
+    if block is not None:
+        kw = dict(bm=block[0], bn=block[1], bk=block[2])
+    return dequant_matmul_pallas(
+        a, w_packed, codebook, scales,
+        bits=bits, interpret=(b == "pallas_interpret"), **kw,
+    )
+
+
+def lut65k_gemm(a_packed: jax.Array, w_packed: jax.Array, table: jax.Array) -> jax.Array:
+    """LUT-65k — reference path only (no TPU lowering by design, DESIGN.md §7)."""
+    return _ref.ref_lut65k_gemm(a_packed, w_packed, table)
+
+
+def expert_dequant_matmul(
+    x: jax.Array,
+    w_packed: jax.Array,
+    codebook: jax.Array,
+    scales: jax.Array,
+    *,
+    bits: int,
+    backend: str = "auto",
+    block: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """Grouped per-expert packed matmul (MoE serving hot-spot)."""
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.ref_expert_dequant_matmul(x, w_packed, codebook, scales, bits)
+    kw = {}
+    if block is not None:
+        kw = dict(bm=block[0], bn=block[1], bk=block[2])
+    return expert_dequant_matmul_pallas(
+        x, w_packed, codebook, scales,
+        bits=bits, interpret=(b == "pallas_interpret"), **kw)
+
+
+def kv_cache_attention(
+    q: jax.Array,
+    k_packed: jax.Array,
+    k_sc: jax.Array,
+    v_packed: jax.Array,
+    v_sc: jax.Array,
+    lengths: jax.Array,
+    *,
+    bits: int = 4,
+    backend: str = "auto",
+    bs: int = 512,
+) -> jax.Array:
+    """Decode attention over an int8/int4-packed KV cache (fused dequant)."""
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.ref_kv_cache_attention(q, k_packed, k_sc, v_packed, v_sc,
+                                           lengths, bits)
+    return kv_cache_attention_pallas(
+        q, k_packed, k_sc, v_packed, v_sc, lengths,
+        bits=bits, bs=bs, interpret=(b == "pallas_interpret"))

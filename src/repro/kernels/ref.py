@@ -1,0 +1,132 @@
+"""Pure-jnp reference oracles for every kernel in this package.
+
+Layouts (shared with the Pallas kernels):
+  activations  A : (M, K)      packed along K -> (M, K/f)  uint8
+  weights      W : (N, K)      packed along K -> (N, K/f)  uint8   ("row per
+               output channel" serving layout; GEMM is A @ W^T)
+  product LUT    : flat (2^(w_bits+a_bits),)  -- entry [w_idx << a_bits | a_idx]
+  out            : (M, N) f32
+
+The oracles are deliberately naive (materialize (M, N, K) where needed); tests
+use small shapes. They are the single source of numerical truth.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.lut import ProductLUT
+
+
+def ref_lut_gemm(
+    a_packed: jax.Array,
+    w_packed: jax.Array,
+    lut: ProductLUT,
+) -> jax.Array:
+    """Paper-faithful LUT GEMM: index construction + table lookup + accumulate.
+    out[m, n] = sum_k lut[w_idx[n, k] << a_bits | a_idx[m, k]]"""
+    a_idx = packing.unpack(a_packed, lut.a_bits).astype(jnp.int32)  # (M, K)
+    w_idx = packing.unpack(w_packed, lut.w_bits).astype(jnp.int32)  # (N, K)
+    idx = (w_idx[None, :, :] << lut.a_bits) | a_idx[:, None, :]      # (M, N, K)
+    prods = jnp.take(lut.table, idx)                                  # (M, N, K)
+    return prods.sum(axis=-1).astype(jnp.float32)
+
+
+def ref_dequant_gemm(
+    a_packed: jax.Array,
+    w_packed: jax.Array,
+    w_levels: jax.Array,
+    a_levels: jax.Array,
+    w_bits: int,
+    a_bits: int,
+) -> jax.Array:
+    """Equivalent computation via explicit dequantize-then-matmul. Must equal
+    ref_lut_gemm exactly when products are exactly representable (property
+    test)."""
+    a_idx = packing.unpack(a_packed, a_bits).astype(jnp.int32)
+    w_idx = packing.unpack(w_packed, w_bits).astype(jnp.int32)
+    a_deq = jnp.take(a_levels, a_idx)  # (M, K)
+    w_deq = jnp.take(w_levels, w_idx)  # (N, K)
+    # Same reduction structure as ref_lut_gemm (elementwise products, sum over
+    # K last) so the comparison is exact, not just close.
+    return (a_deq[:, None, :] * w_deq[None, :, :]).sum(axis=-1).astype(jnp.float32)
+
+
+def ref_lut65k_gemm(
+    a_packed: jax.Array,
+    w_packed: jax.Array,
+    table: jax.Array,
+) -> jax.Array:
+    """LUT-65k (paper §3.2): one lookup per 4-element sub-dot-product.
+    index = (w_byte << 8) | a_byte. Ref-only on TPU (DESIGN.md §7)."""
+    idx = (w_packed[None, :, :].astype(jnp.int32) << 8) | a_packed[:, None, :].astype(jnp.int32)
+    return jnp.take(table, idx).sum(axis=-1).astype(jnp.float32)
+
+
+def ref_dequant_matmul(
+    a: jax.Array,
+    w_packed: jax.Array,
+    codebook: jax.Array,
+    scales: jax.Array,
+    bits: int,
+) -> jax.Array:
+    """TPU-native path oracle: unpack -> codebook dequant -> matmul -> scale.
+
+    a: (M, K) float; w_packed: (N, K/f) uint8; codebook: (2^bits,) f32;
+    scales: (N,) per-output-channel f32. out: (M, N) f32.
+    """
+    w_idx = packing.unpack(w_packed, bits).astype(jnp.int32)       # (N, K)
+    w_deq = jnp.take(codebook, w_idx)                               # (N, K) f32
+    out = jnp.dot(a.astype(jnp.float32), w_deq.T)                   # (M, N)
+    return out * scales[None, :]
+
+
+def ref_quantize_pack_act(
+    x: jax.Array, scale: jax.Array, bits: int, signed: bool = True
+) -> jax.Array:
+    """Activation quantize+pack stage (paper Fig. 7 'Quantization'+'Packing').
+    Returns packed uint8 codes (..., K/f)."""
+    from repro.core import quant
+    q = quant.quantize(x, scale, bits=bits, signed=signed)
+    idx = quant.to_index(q, bits, signed)
+    return packing.pack(idx, bits)
+
+
+def ref_expert_dequant_matmul(
+    x: jax.Array,            # (E, M, K)
+    w_packed: jax.Array,     # (E, N, K/f)
+    codebook: jax.Array,
+    scales: jax.Array,       # (E, N)
+    bits: int,
+) -> jax.Array:
+    """Grouped per-expert oracle: out[e] = (x[e] @ dequant(w[e]).T) * sc[e]."""
+    w_idx = packing.unpack(w_packed, bits).astype(jnp.int32)    # (E, N, K)
+    w_deq = jnp.take(codebook, w_idx)                            # (E, N, K)
+    out = jnp.einsum("emk,enk->emn", x.astype(jnp.float32), w_deq)
+    return out * scales[:, None, :]
+
+
+def ref_kv_cache_attention(
+    q: jax.Array,            # (B, KV, G, hd)
+    k_packed: jax.Array,     # (B, S, KV, hd/f)
+    k_sc: jax.Array,         # (B, S, KV)
+    v_packed: jax.Array,
+    v_sc: jax.Array,
+    lengths: jax.Array,      # (B,)
+    bits: int,
+) -> jax.Array:
+    """Oracle: dequantize the whole cache, masked softmax attention."""
+    if bits == 4:
+        kd = (packing.unpack(k_packed, 4).astype(jnp.float32) - 8.0) * k_sc[..., None]
+        vd = (packing.unpack(v_packed, 4).astype(jnp.float32) - 8.0) * v_sc[..., None]
+    else:
+        kd = k_packed.astype(jnp.float32) * k_sc[..., None]
+        vd = v_packed.astype(jnp.float32) * v_sc[..., None]
+    hd = q.shape[-1]
+    s = jnp.einsum("begh,bseh->begs", q.astype(jnp.float32), kd) * hd ** -0.5
+    mask = jnp.arange(kd.shape[1])[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("begs,bseh->begh", p, vd)

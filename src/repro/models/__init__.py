@@ -1,0 +1,1 @@
+from . import layers, recurrent, lm  # noqa: F401

@@ -1,0 +1,41 @@
+"""Modality frontend STUBS (per assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+These helpers synthesize deterministic embeddings with the right shapes for
+smoke tests and examples; the production contract is simply "the frontend
+hands the backbone a (B, T, d_model) float tensor".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stub_audio_embed(key, batch: int, frames: int, d_model: int,
+                     dtype=jnp.float32) -> jax.Array:
+    """Whisper-style: 30s of audio -> 1500 frame embeddings (conv frontend
+    + downsampling stubbed)."""
+    return jax.random.normal(key, (batch, frames, d_model), dtype) * 0.02
+
+
+def stub_vision_embed(key, batch: int, n_tokens: int, d_model: int,
+                      dtype=jnp.float32) -> jax.Array:
+    """Qwen2-VL-style: dynamic-resolution patch embeddings (ViT stubbed)."""
+    return jax.random.normal(key, (batch, n_tokens, d_model), dtype) * 0.02
+
+
+def mrope_positions(batch: int, seq: int, n_vision: int,
+                    grid: tuple[int, int] = (16, 16)) -> jax.Array:
+    """(B, S, 3) M-RoPE position ids: vision tokens get (t=0, h, w) grid
+    coordinates; text tokens get t=h=w=linear position (qwen2-vl scheme)."""
+    gh, gw = grid
+    hpos = jnp.repeat(jnp.arange(gh), gw)[:n_vision]
+    wpos = jnp.tile(jnp.arange(gw), gh)[:n_vision]
+    vis = jnp.stack([jnp.zeros((n_vision,), jnp.int32), hpos, wpos], axis=-1)
+    start = 1 + max(gh, gw)
+    text = start + jnp.arange(seq - n_vision, dtype=jnp.int32)
+    txt = jnp.stack([text, text, text], axis=-1)
+    pos = jnp.concatenate([vis, txt], axis=0)
+    return jnp.broadcast_to(pos[None], (batch, seq, 3)).astype(jnp.int32)

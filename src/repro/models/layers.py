@@ -1,0 +1,550 @@
+"""Transformer building blocks, pure JAX, quantization-aware.
+
+Every dense projection goes through `dense()` which dispatches between:
+  * plain bf16 matmul,
+  * QAT (LSQ fake-quant, paper Tab. 1 methodology),
+  * packed serving (QuantizedWeight leaf -> codebook dequant path; the Pallas
+    kernels implement the same math tile-wise on TPU, the jnp formulation here
+    is what GSPMD shards in the dry-run).
+
+Attention is flash-style (chunked online softmax, lax.scan over KV chunks,
+lax.map over query chunks) so the 32k/500k cells compile with bounded VMEM-
+scale buffers instead of S^2 score matrices. Supports causal, sliding-window,
+cross (encoder-decoder), GQA/MQA, RoPE and M-RoPE, ring-buffer KV caches for
+local layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.core import quant
+from repro.core.qlinear import QuantPolicy, QuantizedWeight, dequant_weight
+from repro.core import qlinear
+from repro.dist.sharding import shard
+
+
+# --------------------------------------------------------------------------- #
+# Dense dispatch (plain | qat | packed-serve)
+# --------------------------------------------------------------------------- #
+
+def dense_init(key, din: int, dout: int, *, bias: bool = False, tag: str = "",
+               policy: QuantPolicy, mode: str, dtype=jnp.float32) -> dict:
+    """mode 'qat' attaches LSQ step parameters where the policy applies."""
+    w = jax.random.normal(key, (din, dout), dtype) * (din ** -0.5)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype)
+    if mode == "qat" and policy.applies(tag):
+        p["w_step"] = quant.lsq_init_step(w, policy.w_bits, policy.signed).astype(dtype)
+        if policy.a_bits is not None:
+            p["a_step"] = jnp.asarray(0.05, dtype)
+    return p
+
+
+def dense(p: dict, x: jax.Array, *, tag: str = "", policy: QuantPolicy,
+          mode: str = "plain") -> jax.Array:
+    """x: (..., in) -> (..., out)."""
+    if "qw" in p:  # packed serving leaf
+        qw: QuantizedWeight = p["qw"]
+        w = dequant_weight(qw).astype(x.dtype)        # codebook LUT dequant
+        y = x @ w
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        return y
+    w = p["w"]
+    if mode == "qat" and "w_step" in p:
+        w = quant.lsq_fake_quant(w, p["w_step"], policy.w_bits, policy.signed)
+        if "a_step" in p and policy.a_bits is not None:
+            x = quant.lsq_fake_quant(x, p["a_step"], policy.a_bits, policy.signed)
+    y = x @ w.astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+
+def norm_init(d: int, kind: str, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        xf = xf - mu
+    var = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------- #
+
+def _rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2)))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: Optional[tuple] = None) -> jax.Array:
+    """x: (B, S, N, hd). positions: (B, S) or (B, S, 3) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the hd/2 rotary frequency channels are split into
+    (t, h, w) sections; each section takes its angle from the corresponding
+    position coordinate."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                        # (hd/2,)
+    if mrope_sections is None:
+        if positions.ndim == 3:
+            positions = positions[..., 0]
+        ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, hd/2)
+    else:
+        assert positions.ndim == 3 and sum(mrope_sections) == hd // 2
+        parts, off = [], 0
+        for i, sec in enumerate(mrope_sections):
+            parts.append(positions[..., i, None].astype(jnp.float32)
+                         * freqs[off:off + sec])
+            off += sec
+        ang = jnp.concatenate(parts, axis=-1)             # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Flash-style attention (chunked online softmax)
+# --------------------------------------------------------------------------- #
+
+def _attn_chunk_sizes(sq: int, sk: int) -> tuple[int, int]:
+    qc = min(1024, sq)
+    kc = min(1024, sk)
+    while sq % qc:
+        qc //= 2
+    while sk % kc:
+        kc //= 2
+    return max(qc, 1), max(kc, 1)
+
+
+def flash_attention(
+    q: jax.Array,            # (B, Sq, KV, G, hd)
+    k: jax.Array,            # (B, Sk, KV, hd)
+    v: jax.Array,            # (B, Sk, KV, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    segments: Optional[jax.Array] = None,   # (B, S) packed-sequence ids
+) -> jax.Array:
+    """Memory-bounded attention: lax.map over query chunks, lax.scan over key
+    chunks, online max/denominator. Returns (B, Sq, KV, G, hd).
+
+    segments: sequence-packing ids — attention is masked to seg_q == seg_k
+    so multiple documents share one row without cross-attending."""
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    scale = hd ** -0.5
+    qc, kc = _attn_chunk_sizes(Sq, Sk)
+    nq, nk = Sq // qc, Sk // kc
+    qr = q.reshape(B, nq, qc, KV, G, hd)
+    neg = jnp.asarray(-1e30, jnp.float32)
+
+    def q_block(args):
+        qi, qb = args                                    # qb: (B, qc, KV, G, hd)
+        qpos = q_offset + qi * qc + jnp.arange(qc)
+        seg_q = (jax.lax.dynamic_slice_in_dim(segments, qi * qc, qc, 1)
+                 if segments is not None else None)
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, 1)
+            s = jnp.einsum("bqegh,bseh->begqs", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale   # (B,KV,G,qc,kc)
+            kpos = ki * kc + jnp.arange(kc)
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(mask, s, neg)
+            if seg_q is not None:
+                seg_k = jax.lax.dynamic_slice_in_dim(segments, ki * kc, kc, 1)
+                smask = seg_q[:, :, None] == seg_k[:, None, :]   # (B,qc,kc)
+                s = jnp.where(smask[:, None, None], s, neg)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("begqs,bseh->begqh", p, vb.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, qc), neg, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qc, hd), jnp.float32)
+        # checkpoint the k-step: backward recomputes the (qc, kc) score tile
+        # per chunk instead of saving an (nk, ..., qc, kc) stack — this is
+        # what makes the backward flash-shaped (O(S) memory, not O(S^2)).
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(k_step),
+                                      (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,KV,G,qc,hd)
+        return out.transpose(0, 3, 1, 2, 4)               # (B,qc,KV,G,hd)
+
+    if nq == 1:
+        out = q_block((jnp.asarray(0), qr[:, 0]))[:, None]
+    else:
+        out = jax.lax.map(q_block, (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5)))
+        out = out.transpose(1, 0, 2, 3, 4, 5)              # (B,nq,qc,KV,G,hd)
+    return out.reshape(B, Sq, KV, G, hd).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, KV, G, hd)
+    k_cache: jax.Array,      # (B, S, KV, hd)
+    v_cache: jax.Array,      # (B, S, KV, hd)
+    valid: jax.Array,        # (B, S) bool
+) -> jax.Array:
+    """Single-query attention over a (possibly ring) cache."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqegh,bseh->begqs", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("begqs,bseh->bqegh", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Attention layer (self / cross, cached / uncached)
+# --------------------------------------------------------------------------- #
+
+def attn_init(key, cfg, *, mode: str, dtype=jnp.float32, cross: bool = False) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    pol = cfg.quant
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, bias=cfg.qkv_bias, tag="attn.wq",
+                         policy=pol, mode=mode, dtype=dtype),
+        "wk": dense_init(ks[1], D, KV * hd, bias=cfg.qkv_bias, tag="attn.wk",
+                         policy=pol, mode=mode, dtype=dtype),
+        "wv": dense_init(ks[2], D, KV * hd, bias=cfg.qkv_bias, tag="attn.wv",
+                         policy=pol, mode=mode, dtype=dtype),
+        "wo": dense_init(ks[3], H * hd, D, bias=False, tag="attn.wo",
+                         policy=pol, mode=mode, dtype=dtype),
+    }
+    return p
+
+
+def _ring_update(cache: jax.Array, new: jax.Array, pos: jax.Array,
+                 window: int) -> jax.Array:
+    """cache (B, W, KV, ...), new (B, 1, KV, ...), pos (B,) absolute."""
+    slot = pos % window
+
+    def upd(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n, (s,) + (0,) * (c.ndim - 1))
+
+    return jax.vmap(upd)(cache, new, slot)
+
+
+def _cache_update(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """cache (B, S, KV, ...), new (B, 1, KV, ...), pos (B,)."""
+
+    def upd(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n, (s,) + (0,) * (c.ndim - 1))
+
+    return jax.vmap(upd)(cache, new, pos)
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """bf16 (B, S, KV, hd) -> (int8 codes, per-(token, head) scales).
+    The paper's theme applied to the decode cache: 2x fewer HBM bytes on the
+    decode-dominating cache read, absorbed by a per-head codebook scale."""
+    sc = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+                     / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / sc[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, sc
+
+
+def dequantize_kv(q: jax.Array, sc: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * sc[..., None]
+
+
+def quantize_kv4(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """4-bit packed cache: the paper's sub-byte packing machinery (pack/
+    unpack + uniform codebook + per-(token, head) scale) on K/V — 4x fewer
+    cache bytes than bf16. Codes packed 2-per-byte along head_dim."""
+    from repro.core import packing
+    sc = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+                     / 7.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / sc[..., None]), -8, 7)
+    idx = (q + 8).astype(jnp.uint8)
+    return packing.pack(idx, 4), sc
+
+
+def dequantize_kv4(packed: jax.Array, sc: jax.Array) -> jax.Array:
+    from repro.core import packing
+    idx = packing.unpack(packed, 4).astype(jnp.float32)
+    return (idx - 8.0) * sc[..., None]
+
+
+KV_QUANT = {"int8": (quantize_kv, dequantize_kv),
+            "int4": (quantize_kv4, dequantize_kv4)}
+
+
+def attn_apply(
+    p: dict,
+    x: jax.Array,                       # (B, S, D)
+    *,
+    cfg,
+    layer_type: str = "global",         # "global" | "local"
+    mode: str = "plain",
+    positions: Optional[jax.Array] = None,   # (B,S) or (B,S,3)
+    enc_out: Optional[jax.Array] = None,     # cross-attention memory
+    cache: Optional[dict] = None,            # {"k","v"} (+ ring) or {"xk","xv"}
+    pos: Optional[jax.Array] = None,         # (B,) decode position
+    segments: Optional[jax.Array] = None,    # (B,S) packed-sequence ids
+) -> tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    pol = cfg.quant
+    cross = enc_out is not None or (cache is not None and "xk" in cache)
+    window = cfg.window if layer_type == "local" else None
+
+    q = dense(p["wq"], x, tag="attn.wq", policy=pol, mode=mode)
+    q = q.reshape(B, S, KV, G, hd)
+    q = shard(q, "batch", "seq", "kv_heads_act", None, None)
+
+    new_cache = None
+    if cross:
+        if cache is not None and "xk" in cache:
+            k, v = cache["xk"], cache["xv"]
+        else:
+            k = dense(p["wk"], enc_out, tag="attn.wk", policy=pol, mode=mode)
+            v = dense(p["wv"], enc_out, tag="attn.wv", policy=pol, mode=mode)
+            k = k.reshape(B, -1, KV, hd)
+            v = v.reshape(B, -1, KV, hd)
+            new_cache = {"xk": k, "xv": v}
+        out = flash_attention(q, k, v, causal=False)
+    else:
+        k = dense(p["wk"], x, tag="attn.wk", policy=pol, mode=mode).reshape(B, S, KV, hd)
+        v = dense(p["wv"], x, tag="attn.wv", policy=pol, mode=mode).reshape(B, S, KV, hd)
+        if cfg.pos_embed == "rope":
+            if positions is None:
+                # (1, S) when batch-independent: keeps cos/sin tables tiny
+                # instead of materializing (B, S, hd) angle tensors.
+                positions = (jnp.arange(S)[None, :] if pos is None
+                             else pos[:, None] + jnp.arange(S)[None, :])
+            q = apply_rope(q.reshape(B, S, H, hd), positions, cfg.rope_theta,
+                           cfg.mrope_sections).reshape(B, S, KV, G, hd)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        if cache is not None:                 # decode: S == 1
+            int8_cache = cfg.kv_cache_dtype in KV_QUANT and "k_sc" in cache
+            if int8_cache:
+                qf, dqf = KV_QUANT[cfg.kv_cache_dtype]
+                k, k_sc = qf(k)
+                v, v_sc = qf(v)
+            if window is not None:            # ring buffer cache
+                kc = _ring_update(cache["k"], k, pos, window)
+                vc = _ring_update(cache["v"], v, pos, window)
+                if int8_cache:
+                    ksc = _ring_update(cache["k_sc"], k_sc, pos, window)
+                    vsc = _ring_update(cache["v_sc"], v_sc, pos, window)
+                W = kc.shape[1]
+                filled = jnp.minimum(pos + 1, W)
+                valid = jnp.arange(W)[None, :] < filled[:, None]
+            else:
+                kc = _cache_update(cache["k"], k, pos)
+                vc = _cache_update(cache["v"], v, pos)
+                if int8_cache:
+                    ksc = _cache_update(cache["k_sc"], k_sc, pos)
+                    vsc = _cache_update(cache["v_sc"], v_sc, pos)
+                Sc = kc.shape[1]
+                valid = jnp.arange(Sc)[None, :] <= pos[:, None]
+            kc = shard(kc, "batch", "kv_seq", "kv_heads_act", None)
+            vc = shard(vc, "batch", "kv_seq", "kv_heads_act", None)
+            if int8_cache:
+                new_cache = {"k": kc, "v": vc, "k_sc": ksc, "v_sc": vsc}
+                out = decode_attention(q, dqf(kc, ksc), dqf(vc, vsc), valid)
+            else:
+                new_cache = {"k": kc, "v": vc}
+                out = decode_attention(q, kc, vc, valid)
+        else:                                 # train / prefill
+            k = shard(k, "batch", "kv_seq", "kv_heads_act", None)
+            v = shard(v, "batch", "kv_seq", "kv_heads_act", None)
+            rep = cfg.kv_repeat
+            if rep > 1 and H % (KV * rep) == 0:
+                # replicate kv heads to the TP degree: every model shard gets
+                # its own q/kv head slice -> attention is TP-local (no per-
+                # layer kv all-gather). Cache keeps the unreplicated GQA kv.
+                ka = jnp.repeat(k, rep, axis=2)
+                va = jnp.repeat(v, rep, axis=2)
+                ka = shard(ka, "batch", "kv_seq", "kv_heads_act", None)
+                va = shard(va, "batch", "kv_seq", "kv_heads_act", None)
+                qa = q.reshape(B, S, KV * rep, H // (KV * rep), hd)
+                qa = shard(qa, "batch", "seq", "kv_heads_act", None, None)
+                out = flash_attention(qa, ka, va, causal=True, window=window,
+                                      segments=segments)
+                out = out.reshape(B, S, KV, G, hd)
+            else:
+                out = flash_attention(q, k, v, causal=True, window=window,
+                                      segments=segments)
+            new_cache = {"k": k, "v": v}
+
+    out = out.reshape(B, S, H * hd)
+    out = shard(out, "batch", "seq", "heads_act")
+    y = dense(p["wo"], out, tag="attn.wo", policy=pol, mode=mode)
+    y = checkpoint_name(shard(y, "batch", "seq_sp", "embed_act"), "block_out")
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# MLP (swiglu / geglu / gelu)
+# --------------------------------------------------------------------------- #
+
+def mlp_init(key, cfg, *, d_ff: Optional[int] = None, mode: str,
+             dtype=jnp.float32, tag: str = "mlp") -> dict:
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    pol = cfg.quant
+    p = {"w_up": dense_init(ks[1], D, F, tag=f"{tag}.w_up", policy=pol,
+                            mode=mode, dtype=dtype),
+         "w_down": dense_init(ks[2], F, D, tag=f"{tag}.w_down", policy=pol,
+                              mode=mode, dtype=dtype)}
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[0], D, F, tag=f"{tag}.w_gate", policy=pol,
+                                 mode=mode, dtype=dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array, *, cfg, mode: str = "plain",
+              tag: str = "mlp") -> jax.Array:
+    pol = cfg.quant
+    up = dense(p["w_up"], x, tag=f"{tag}.w_up", policy=pol, mode=mode)
+    if "w_gate" in p:
+        g = dense(p["w_gate"], x, tag=f"{tag}.w_gate", policy=pol, mode=mode)
+        act = jax.nn.silu(g) if cfg.mlp == "swiglu" else jax.nn.gelu(g)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up)
+    h = shard(h, "batch", "seq", "mlp_act")
+    y = dense(p["w_down"], h, tag=f"{tag}.w_down", policy=pol, mode=mode)
+    return checkpoint_name(shard(y, "batch", "seq_sp", "embed_act"), "block_out")
+
+
+# --------------------------------------------------------------------------- #
+# MoE (GShard-style dense dispatch; EP over 'experts' logical axis)
+# --------------------------------------------------------------------------- #
+
+def moe_init(key, cfg, *, mode: str, dtype=jnp.float32) -> dict:
+    moe = cfg.moe
+    D, F, E = cfg.d_model, moe.d_ff_expert, moe.n_experts
+    ks = jax.random.split(key, 5)
+    pol = cfg.quant
+    p = {
+        "w_router": jax.random.normal(ks[0], (D, E), jnp.float32) * (D ** -0.5),
+        "we_gate": jax.random.normal(ks[1], (E, D, F), dtype) * (D ** -0.5),
+        "we_up": jax.random.normal(ks[2], (E, D, F), dtype) * (D ** -0.5),
+        "we_down": jax.random.normal(ks[3], (E, F, D), dtype) * (F ** -0.5),
+    }
+    if mode == "qat" and pol.applies("moe.experts") and pol.w_bits is not None:
+        for n in ("we_gate", "we_up", "we_down"):
+            p[n + "_step"] = quant.lsq_init_step(p[n], pol.w_bits, pol.signed).astype(dtype)
+    if moe.n_shared:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=moe.n_shared * F, mode=mode,
+                               dtype=dtype, tag="moe.shared")
+    return p
+
+
+def _expert_w(p: dict, name: str, *, pol: QuantPolicy, mode: str) -> jax.Array:
+    w = p[name]
+    if isinstance(w, QuantizedWeight):
+        return dequant_weight(w)                       # (E, D, F) f32
+    if mode == "qat" and name + "_step" in p:
+        w = quant.lsq_fake_quant(w, p[name + "_step"], pol.w_bits, pol.signed)
+    return w
+
+
+def moe_apply(p: dict, x: jax.Array, *, cfg, mode: str = "plain") -> jax.Array:
+    """x: (B, S, D). GShard dense-capacity dispatch: tokens grouped, top-k
+    routing with capacity dropping, experts applied via einsum over the
+    EP-sharded expert axis, combine via the gate-weighted inverse dispatch."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    E, K = moe.n_experts, moe.top_k
+    T = B * S
+    gs = min(moe.group_size, T)
+    while T % gs:                 # largest divisor of T not above group_size
+        gs -= 1
+    Gn = T // gs
+    import math
+    C = max(4, 2 ** math.ceil(math.log2(max(gs * K * moe.capacity_factor / E, 1.0))))
+    C = min(C, gs)
+    pol = cfg.quant
+
+    xg = x.reshape(Gn, gs, D)
+    xg = shard(xg, "group", None, "embed_act")
+    logits = (xg.astype(jnp.float32) @ p["w_router"])          # (G, gs, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_k, idx_k = jax.lax.top_k(probs, K)                     # (G, gs, K)
+    gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+
+    # capacity assignment, slot by slot (k is small: <= 6)
+    dispatch = jnp.zeros((Gn, gs, E, C), xg.dtype)
+    combine = jnp.zeros((Gn, gs, E, C), jnp.float32)
+    counts = jnp.zeros((Gn, E), jnp.int32)
+    for j in range(K):
+        oh = jax.nn.one_hot(idx_k[..., j], E, dtype=jnp.int32)      # (G, gs, E)
+        pos = counts[:, None, :] + jnp.cumsum(oh, axis=1) - oh      # pos within expert
+        keep = (pos < C) & (oh > 0)
+        slot = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                              dtype=xg.dtype)[..., :C]              # (G,gs,E,C)
+        slot = slot * keep[..., None].astype(xg.dtype)
+        dispatch = dispatch + slot
+        combine = combine + slot.astype(jnp.float32) * gate_k[..., j][..., None, None]
+        counts = counts + oh.sum(axis=1)
+
+    dispatch = shard(dispatch, "group", None, "experts_act", None)
+    ein = jnp.einsum("gsd,gsec->egcd", xg, dispatch)                # (E, G, C, D)
+    ein = shard(ein, "experts_act", "group", None, "embed_act")
+
+    wg = _expert_w(p, "we_gate", pol=pol, mode=mode).astype(x.dtype)
+    wu = _expert_w(p, "we_up", pol=pol, mode=mode).astype(x.dtype)
+    wd = _expert_w(p, "we_down", pol=pol, mode=mode).astype(x.dtype)
+    g = jnp.einsum("egcd,edf->egcf", ein, wg)
+    u = jnp.einsum("egcd,edf->egcf", ein, wu)
+    h = (jax.nn.silu(g) if cfg.mlp != "geglu" else jax.nn.gelu(g)) * u
+    eo = jnp.einsum("egcf,efd->egcd", h, wd)                        # (E, G, C, D)
+
+    out = jnp.einsum("egcd,gsec->gsd", eo.astype(jnp.float32), combine)
+    out = out.reshape(B, S, D).astype(x.dtype)
+    out = checkpoint_name(shard(out, "batch", "seq_sp", "embed_act"), "block_out")
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, cfg=cfg, mode=mode, tag="moe.shared")
+    return out
+
+
+def moe_aux_loss(logits: jax.Array, idx_k: jax.Array, n_experts: int) -> jax.Array:
+    """Load-balance auxiliary loss (GShard eq. 4 style)."""
+    probs = jax.nn.softmax(logits, -1)
+    me = probs.mean(axis=(0, 1))
+    oh = jax.nn.one_hot(idx_k[..., 0], n_experts)
+    ce = oh.mean(axis=(0, 1))
+    return n_experts * jnp.sum(me * ce)

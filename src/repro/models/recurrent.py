@@ -1,0 +1,301 @@
+"""Recurrent blocks: RG-LRU (Griffin / RecurrentGemma) and RWKV6 (Finch).
+
+Both are attention-free token mixers with O(1) decode state — the reason
+these archs RUN the long_500k cell. The projections around the recurrences
+are GEMMs and go through the quantized `dense` dispatch (the paper's LUT
+technique applies there; the recurrence itself is elementwise, DESIGN.md
+§Arch-applicability).
+
+Sequence processing:
+  RG-LRU : first-order linear recurrence -> jax.lax.associative_scan
+           (log-space decay, parallel depth O(log S)).
+  RWKV6  : matrix-valued state S_t = diag(w_t) S_{t-1} + k_t^T v_t.
+           Baseline: lax.scan over time (numerically safe oracle).
+           `wkv_chunked`: block-parallel form (intra-chunk matmuls on the
+           MXU + inter-chunk state scan) — the TPU-native hillclimb path,
+           validated against the scan oracle in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from .layers import dense, dense_init, norm_init, norm_apply
+
+_C_RGLRU = 8.0  # Griffin's fixed recurrence-gate temperature
+
+
+# =========================================================================== #
+# RG-LRU block
+# =========================================================================== #
+
+def rglru_init(key, cfg, *, mode: str, dtype=jnp.float32) -> dict:
+    D = cfg.d_model
+    R = cfg.d_rnn or D
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 4)
+    pol = cfg.quant
+    p = {
+        "w_rnn_in": dense_init(ks[0], D, R, tag="rnn.w_in", policy=pol,
+                               mode=mode, dtype=dtype),
+        "w_rnn_gate": dense_init(ks[1], D, R, tag="rnn.w_gate", policy=pol,
+                                 mode=mode, dtype=dtype),
+        "w_rnn_out": dense_init(ks[2], R, D, tag="rnn.w_out", policy=pol,
+                                mode=mode, dtype=dtype),
+        "conv_w": jax.random.normal(ks[3], (cw, R), dtype) * 0.1,
+        "conv_b": jnp.zeros((R,), dtype),
+        # Λ init so a = sigmoid(Λ)^c spreads over (0.9, 0.999) — Griffin's init
+        "lru_a": jnp.linspace(2.0, 6.0, R).astype(dtype),
+        "lru_in_w": jnp.ones((R,), dtype),
+        "lru_in_b": jnp.zeros((R,), dtype),
+        "lru_rec_w": jnp.ones((R,), dtype),
+        "lru_rec_b": jnp.zeros((R,), dtype),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along time. x (B,S,R); w (cw,R).
+    state: (B, cw-1, R) trailing inputs from the previous segment."""
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)              # (B, S+cw-1, R)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw)) + b
+    new_state = xp[:, -(cw - 1):] if cw > 1 else state
+    return out.astype(x.dtype), new_state
+
+
+def _rglru_gates(p, u):
+    r = jax.nn.sigmoid(u * p["lru_rec_w"] + p["lru_rec_b"])
+    i = jax.nn.sigmoid(u * p["lru_in_w"] + p["lru_in_b"])
+    log_a = -_C_RGLRU * jax.nn.softplus(p["lru_a"]) * r      # log a_t <= 0
+    a = jnp.exp(log_a)
+    # Griffin's normalized input: sqrt(1 - a^2) (clipped for stability)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, beta * i * u
+
+
+def rglru_apply(p: dict, x: jax.Array, *, cfg, mode: str = "plain",
+                state: Optional[dict] = None):
+    """x: (B,S,D) -> (B,S,D). state {'h': (B,R), 'conv': (B,cw-1,R)} for decode."""
+    pol = cfg.quant
+    u = dense(p["w_rnn_in"], x, tag="rnn.w_in", policy=pol, mode=mode)
+    g = dense(p["w_rnn_gate"], x, tag="rnn.w_gate", policy=pol, mode=mode)
+    u = shard(u, "batch", "seq", "rnn_act")
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+
+    uf = u.astype(jnp.float32)
+    a, b = _rglru_gates(p, uf)                              # (B,S,R) each
+    h0 = state["h"].astype(jnp.float32) if state is not None else None
+
+    if x.shape[1] == 1 and state is not None:               # decode step
+        h = a[:, 0] * h0 + b[:, 0]
+        hs = h[:, None]
+    else:                                                   # parallel scan
+        if h0 is not None:
+            b = b.at[:, 0].add(a[:, 0] * h0)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = hs[:, -1]
+
+    out = hs.astype(x.dtype) * jax.nn.gelu(g)
+    y = dense(p["w_rnn_out"], out, tag="rnn.w_out", policy=pol, mode=mode)
+    new_state = {"h": h, "conv": new_conv}
+    return shard(y, "batch", "seq", "embed_act"), new_state
+
+
+def rglru_state_init(cfg, batch: int, dtype=jnp.float32) -> dict:
+    R = cfg.d_rnn or cfg.d_model
+    return {"h": jnp.zeros((batch, R), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, R), dtype)}
+
+
+# =========================================================================== #
+# RWKV6 (Finch)
+# =========================================================================== #
+
+def rwkv_init(key, cfg, *, mode: str, dtype=jnp.float32) -> dict:
+    D = cfg.d_model
+    R = D                                    # attention dim == d_model
+    F = cfg.d_ff
+    Ld = 32                                  # lora dim for data-dependent mixes
+    ks = jax.random.split(key, 12)
+    pol = cfg.quant
+    p = {
+        # time-mix projections
+        "w_r": dense_init(ks[0], D, R, tag="rwkv.w_r", policy=pol, mode=mode, dtype=dtype),
+        "w_k": dense_init(ks[1], D, R, tag="rwkv.w_k", policy=pol, mode=mode, dtype=dtype),
+        "w_v": dense_init(ks[2], D, R, tag="rwkv.w_v", policy=pol, mode=mode, dtype=dtype),
+        "w_g": dense_init(ks[3], D, R, tag="rwkv.w_g", policy=pol, mode=mode, dtype=dtype),
+        "w_out": dense_init(ks[4], R, D, tag="rwkv.w_out", policy=pol, mode=mode, dtype=dtype),
+        # data-dependent token-shift mixes (ddlerp, 5 targets: r,k,v,g,w)
+        "mix_x": jax.random.uniform(ks[5], (5, D), dtype, 0.0, 1.0),
+        "mix_lora_a": jax.random.normal(ks[6], (D, Ld), dtype) * 0.01,
+        "mix_lora_b": jax.random.normal(ks[7], (5, Ld, D), dtype) * 0.01,
+        # data-dependent decay
+        "decay_w": jnp.linspace(-6.0, -1.0, R).astype(dtype),
+        "decay_lora_a": jax.random.normal(ks[8], (D, Ld * 2), dtype) * 0.01,
+        "decay_lora_b": jax.random.normal(ks[9], (Ld * 2, R), dtype) * 0.01,
+        "bonus_u": jax.random.normal(ks[10], (R,), dtype) * 0.1,
+        "ln_scale": jnp.ones((R,), dtype),   # per-head group norm
+        # channel mix
+        "wc_k": dense_init(ks[11], D, F, tag="rwkv.wc_k", policy=pol, mode=mode, dtype=dtype),
+        "wc_v": dense_init(jax.random.fold_in(key, 101), F, D, tag="rwkv.wc_v",
+                           policy=pol, mode=mode, dtype=dtype),
+        "wc_r": dense_init(jax.random.fold_in(key, 102), D, D, tag="rwkv.wc_r",
+                           policy=pol, mode=mode, dtype=dtype),
+        # pre-norms for the two sub-blocks (rwkv layers own their residuals)
+        "ln1": norm_init(D, "layernorm", dtype),
+        "ln2": norm_init(D, "layernorm", dtype),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """x (B,S,D) -> x shifted right by one; prev (B,1,D) from last segment."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1), x[:, -1:]
+
+
+def wkv_scan(r, k, v, w, u, s0):
+    """Oracle WKV: sequential over time.
+    r,k,v: (B,S,H,hd); w: (B,S,H,hd) decays in (0,1); u: (H,hd) bonus;
+    s0: (B,H,hd,hd) state. Returns out (B,S,H,hd), s_final."""
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s_new = w_t[..., None] * s + kv
+        return s_new, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_fin, outs = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(outs, 0, 1), s_fin
+
+
+def wkv_chunked(r, k, v, w, u, s0, *, chunk: int = 64):
+    """Block-parallel WKV (linear-attention chunking): intra-chunk terms as
+    masked matmuls (MXU-friendly), inter-chunk state via scan over chunks.
+    Matches wkv_scan up to fp error; validated in tests/test_models_smoke."""
+    B, S, H, hd = r.shape
+    if S % chunk:
+        return wkv_scan(r, k, v, w, u, s0)
+    n = S // chunk
+    rc, kc, vc, wc = (t.reshape(B, n, chunk, H, hd) for t in (r, k, v, w))
+    lw = jnp.log(jnp.maximum(wc, 1e-8))                    # (B,n,L,H,hd)
+    cum = jnp.cumsum(lw, axis=2)                           # inclusive cumsum
+
+    # decay-adjusted r/k inside the chunk (relative to chunk start)
+    r_ = rc * jnp.exp(cum - lw)                            # exp(c_{i-1})
+    k_ = kc * jnp.exp(-cum)                                # exp(-c_i)
+    # intra-chunk attention-like term, strictly causal (j < i)
+    A = jnp.einsum("bnihd,bnjhd->bnhij", r_, k_)           # (B,n,H,L,L)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    A = jnp.where(mask[None, None, None], A, 0.0)
+    intra = jnp.einsum("bnhij,bnjhd->bnihd", A, vc)
+    # diagonal bonus term
+    diag = jnp.einsum("bnihd,bnihd->bnih", rc, u[None, None, None] * kc)
+    intra = intra + diag[..., None] * vc
+
+    # inter-chunk: state carried across chunks
+    decay_tot = jnp.exp(cum[:, :, -1])                     # (B,n,H,hd)
+    kv_chunk = jnp.einsum("bnihd,bnihe->bnhde", kc * jnp.exp(cum[:, :, -1:] - cum), vc)
+
+    def step(s, inp):
+        r_i, dec, kvc = inp                                # per-chunk
+        out = jnp.einsum("bihd,bhde->bihe", r_i, s)        # r_ already decayed
+        s_new = dec[..., None] * s + kvc
+        return s_new, out
+
+    xs = (jnp.moveaxis(r_, 1, 0), jnp.moveaxis(decay_tot, 1, 0),
+          jnp.moveaxis(kv_chunk, 1, 0))
+    s_fin, inter = jax.lax.scan(step, s0, xs)
+    inter = jnp.moveaxis(inter, 0, 1)                      # (B,n,L,H,hd)
+    return (intra + inter).reshape(B, S, H, hd), s_fin
+
+
+def rwkv_apply(p: dict, x: jax.Array, *, cfg, mode: str = "plain",
+               state: Optional[dict] = None, impl: str = "chunked"):
+    """Full RWKV6 layer (time-mix + channel-mix). x: (B,S,D).
+    state: {'s': (B,H,hd,hd), 'shift_t': (B,1,D), 'shift_c': (B,1,D)}."""
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_size
+    H = D // hd
+    pol = cfg.quant
+
+    # ---- time mix (pre-norm; token shift operates on the normed stream) ----
+    xn = norm_apply(p["ln1"], x, "layernorm")
+    xs, last_t = _token_shift(xn, state["shift_t"] if state else None)
+    lora = jnp.tanh(xn @ p["mix_lora_a"])                  # (B,S,Ld)
+    mixes = p["mix_x"][:, None, None] + jnp.einsum(
+        "bsl,cld->cbsd", lora, p["mix_lora_b"])            # (5,B,S,D)
+    xi = [xn + (xs - xn) * jax.nn.sigmoid(mixes[c]) for c in range(5)]
+    xr, xk, xv, xg, xw = xi
+
+    r = dense(p["w_r"], xr, tag="rwkv.w_r", policy=pol, mode=mode)
+    k = dense(p["w_k"], xk, tag="rwkv.w_k", policy=pol, mode=mode)
+    v = dense(p["w_v"], xv, tag="rwkv.w_v", policy=pol, mode=mode)
+    g = dense(p["w_g"], xg, tag="rwkv.w_g", policy=pol, mode=mode)
+    dl = jnp.tanh(xw @ p["decay_lora_a"]) @ p["decay_lora_b"]
+    w = jnp.exp(-jnp.exp((p["decay_w"] + dl).astype(jnp.float32)))  # (B,S,R) in (0,1)
+
+    rh, kh, vh, wh = (t.reshape(B, S, H, hd).astype(jnp.float32)
+                      for t in (r, k, v, w))
+    rh = shard(rh, "batch", "seq", "rnn_act", None)
+    u = p["bonus_u"].reshape(H, hd).astype(jnp.float32)
+    s0 = (state["s"].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, H, hd, hd), jnp.float32))
+
+    if S == 1 and state is not None:
+        out, s_fin = wkv_scan(rh, kh, vh, wh, u, s0)
+    elif impl == "chunked":
+        out, s_fin = wkv_chunked(rh, kh, vh, wh, u, s0)
+    else:
+        out, s_fin = wkv_scan(rh, kh, vh, wh, u, s0)
+
+    # per-head group norm
+    mu = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 1e-5)
+    out = out.reshape(B, S, D) * p["ln_scale"].astype(jnp.float32)
+    out = (out * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    y = dense(p["w_out"], out, tag="rwkv.w_out", policy=pol, mode=mode)
+    x = x + shard(y, "batch", "seq", "embed_act")
+
+    # ---- channel mix ----
+    xn2 = norm_apply(p["ln2"], x, "layernorm")
+    xs2, last_c = _token_shift(xn2, state["shift_c"] if state else None)
+    mix_c = jax.nn.sigmoid(p["mix_x"][0])                  # reuse slot-0 mix
+    xk2 = xn2 + (xs2 - xn2) * mix_c
+    kk = dense(p["wc_k"], xk2, tag="rwkv.wc_k", policy=pol, mode=mode)
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = shard(kk, "batch", "seq", "mlp_act")
+    vv = dense(p["wc_v"], kk, tag="rwkv.wc_v", policy=pol, mode=mode)
+    rr = jax.nn.sigmoid(dense(p["wc_r"], xk2, tag="rwkv.wc_r", policy=pol, mode=mode))
+    y2 = x + rr * vv
+
+    new_state = {"s": s_fin, "shift_t": last_t, "shift_c": last_c}
+    return shard(y2, "batch", "seq", "embed_act"), new_state
+
+
+def rwkv_state_init(cfg, batch: int, dtype=jnp.float32) -> dict:
+    D = cfg.d_model
+    hd = cfg.rwkv_head_size
+    H = D // hd
+    return {"s": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "shift_t": jnp.zeros((batch, 1, D), dtype),
+            "shift_c": jnp.zeros((batch, 1, D), dtype)}

@@ -1,0 +1,5 @@
+from .optimizers import (  # noqa: F401
+    Optimizer, adamw, int8_adam, adafactor, sgd,
+    apply_updates, clip_by_global_norm, global_norm,
+    warmup_cosine, constant_lr,
+)

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches see 1 CPU device (the dry-run sets its own 512-dev
+# flag in its OWN process; tests that need a small mesh spawn subprocesses).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

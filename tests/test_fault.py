@@ -1,0 +1,113 @@
+"""Fault tolerance: checkpoint atomicity, async save, crash->restore with
+bit-identical continuation, elastic resharding."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.configs import ShapeConfig, get_config, reduce_for_smoke
+from repro.data import make_pipeline
+from repro.dist.fault import FaultConfig, run_resilient
+from repro.launch import steps as St
+
+CFG = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+SHAPE = ShapeConfig("t", 32, 4, "train")
+
+
+def _mk_state():
+    opt = optim.adamw(1e-3)
+    state = St.init_train_state(jax.random.PRNGKey(0), CFG, opt, mode="qat")
+    step = jax.jit(St.make_train_step(CFG, opt, mode="qat"))
+    return state, step
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state, _ = _mk_state()
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 7, state)
+    assert latest_step(d) == 7
+    template = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            state)
+    restored, step, _ = restore_checkpoint(d, template)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    state, _ = _mk_state()
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, {"x": jnp.ones((2,)) * s}, keep=3)
+    steps = sorted(int(p.split("_")[1]) for p in os.listdir(d))
+    assert steps == [3, 4, 5]
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path / "ck")
+    ck = AsyncCheckpointer(d)
+    ck.save(3, {"x": jnp.arange(8)})
+    ck.wait()
+    assert latest_step(d) == 3
+
+
+def test_crash_restore_identical_losses(tmp_path):
+    """Run 12 steps with a crash injected at step 8; the metrics after
+    restart must equal an uninterrupted run (deterministic data + restore)."""
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    pipe = make_pipeline(CFG, SHAPE, seed=3)
+
+    def run(ckpt_dir, inject):
+        state, step = _mk_state()
+        fc = FaultConfig(ckpt_dir=ckpt_dir, ckpt_every=4)
+        return run_resilient(state, step, pipe.batch, 12, fc,
+                             inject_failure_at=inject)
+
+    _, log_plain = run(d1, None)
+    _, log_crash = run(d2, {8})
+    plain = {m["step"]: float(m["loss"]) for m in log_plain}
+    crash = {m["step"]: float(m["loss"]) for m in log_crash}
+    for s in range(12):
+        assert abs(plain[s] - crash[s]) < 1e-6, (s, plain[s], crash[s])
+
+
+def test_elastic_reshard_subprocess(tmp_path):
+    """Checkpoint under a 4-device mesh, restore into an 8-device mesh."""
+    import subprocess, sys, textwrap
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = textwrap.dedent(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint import save_checkpoint
+        from repro.dist.fault import elastic_reshard
+        from repro.dist import sharding as Sh
+        from repro.launch.mesh import make_cpu_mesh
+
+        tree = {{"tok_embed": jnp.arange(64*8, dtype=jnp.float32).reshape(64, 8)}}
+        save_checkpoint(r"{tmp_path}/ck", 5, tree)
+
+        mesh8 = make_cpu_mesh((2, 4), ("data", "model"))
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+        restored, step, _ = elastic_reshard(
+            r"{tmp_path}/ck", template, mesh8, Sh.PRESETS["train"],
+            Sh.param_specs)
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(restored["tok_embed"]),
+                                      np.asarray(tree["tok_embed"]))
+        shard_shape = restored["tok_embed"].sharding.shard_shape((64, 8))
+        assert shard_shape == (16, 8), shard_shape   # vocab over model=4
+        print("elastic OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=300)
+    assert r.returncode == 0, r.stderr[-3000:]

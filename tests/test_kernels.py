@@ -1,0 +1,195 @@
+"""Per-kernel correctness: Pallas (interpret=True on CPU) vs pure-jnp ref
+across shapes, bitwidths, packing schemes and lookup implementations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut, packing, quant
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _codes(shape, bits):
+    return jnp.asarray(RNG.integers(0, 2 ** bits, size=shape), dtype=jnp.uint8)
+
+
+def _pack_pair(M, N, K, bits):
+    a_idx = _codes((M, K), bits)
+    w_idx = _codes((N, K), bits)
+    return packing.pack(a_idx, bits), packing.pack(w_idx, bits)
+
+
+# --------------------------------------------------------------------------- #
+# lut_gemm (paper-faithful)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4])
+@pytest.mark.parametrize("shape", [(8, 16, 32), (16, 8, 64), (32, 32, 128)])
+def test_lut_gemm_matches_ref(bits, shape):
+    M, N, K = shape
+    ap, wp = _pack_pair(M, N, K, bits)
+    cb = quant.uniform_codebook(bits, signed=True)
+    plut = lut.product_lut(cb, cb)
+    want = ref.ref_lut_gemm(ap, wp, plut)
+    got = ops.lut_gemm(ap, wp, plut, backend="pallas_interpret",
+                       block=(min(8, M), min(16, N), min(64, K)))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("scheme", ["a", "c", "d"])
+def test_lut_gemm_schemes_agree(scheme):
+    M, N, K, bits = 8, 16, 64, 2
+    ap, wp = _pack_pair(M, N, K, bits)
+    cb = quant.uniform_codebook(bits, signed=True)
+    plut = lut.product_lut(cb, cb)
+    want = ref.ref_lut_gemm(ap, wp, plut)
+    got = ops.lut_gemm(ap, wp, plut, scheme=scheme,
+                       backend="pallas_interpret", block=(8, 16, 64))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_lut_gemm_onehot_lookup_impl():
+    """MXU-routed lookup (one_hot @ lut) must equal the gather lookup."""
+    M, N, K, bits = 8, 16, 64, 2
+    ap, wp = _pack_pair(M, N, K, bits)
+    cb = quant.uniform_codebook(bits, signed=True)
+    plut = lut.product_lut(cb, cb)
+    take = ops.lut_gemm(ap, wp, plut, lookup_impl="take",
+                        backend="pallas_interpret", block=(8, 16, 64))
+    oneh = ops.lut_gemm(ap, wp, plut, lookup_impl="onehot",
+                        backend="pallas_interpret", block=(8, 16, 64))
+    np.testing.assert_allclose(np.asarray(take), np.asarray(oneh), atol=1e-4)
+
+
+def test_lut_gemm_nonuniform_float_entries():
+    """Paper §5.3: float (non-uniform) LUT entries — signed k-means levels."""
+    M, N, K, bits = 8, 8, 32, 2
+    ap, wp = _pack_pair(M, N, K, bits)
+    wl = jnp.asarray([-1.3, -0.2, 0.4, 1.7], jnp.float32)
+    al = jnp.asarray([-0.9, -0.1, 0.3, 1.1], jnp.float32)
+    plut = lut.product_lut(wl, al)
+    want = ref.ref_dequant_gemm(ap, wp, wl, al, bits, bits)
+    got = ops.lut_gemm(ap, wp, plut, backend="pallas_interpret",
+                       block=(8, 8, 32))
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_lut65k_matches_lut16():
+    M, N, K, bits = 4, 8, 32, 2
+    ap, wp = _pack_pair(M, N, K, bits)
+    cb = quant.uniform_codebook(bits, signed=True)
+    plut = lut.product_lut(cb, cb)
+    want = ref.ref_lut_gemm(ap, wp, plut)
+    t65 = lut.lut65k(cb, cb)
+    got = ops.lut65k_gemm(ap, wp, t65)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), atol=1e-4)
+
+
+def test_fused_scale_lut():
+    """Scales folded into the table == scaling outside (paper's op fusion)."""
+    M, N, K, bits = 4, 8, 32, 2
+    ap, wp = _pack_pair(M, N, K, bits)
+    cb = quant.uniform_codebook(bits, signed=True)
+    plain = ref.ref_lut_gemm(ap, wp, lut.product_lut(cb, cb))
+    fused = ref.ref_lut_gemm(ap, wp, lut.fused_lut(cb, cb, 0.25, 0.5))
+    np.testing.assert_allclose(np.asarray(plain) * 0.125, np.asarray(fused),
+                               rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# dequant_matmul (TPU-native path)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 16, 32), (16, 32, 128)])
+def test_dequant_matmul_matches_ref(bits, dtype, shape):
+    M, N, K = shape
+    a = jnp.asarray(RNG.normal(size=(M, K)), dtype)
+    w_idx = _codes((N, K), bits)
+    wp = packing.pack(w_idx, bits)
+    cb = quant.uniform_codebook(bits, signed=True)
+    scales = jnp.asarray(np.abs(RNG.normal(size=(N,))) + 0.05, jnp.float32)
+    want = ref.ref_dequant_matmul(a.astype(jnp.float32), wp, cb.levels,
+                                  scales, bits)
+    got = ops.dequant_matmul(a, wp, cb.levels, scales, bits=bits,
+                             backend="pallas_interpret",
+                             block=(min(8, M), 16, min(64, K)))
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_dequant_matmul_grid_accumulation():
+    """K-grid accumulation across multiple k steps must be exact."""
+    M, N, K, bits = 16, 16, 512, 2
+    a = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    wp = packing.pack(_codes((N, K), bits), bits)
+    cb = quant.uniform_codebook(bits, signed=True)
+    sc = jnp.ones((N,), jnp.float32)
+    want = ref.ref_dequant_matmul(a, wp, cb.levels, sc, bits)
+    got = ops.dequant_matmul(a, wp, cb.levels, sc, bits=bits,
+                             backend="pallas_interpret", block=(8, 8, 128))
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), rtol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# expert_dequant_matmul (grouped MoE serving kernel)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("shape", [(4, 8, 16, 32), (2, 16, 32, 128)])
+def test_expert_dequant_matmul_matches_ref(bits, shape):
+    E, M, N, K = shape
+    x = jnp.asarray(RNG.normal(size=(E, M, K)), jnp.float32)
+    w_idx = _codes((E, N, K), bits)
+    wp = packing.pack(w_idx, bits)
+    cb = quant.uniform_codebook(bits, signed=True)
+    sc = jnp.asarray(np.abs(RNG.normal(size=(E, N))) + 0.05, jnp.float32)
+    want = ref.ref_expert_dequant_matmul(x, wp, cb.levels, sc, bits)
+    got = ops.expert_dequant_matmul(x, wp, cb.levels, sc, bits=bits,
+                                    backend="pallas_interpret",
+                                    block=(min(8, M), min(16, N), min(64, K)))
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_expert_dequant_matmul_nonuniform_codebook():
+    E, M, N, K, bits = 2, 8, 16, 64, 2
+    x = jnp.asarray(RNG.normal(size=(E, M, K)), jnp.float32)
+    wp = packing.pack(_codes((E, N, K), bits), bits)
+    cb = jnp.asarray([-1.7, -0.4, 0.3, 1.2], jnp.float32)   # k-means-style
+    sc = jnp.ones((E, N), jnp.float32)
+    want = ref.ref_expert_dequant_matmul(x, wp, cb, sc, bits)
+    got = ops.expert_dequant_matmul(x, wp, cb, sc, bits=bits,
+                                    backend="pallas_interpret",
+                                    block=(8, 16, 64))
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), rtol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# kv_cache_attention (packed-cache decode kernel)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("gqa", [(2, 1), (2, 3)])
+def test_kv_cache_attention_matches_ref(bits, gqa):
+    from repro.models.layers import quantize_kv, quantize_kv4
+    B, S, hd = 2, 64, 16
+    KV, G = gqa
+    q = jnp.asarray(RNG.normal(size=(B, KV, G, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, KV, hd)), jnp.float32)
+    qf = quantize_kv4 if bits == 4 else quantize_kv
+    kp, ksc = qf(k)
+    vp, vsc = qf(v)
+    lengths = jnp.asarray([S, S // 2], jnp.int32)
+    want = ref.ref_kv_cache_attention(q, kp, ksc, vp, vsc, lengths, bits)
+    got = ops.kv_cache_attention(q, kp, ksc, vp, vsc, lengths, bits=bits,
+                                 backend="pallas_interpret", bs=16)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,138 @@
+"""Quantization-layer unit tests: LSQ gradients, codebooks, QuantizedWeight,
+optimizers with int8 state."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import lut, quant
+from repro.core.qlinear import (QuantPolicy, dense_apply, dense_init,
+                                dense_serve, dequant_weight, qat_init,
+                                quantize_expert_weight, quantize_weight)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_lsq_forward_matches_fake_quant():
+    x = jax.random.normal(KEY, (64,)) * 2
+    s = jnp.asarray(0.3)
+    got = quant.lsq_fake_quant(x, s, 2, True)
+    want = quant.fake_quant(x, s, bits=2, signed=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_lsq_gradients():
+    x = jnp.asarray([-2.0, -0.2, 0.1, 0.7, 3.0])
+    s = jnp.asarray(0.5)
+
+    gx = jax.grad(lambda xx: quant.lsq_fake_quant(xx, s, 2, True).sum())(x)
+    # STE: 1 inside the clip range [-2s, s] = [-1.0, 0.5], 0 outside
+    np.testing.assert_allclose(np.asarray(gx), [0, 1, 1, 0, 0], atol=1e-6)
+
+    gs = jax.grad(lambda ss: quant.lsq_fake_quant(x, ss, 2, True).sum())(s)
+    assert np.isfinite(float(gs)) and abs(float(gs)) > 0
+
+
+def test_lsq_training_reduces_quant_error():
+    """Minimizing ||fq(x) - x||^2 over the step size should beat the init."""
+    x = jax.random.normal(KEY, (512,))
+    s0 = quant.lsq_init_step(x, 3, True)
+
+    def loss(s):
+        return jnp.mean((quant.lsq_fake_quant(x, s, 3, True) - x) ** 2)
+
+    s = s0
+    for _ in range(100):
+        s = s - 0.05 * jax.grad(loss)(s)
+    assert float(loss(s)) <= float(loss(s0)) + 1e-9
+
+
+def test_kmeans_codebook_beats_uniform_on_gaussian():
+    x = jax.random.normal(KEY, (4096,))
+    cb = quant.kmeans_codebook(x, 2, iters=20)
+    xq_k = quant.codebook_dequantize(quant.codebook_quantize(x, cb), cb)
+    sc, _ = quant.compute_scale_zero_point(x, 2, signed=True)
+    xq_u = quant.fake_quant(x, sc, bits=2, signed=True)
+    err_k = float(jnp.mean((x - xq_k) ** 2))
+    err_u = float(jnp.mean((x - xq_u) ** 2))
+    assert err_k < err_u, (err_k, err_u)   # the paper's non-uniform claim
+
+
+def test_quantized_weight_pytree_and_dequant():
+    w = jax.random.normal(KEY, (32, 16))
+    qw = quantize_weight(w, QuantPolicy(w_bits=2))
+    leaves, treedef = jax.tree_util.tree_flatten(qw)
+    assert len(leaves) == 3
+    qw2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert qw2.bits == 2 and qw2.in_features == 32
+    wd = dequant_weight(qw)
+    assert wd.shape == (32, 16)
+    # quantization error bounded by per-channel scale
+    err = np.abs(np.asarray(w - wd))
+    bound = np.asarray(qw.scales)[None, :] * 1.0 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_expert_weight_quantization():
+    w = jax.random.normal(KEY, (4, 16, 8))        # (E, in, out)
+    qw = quantize_expert_weight(w, QuantPolicy(w_bits=2))
+    assert qw.packed.shape == (4, 8, 4)           # (E, out, in/4)
+    wd = dequant_weight(qw)
+    assert wd.shape == (4, 16, 8)
+    assert float(jnp.abs(w - wd).mean()) < 0.5
+
+
+def test_dense_serve_wba16_vs_w2a2():
+    w = jax.random.normal(KEY, (32, 16))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    y_plain = x @ w
+    qw = quantize_weight(w, QuantPolicy(w_bits=4))
+    y16 = dense_serve(qw, x, backend="ref")
+    y44 = dense_serve(qw, x, a_bits=4, backend="ref")
+    # both near the fp32 result; w4a16 strictly closer than w4a4
+    e16 = float(jnp.abs(y16 - y_plain).mean())
+    e44 = float(jnp.abs(y44 - y_plain).mean())
+    base = float(jnp.abs(y_plain).mean())
+    assert e16 < 0.2 * base and e44 < 0.4 * base and e16 <= e44 + 1e-6
+
+
+@pytest.mark.parametrize("name", ["adamw", "int8_adam", "adafactor", "sgd"])
+def test_optimizers_reduce_quadratic(name):
+    from repro.optim.optimizers import OPTIMIZERS
+    opt = OPTIMIZERS[name](1e-1)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        u, state, _ = opt.update(g, state, params)
+        params = optim.apply_updates(params, u)
+    assert float(loss(params)) < l0 * 0.15, (name, float(loss(params)))
+
+
+def test_int8_adam_state_bytes():
+    """Moments must actually be int8-backed (the §6 memory claim)."""
+    from repro.optim.optimizers import OPTIMIZERS
+    opt = OPTIMIZERS["int8_adam"](1e-3)
+    params = {"w": jnp.zeros((256, 64))}
+    state = opt.init(params)
+    mq = state["m"]["w"]["q"]
+    assert mq.dtype == jnp.int8
+    f32_bytes = 256 * 64 * 4
+    q_bytes = mq.size + state["m"]["w"]["sc"].size * 4
+    assert q_bytes < 0.4 * f32_bytes
+
+
+def test_lut_footprint_table2():
+    """Paper Tab. 2 scaling: entries 16/64/256, all fit L1/VMEM."""
+    for bits, entries in ((2, 16), (3, 64), (4, 256)):
+        fp = lut.lut_footprint(bits, entry_bytes=1)
+        assert fp["entries"] == entries
+        assert fp["fits_l1_paper"]
