@@ -13,9 +13,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-
-from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
+from repro.analysis.roofline import HBM_BW
 from repro.configs import get_config, reduce_for_smoke
 from repro.core import conv, qlinear
 from repro.core.qlinear import QuantPolicy

@@ -34,11 +34,12 @@ def run():
     c_s = jax.jit(f_scan).lower(x, ws).compile()
     c_u = jax.jit(f_unroll).lower(x, ws).compile()
     parsed = RL.parse_hlo(c_s.as_text()).dot_flops
+    ref_flops = RL.xla_cost(c_u)["flops"]
     rows.append({"case": "scan8-matmul",
-                 "xla_cost_analysis_flops": c_s.cost_analysis()["flops"],
-                 "unrolled_reference_flops": c_u.cost_analysis()["flops"],
+                 "xla_cost_analysis_flops": RL.xla_cost(c_s)["flops"],
+                 "unrolled_reference_flops": ref_flops,
                  "loop_aware_parser_flops": parsed,
-                 "parser_vs_ref": round(parsed / c_u.cost_analysis()["flops"], 4)})
+                 "parser_vs_ref": round(parsed / ref_flops, 4)})
 
     # case 2: reduced LM forward+loss (single superblock -> trip counts 1)
     key = jax.random.PRNGKey(0)
@@ -54,7 +55,7 @@ def run():
 
         comp = jax.jit(fwd).lower(params, tokens).compile()
         parsed = RL.parse_hlo(comp.as_text())
-        xla = comp.cost_analysis()["flops"]
+        xla = RL.xla_cost(comp)["flops"]
         rows.append({"case": f"{arch}-fwd-loss",
                      "xla_cost_analysis_flops": xla,
                      "unrolled_reference_flops": "",

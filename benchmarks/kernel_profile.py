@@ -12,7 +12,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lut, packing, quant
-from repro.kernels import ref
 
 from .common import emit, timeit
 

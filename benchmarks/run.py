@@ -9,6 +9,7 @@
   extra   hlo_validation      roofline parser vs XLA cost_analysis
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+       PYTHONPATH=src python -m benchmarks.run --smoke   # CI: <2 min + JSON
 """
 
 import argparse
@@ -22,7 +23,17 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true",
                     help="skip the slow QAT training benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast LUT-GEMM kernel-path subset; writes --json-out")
+    ap.add_argument("--json-out", default="BENCH_smoke.json",
+                    help="JSON result path for --smoke (CI artifact)")
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        from . import smoke
+        smoke.run(args.json_out)
+        print("smoke benchmark complete")
+        return 0
 
     from . import (accuracy_qat, bitwidth_scaling, end2end, hlo_validation,
                    kernel_profile, layer_speedup, packing_schemes)

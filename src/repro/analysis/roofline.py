@@ -47,6 +47,19 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 
+def xla_cost(compiled) -> dict:
+    """compiled.cost_analysis() as a flat dict across jax versions: jax 0.4.x
+    returns a one-entry list of per-program dicts, jax >= 0.5 the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        merged: dict = {}
+        for c in cost:
+            for k, v in c.items():
+                merged[k] = merged.get(k, 0.0) + v
+        return merged
+    return cost
+
+
 def shape_bytes(shape_str: str) -> int:
     """Total bytes of all array shapes inside a (possibly tuple) shape str."""
     total = 0
@@ -141,12 +154,14 @@ def _parse_op(line: str):
 
 def _operand_names(args: str) -> list[str]:
     """First-level operand names from an op's argument text."""
+    # brackets/braces nest too: some jax versions print operands with inline
+    # shapes+layouts ("f32[64,128]{1,0} %name") whose commas must not split
     out, depth, cur = [], 0, ""
     for ch in args:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
-        elif ch == ")":
-            if depth == 0:
+        elif ch in ")]}":
+            if ch == ")" and depth == 0:
                 break
             depth -= 1
         if ch == "," and depth == 0:

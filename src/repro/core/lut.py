@@ -20,12 +20,10 @@ LUT-65k : all dot products of 4-element 2-bit vectors -> 2^16 entries.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
-from .quant import Codebook, qrange, uniform_codebook
+from .quant import Codebook, qrange
 
 
 @dataclasses.dataclass(frozen=True)

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from . import packing, quant
-from .lut import ProductLUT, product_lut
+from .lut import product_lut
 from repro.kernels import ops as kops
 
 

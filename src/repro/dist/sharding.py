@@ -1,0 +1,314 @@
+"""Logical-axis sharding rules (GSPMD annotation layer).
+
+Model code never names mesh axes. Activations are annotated with *logical*
+axis names (``shard(x, "batch", "seq", ...)``) and parameters derive logical
+axes from their tree path (``logical_axes_for``). A *rule set* — one of
+``PRESETS`` — maps logical names to mesh axes; ``use_rules(mesh, rules)``
+activates a (mesh, rules) pair for the duration of a trace.
+
+Resolution is no-op-correct by construction, which is what lets the exact
+same model code run on one CPU device and on an N-device mesh:
+
+  * outside a ``use_rules`` context, ``shard`` is the identity;
+  * logical names with no rule (or rule ``None``) replicate;
+  * mesh axes absent from the current mesh are skipped (presets can mention
+    "pod" without requiring a multi-pod mesh);
+  * a mesh axis is consumed at most once per tensor (first dim wins);
+  * dims that do not divide the mesh-axis product degrade to replication
+    instead of erroring (51866-row vocab tables on a 4-way model axis).
+
+Rule values may be a mesh-axis name, a tuple of names (the dim shards over
+their product, e.g. batch over ("pod", "data")), or None.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+# --------------------------------------------------------------------------- #
+# Rule presets
+# --------------------------------------------------------------------------- #
+
+# Logical axes, by convention:
+#   activations: batch, seq, seq_sp (sequence-parallel residual), embed_act,
+#                heads_act, kv_heads_act, kv_seq, mlp_act, vocab_act,
+#                rnn_act, group, experts_act
+#   parameters : vocab, embed, heads, kv_heads, mlp, experts, rnn
+
+_TRAIN = {
+    # activations: DP over (pod, data), TP over model, sequence-parallel
+    # residual stream between the TP regions.
+    "batch": ("pod", "data"),
+    "group": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "model",
+    "embed_act": None,
+    "heads_act": "model",
+    "kv_heads_act": "model",
+    "kv_seq": None,
+    "mlp_act": "model",
+    "vocab_act": "model",
+    "rnn_act": "model",
+    "experts_act": "model",
+    # parameters: TP over model, FSDP-style shard of the embed dim over data.
+    "vocab": "model",
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "rnn": "model",
+}
+
+_TRAIN_DP = {
+    # pure data parallelism: the global batch shards over every mesh axis,
+    # parameters replicate (small models where TP is pure overhead).
+    "batch": ("pod", "data", "model"),
+    "group": ("pod", "data", "model"),
+}
+
+_SERVE = {
+    # decode: TP over model for weights and heads, batch over (pod, data),
+    # KV caches sharded along kv_seq (decode reads dominate HBM traffic).
+    "batch": ("pod", "data"),
+    "group": ("pod", "data"),
+    "seq": None,
+    "seq_sp": None,
+    "embed_act": None,
+    "heads_act": "model",
+    "kv_heads_act": "model",
+    "kv_seq": "model",
+    "mlp_act": "model",
+    "vocab_act": "model",
+    "rnn_act": "model",
+    "experts_act": "model",
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "rnn": "model",
+}
+
+_PREFILL = dict(_SERVE, seq="model", kv_seq=None, seq_sp="model")
+
+_LONG = dict(_SERVE, seq="model", seq_sp="model")
+
+PRESETS = {
+    "train": _TRAIN,
+    "train_dp": _TRAIN_DP,
+    "serve": _SERVE,
+    "prefill": _PREFILL,
+    "long": _LONG,
+}
+
+
+# --------------------------------------------------------------------------- #
+# Spec resolution
+# --------------------------------------------------------------------------- #
+def _axis_entry(dim: int, logical, mesh, rules: dict, used: set):
+    """Mesh axes for one tensor dim, or None (replicate)."""
+    if logical is None:
+        return None
+    target = rules.get(logical)
+    if target is None:
+        return None
+    if isinstance(target, str):
+        target = (target,)
+    picked = tuple(a for a in target if a in mesh.shape and a not in used)
+    if not picked:
+        return None
+    size = 1
+    for a in picked:
+        size *= mesh.shape[a]
+    if size <= 1 or dim % size != 0:
+        return None  # divisibility fallback: replicate, never error
+    used.update(picked)
+    return picked if len(picked) > 1 else picked[0]
+
+
+def spec_for(shape, logical_axes, mesh, rules: dict) -> PartitionSpec:
+    """Resolve logical axes for a concrete shape into a PartitionSpec.
+
+    Rank mismatches align to the trailing dims (leading scan-stacked layer
+    dims replicate). Trailing None entries are stripped so specs compare
+    equal to their canonical spelling (P("model"), not P("model", None)).
+    """
+    nd = len(shape)
+    axes = tuple(logical_axes)
+    if len(axes) < nd:
+        axes = (None,) * (nd - len(axes)) + axes
+    elif len(axes) > nd:
+        axes = axes[-nd:]
+    used: set = set()
+    entries = [_axis_entry(d, a, mesh, rules, used) for d, a in zip(shape, axes)]
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+# --------------------------------------------------------------------------- #
+# Activation constraints (the `shard()` used throughout models/)
+# --------------------------------------------------------------------------- #
+
+_CTX = threading.local()
+
+
+def _active():
+    stack = getattr(_CTX, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_rules(mesh, rules: dict):
+    """Activate (mesh, rules) for shard()/constrain_like_params() during a
+    trace. Nestable; thread-local so concurrent traces don't interfere."""
+    stack = getattr(_CTX, "stack", None)
+    if stack is None:
+        stack = _CTX.stack = []
+    stack.append((mesh, rules))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def shard(x: jax.Array, *logical_axes) -> jax.Array:
+    """Sharding constraint by logical axis names; identity when no rules are
+    active (single-device runs never pay for the annotation)."""
+    ctx = _active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(x.shape, logical_axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------- #
+# Parameter / tree spec derivation
+# --------------------------------------------------------------------------- #
+def _path_names(path) -> list:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            names.append(str(e.name))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            names.append(str(e.idx))
+        else:
+            names.append(str(e))
+    return names
+
+
+def _leaf_name(path) -> str:
+    names = _path_names(path)
+    return names[-1] if names else ""
+
+
+# dense weights (din, dout), keyed by the enclosing layer-dict name
+_DENSE_W_AXES = {
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "kv_heads"),
+    "wv": ("embed", "kv_heads"),
+    "wo": ("heads", "embed"),
+    "w_up": ("embed", "mlp"),
+    "w_gate": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+    "lm_head": ("embed", "vocab"),
+}
+
+# directly-named parameter leaves
+_LEAF_AXES = {
+    "tok_embed": ("vocab", None),
+    "in_embed": ("vocab", None),
+    "pos_embed": (None, "embed"),
+    "w_router": ("embed", None),
+    "we_gate": ("experts", "embed", "mlp"),
+    "we_up": ("experts", "embed", "mlp"),
+    "we_down": ("experts", "mlp", "embed"),
+}
+
+# optimizer-state leaf suffixes that wrap a parameter leaf:
+#   int8_adam  : {"q", "sc"} (shape-aligned codes/scales) or {"f"} (fallback)
+#   adafactor  : {"vr", "vc"} (factored second moment) or {"v"}
+_OPT_SUFFIXES = {"q", "sc", "f", "vr", "vc", "v"}
+
+
+def logical_axes_for(path, leaf) -> tuple:
+    """Logical axes for a parameter (or shape-aligned optimizer-moment) leaf.
+
+    Unknown leaves replicate. Leading scan-stacked layer dims are padded
+    with None; optimizer moment suffixes (q/sc/f/vr/vc/v) resolve to the
+    parent parameter's axes (vr/vc drop the factored-out dim).
+    """
+    nd = len(leaf.shape)
+    names = _path_names(path)
+    suffix = None
+    if len(names) >= 2 and names[-1] in _OPT_SUFFIXES:
+        suffix = names[-1]
+        names = names[:-1]
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    owner = names[-3] if len(names) >= 3 else ""
+
+    axes = None
+    if name in _LEAF_AXES:
+        axes = _LEAF_AXES[name]
+    elif name == "w" and parent in _DENSE_W_AXES:
+        axes = _DENSE_W_AXES[parent]
+    elif parent == "qw" and owner in _DENSE_W_AXES:
+        # packed serving weight: packed (out, in/f), scales (out,)
+        out_axis = _DENSE_W_AXES[owner][1]
+        if name == "packed":
+            axes = (out_axis, None)
+        elif name == "scales":
+            axes = (out_axis,)
+
+    if axes is None:
+        axes = (None,) * nd
+    if suffix == "vr":
+        axes = axes[:-1]
+    elif suffix == "vc":
+        axes = axes[:-2] + axes[-1:] if len(axes) >= 2 else axes
+
+    axes = tuple(axes)
+    if nd >= len(axes):
+        return (None,) * (nd - len(axes)) + axes
+    return (None,) * nd
+
+
+def tree_specs(tree, mesh, rules: dict, axes_fn) -> object:
+    """NamedSharding tree for an arbitrary pytree; ``axes_fn(path, leaf)``
+    supplies logical axes per leaf. Leaves may be arrays or SDS."""
+
+    def one(path, leaf):
+        spec = spec_for(leaf.shape, axes_fn(path, leaf), mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def param_specs(params, mesh, rules: dict) -> object:
+    """NamedSharding tree for a parameter (or gradient/moment) tree."""
+    return tree_specs(params, mesh, rules, logical_axes_for)
+
+
+def constrain_like_params(tree):
+    """Constrain a param-structured tree (gradients) to the parameter
+    shardings of the active rules; identity when no rules are active."""
+    ctx = _active()
+    if ctx is None:
+        return tree
+    mesh, rules = ctx
+
+    def one(path, leaf):
+        spec = spec_for(leaf.shape, logical_axes_for(path, leaf), mesh, rules)
+        return jax.lax.with_sharding_constraint(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(one, tree)

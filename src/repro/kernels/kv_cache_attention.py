@@ -21,8 +21,6 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import packing
-
 _NEG = -1e30
 
 

@@ -12,7 +12,6 @@ Backends:
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.lut import ProductLUT
 from . import ref as _ref

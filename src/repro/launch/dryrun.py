@@ -26,7 +26,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -193,7 +192,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = RL.xla_cost(compiled)
     hlo = compiled.as_text()
     stats = RL.parse_hlo(hlo, bf16_model=(meta["cfg"].dtype == "bfloat16"))
     rl = RL.roofline(stats, meta["cfg"], meta["shape"], n_dev,

@@ -13,18 +13,28 @@ Production target: TPU v5e pods, 256 chips each.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+
+def _mesh(shape: tuple, axes: tuple) -> Mesh:
+    # jax >= 0.5 takes explicit axis types (we want Auto everywhere so GSPMD
+    # propagates through un-annotated ops); jax 0.4.x has neither the
+    # AxisType enum nor the kwarg and defaults to the same behaviour.
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_cpu_mesh(shape: tuple, axes: tuple) -> Mesh:
     """Small mesh over however many (possibly fake) CPU devices exist —
     used by the 8-device sharded integration tests."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)

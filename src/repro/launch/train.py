@@ -19,14 +19,11 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import optim
 from repro.configs import SHAPES, ShapeConfig, get_config, reduce_for_smoke
 from repro.core.qlinear import QuantPolicy
 from repro.data import make_pipeline
-from repro.dist import sharding as Sh
 from repro.dist.fault import FaultConfig, run_resilient
 from repro.launch import steps as St
 

@@ -16,7 +16,6 @@ local layers.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
@@ -25,7 +24,6 @@ from jax.ad_checkpoint import checkpoint_name
 
 from repro.core import quant
 from repro.core.qlinear import QuantPolicy, QuantizedWeight, dequant_weight
-from repro.core import qlinear
 from repro.dist.sharding import shard
 
 

@@ -26,7 +26,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import qlinear
-from repro.core.qlinear import QuantizedWeight
 from repro.dist.sharding import shard
 from . import layers as L
 from . import recurrent as R

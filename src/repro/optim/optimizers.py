@@ -12,8 +12,7 @@ and is benign at these block sizes (cf. bitsandbytes 8-bit Adam).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, NamedTuple, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,166 @@
+"""Unit tests for repro.dist beyond the integration suite: rule resolution
+on trees (unknown leaf -> replicated), optimizer-moment suffix handling,
+single-device no-op behaviour, elastic_reshard shape handling, and the
+resilient-loop restart semantics — all on one CPU device."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import save_checkpoint
+from repro.dist import collectives, sharding as Sh
+from repro.dist.fault import FaultConfig, elastic_reshard, run_resilient
+from repro.dist.pipeline import gpipe_forward, split_stages
+from repro.launch.mesh import make_cpu_mesh
+
+
+def _mesh1():
+    return make_cpu_mesh((1, 1), ("data", "model"))
+
+
+# --------------------------------------------------------------------------- #
+# tree_specs / logical_axes_for rule resolution
+# --------------------------------------------------------------------------- #
+
+def test_tree_specs_unknown_leaf_replicates():
+    mesh = _mesh1()
+    tree = {"mystery": jnp.ones((6, 6)), "nested": {"novel_rnn_w": jnp.ones((4,))}}
+    specs = Sh.param_specs(tree, mesh, Sh.PRESETS["train"])
+    assert specs["mystery"].spec == P()
+    assert specs["nested"]["novel_rnn_w"].spec == P()
+
+
+def test_logical_axes_for_known_params():
+    tree = {"wq": {"w": jnp.ones((8, 16))},
+            "tok_embed": jnp.ones((32, 8)),
+            "blocks": {"l0": {"mlp": {"w_down": {"w": jnp.ones((3, 16, 8))}}}}}
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat["/".join(Sh._path_names(path))] = Sh.logical_axes_for(path, leaf)
+    assert flat["wq/w"] == ("embed", "heads")
+    assert flat["tok_embed"] == ("vocab", None)
+    # leading scan-stacked layer dim pads with None
+    assert flat["blocks/l0/mlp/w_down/w"] == (None, "mlp", "embed")
+
+
+def test_logical_axes_for_opt_moment_suffixes():
+    """int8_adam {"q","sc"} and adafactor {"vr","vc"} resolve to the parent
+    parameter's axes."""
+    tree = {"m": {"wq": {"w": {"q": jnp.ones((8, 16), jnp.int8),
+                               "sc": jnp.ones((8 // 8, 16))}}},
+            "f": {"wo": {"w": {"vr": jnp.ones((16,)),
+                               "vc": jnp.ones((8,))}}}}
+    got = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        got["/".join(Sh._path_names(path))] = Sh.logical_axes_for(path, leaf)
+    assert got["m/wq/w/q"] == ("embed", "heads")
+    assert got["m/wq/w/sc"] == ("embed", "heads")
+    assert got["f/wo/w/vr"] == ("heads",)          # (out-dim factored away)
+    assert got["f/wo/w/vc"] == ("embed",)
+
+
+def test_spec_for_single_device_is_fully_replicated():
+    mesh = _mesh1()
+    s = Sh.spec_for((64, 32), ("vocab", "embed"), mesh, Sh.PRESETS["train"])
+    assert s == P()
+
+
+def test_shard_is_identity_outside_use_rules():
+    x = jnp.ones((4, 4))
+    assert Sh.shard(x, "batch", "embed_act") is x
+
+
+def test_spec_for_skips_axes_missing_from_mesh():
+    """Presets mention "pod"; a pod-less mesh must resolve without it."""
+    mesh = _mesh1()
+    s = Sh.spec_for((8,), ("batch",), mesh, {"batch": ("pod", "data")})
+    assert s == P()  # data has size 1 -> replicated, pod absent -> skipped
+
+
+# --------------------------------------------------------------------------- #
+# fault: elastic_reshard shape handling + resilient loop on a single device
+# --------------------------------------------------------------------------- #
+
+def test_elastic_reshard_single_device(tmp_path):
+    tree = {"tok_embed": jnp.arange(32.0).reshape(8, 4),
+            "wq": {"w": jnp.ones((4, 6))}}
+    save_checkpoint(str(tmp_path / "ck"), 3, tree)
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored, step, _ = elastic_reshard(
+        str(tmp_path / "ck"), template, _mesh1(), Sh.PRESETS["train"],
+        Sh.param_specs)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # committed to the (trivial) mesh, fully replicated
+    assert restored["tok_embed"].sharding.shard_shape((8, 4)) == (8, 4)
+
+
+def test_run_resilient_crash_matches_plain(tmp_path):
+    def step_fn(state, batch):
+        x = state["x"] + batch
+        return {"x": x}, {"loss": x * x}
+
+    def batch_fn(step):
+        return jnp.asarray(step + 1.0)
+
+    def run(d, inject):
+        fc = FaultConfig(ckpt_dir=str(tmp_path / d), ckpt_every=2)
+        return run_resilient({"x": jnp.zeros(())}, step_fn, batch_fn, 6, fc,
+                             inject_failure_at=inject)
+
+    s_plain, log_plain = run("a", None)
+    s_crash, log_crash = run("b", {4})
+    assert float(s_plain["x"]) == float(s_crash["x"]) == 21.0
+    plain = {m["step"]: float(m["loss"]) for m in log_plain}
+    crash = {m["step"]: float(m["loss"]) for m in log_crash}
+    assert plain == crash and sorted(plain) == list(range(6))
+
+
+def test_run_resilient_finished_run_is_noop(tmp_path):
+    def step_fn(state, batch):
+        return {"x": state["x"] + 1.0}, {"loss": state["x"]}
+
+    fc = FaultConfig(ckpt_dir=str(tmp_path / "ck"), ckpt_every=2)
+    s1, log1 = run_resilient({"x": jnp.zeros(())}, step_fn, lambda s: None,
+                             4, fc)
+    s2, log2 = run_resilient({"x": jnp.zeros(())}, step_fn, lambda s: None,
+                             4, fc)
+    assert float(s1["x"]) == float(s2["x"]) == 4.0 and log2 == []
+
+
+# --------------------------------------------------------------------------- #
+# collectives codec + pipeline stage math (deterministic, hypothesis-free)
+# --------------------------------------------------------------------------- #
+
+def test_int8_blockwise_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(200,)) * 3.0, jnp.float32)
+    q, sc = collectives.quantize_int8_blockwise(x)
+    xr = collectives.dequantize_int8_blockwise(q, sc, x.shape)
+    bound = np.repeat(np.asarray(sc), collectives._BLOCK)[:200] * 0.5 + 1e-7
+    assert (np.abs(np.asarray(x - xr)) <= bound).all()
+
+
+def test_split_stages_rejects_uneven():
+    import pytest
+    with pytest.raises(ValueError):
+        split_stages(jnp.ones((5, 2, 2)), 2)
+
+
+def test_gpipe_single_stage_is_plain_vmap():
+    ws = jnp.full((1, 2, 3, 3), 0.1)
+
+    def stage_fn(params, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, x, params)
+        return y
+
+    x_micro = jnp.ones((3, 2, 3))
+    out = gpipe_forward(stage_fn, ws, x_micro)
+    want = jax.vmap(lambda x: stage_fn(ws[0], x))(x_micro)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)

@@ -6,7 +6,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import optim
 from repro.checkpoint import (AsyncCheckpointer, latest_step,

@@ -1,7 +1,6 @@
 """Per-kernel correctness: Pallas (interpret=True on CPU) vs pure-jnp ref
 across shapes, bitwidths, packing schemes and lookup implementations."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config, reduce_for_smoke
-from repro.core.qlinear import QuantPolicy, QuantizedWeight, dequant_weight
+from repro.core.qlinear import QuantizedWeight, dequant_weight
 from repro.models import frontends, lm
 from repro.models import recurrent as R
 

@@ -1,9 +1,11 @@
 """Hypothesis property tests on the system's invariants."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import lut, packing, quant
 from repro.dist import collectives
@@ -129,7 +131,6 @@ def test_ring_fold_matches_ring_update(seed, b, s):
     """prefill_to_cache ring layout == incremental _ring_update writes."""
     from repro.models.layers import _ring_update
     from repro.models import lm as LM
-    import dataclasses as dc
     from repro.configs import get_config, reduce_for_smoke
     cfg = reduce_for_smoke(get_config("h2o-danube-3-4b"))
     W = cfg.window

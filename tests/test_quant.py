@@ -8,8 +8,7 @@ import pytest
 
 from repro import optim
 from repro.core import lut, quant
-from repro.core.qlinear import (QuantPolicy, dense_apply, dense_init,
-                                dense_serve, dequant_weight, qat_init,
+from repro.core.qlinear import (QuantPolicy, dense_serve, dequant_weight,
                                 quantize_expert_weight, quantize_weight)
 
 KEY = jax.random.PRNGKey(0)

@@ -1,11 +1,8 @@
 """Continuous-batching scheduler: determinism vs isolated decoding, slot
 reuse, utilization accounting."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.models import lm
