@@ -24,21 +24,26 @@ def main(argv=None) -> int:
     ap.add_argument("--fast", action="store_true",
                     help="skip the slow QAT training benchmark")
     ap.add_argument("--smoke", action="store_true",
-                    help="fast LUT-GEMM kernel-path subset; writes --json-out")
+                    help="fast LUT-GEMM kernel + serving-engine subset; "
+                         "writes --json-out and --serving-json-out")
     ap.add_argument("--json-out", default="BENCH_smoke.json",
                     help="JSON result path for --smoke (CI artifact)")
+    ap.add_argument("--serving-json-out", default="BENCH_serving.json",
+                    help="JSON result path for the serving smoke benchmark")
     args = ap.parse_args(argv)
 
     if args.smoke:
-        from . import smoke
+        from . import serving, smoke
         smoke.run(args.json_out)
+        serving.run(args.serving_json_out)
         print("smoke benchmark complete")
         return 0
 
     from . import (accuracy_qat, bitwidth_scaling, end2end, hlo_validation,
-                   kernel_profile, layer_speedup, packing_schemes)
+                   kernel_profile, layer_speedup, packing_schemes, serving)
 
     benches = {
+        "serving": serving.run,
         "bitwidth_scaling": bitwidth_scaling.run,
         "packing_schemes": packing_schemes.run,
         "kernel_profile": kernel_profile.run,

@@ -2,3 +2,4 @@
 from . import ops, ref  # noqa: F401
 from .lut_gemm import lut_gemm_pallas  # noqa: F401
 from .lut_dequant_matmul import dequant_matmul_pallas  # noqa: F401
+from .paged_attention import paged_attention_pallas  # noqa: F401

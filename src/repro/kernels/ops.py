@@ -19,6 +19,7 @@ from .lut_gemm import lut_gemm_pallas
 from .lut_dequant_matmul import dequant_matmul_pallas
 from .expert_dequant_matmul import expert_dequant_matmul_pallas
 from .kv_cache_attention import kv_cache_attention_pallas
+from .paged_attention import paged_attention_pallas
 
 
 def _on_tpu() -> bool:
@@ -125,3 +126,27 @@ def kv_cache_attention(
     return kv_cache_attention_pallas(
         q, k_packed, k_sc, v_packed, v_sc, lengths,
         bits=bits, bs=bs, interpret=(b == "pallas_interpret"))
+
+
+def paged_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    k_sc: jax.Array,
+    v_pool: jax.Array,
+    v_sc: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    bits: int = 4,
+    backend: str = "auto",
+) -> jax.Array:
+    """Decode attention over a paged (block-pooled) packed KV cache: K/V
+    blocks are gathered through per-sequence block tables (serving engine
+    layout, serving/cache.py) with dequant fused in-kernel."""
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.ref_paged_attention(q, k_pool, k_sc, v_pool, v_sc,
+                                        block_tables, lengths, bits)
+    return paged_attention_pallas(
+        q, k_pool, k_sc, v_pool, v_sc, block_tables, lengths,
+        bits=bits, interpret=(b == "pallas_interpret"))

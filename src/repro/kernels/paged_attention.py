@@ -1,0 +1,139 @@
+"""Paged decode attention over a block-pooled packed KV cache.
+
+TPU-native realization of the serving engine's decode hot loop: the cache
+lives in HBM as a pool of fixed-size blocks of PACKED rows (int8 or 4-bit
+codes + per-(token, head) scales, see serving/cache.py), and each sequence
+owns a *block table* mapping its logical block j to a physical block id.
+
+The kernel keeps the dequant-in-kernel path of kv_cache_attention: packed
+codes move HBM -> VMEM, unpack + codebook-dequant happen tile-wise fused
+into an online-softmax accumulation, so HBM traffic stays at 1/2 (int8) or
+1/4 (int4) of bf16 bytes — now with one indirection so the bytes read are
+exactly the blocks the sequence owns.
+
+The block-table indirection uses scalar prefetch (PrefetchScalarGridSpec):
+tables and lengths are prefetched to SMEM before the body runs, and the
+k/v BlockSpec index maps read them to pick the physical block for grid
+step (b, j) — the DMA engine then fetches k_pool[tables[b, j]] directly.
+Grid: (B, nb_max); each step folds one (block_size, KV, hd) tile into the
+running (m, l, acc) accumulators, masked to the sequence length.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .kv_cache_attention import _NEG, _dequant_tile
+
+
+def _paged_attn_kernel(tbl_ref, len_ref, q_ref, k_ref, ksc_ref, v_ref,
+                       vsc_ref, o_ref, m_ref, l_ref, *, bits: int, bs: int,
+                       scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    j_steps = pl.num_programs(1)
+    del tbl_ref  # consumed by the index maps (scalar prefetch)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+        m_ref[0] = jnp.full_like(m_ref[0], _NEG)
+        l_ref[0] = jnp.zeros_like(l_ref[0])
+
+    k = _dequant_tile(k_ref, ksc_ref, bits)            # (bs, KV, hd)
+    v = _dequant_tile(v_ref, vsc_ref, bits)
+    q = q_ref[0].astype(jnp.float32)                   # (KV, G, hd)
+
+    sc = jnp.einsum("egh,seh->egs", q, k) * scale      # (KV, G, bs)
+    pos = j * bs + jnp.arange(bs)
+    mask = pos < len_ref[b]
+    sc = jnp.where(mask[None, None, :], sc, _NEG)
+
+    m_prev, l_prev = m_ref[0], l_ref[0]                # (KV, G)
+    m_new = jnp.maximum(m_prev, sc.max(-1))
+    p = jnp.exp(sc - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(-1)
+    pv = jnp.einsum("egs,seh->egh", p, v)              # (KV, G, hd)
+    o_ref[0] = o_ref[0] * corr[..., None] + pv
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(j == j_steps - 1)
+    def _done():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[..., None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "interpret"))
+def paged_attention_pallas(
+    q: jax.Array,             # (B, KV, G, hd) single-position queries
+    k_pool: jax.Array,        # (n_blocks, bs, KV, hd/f) uint8/int8 codes
+    k_sc: jax.Array,          # (n_blocks, bs, KV) f32
+    v_pool: jax.Array,
+    v_sc: jax.Array,
+    block_tables: jax.Array,  # (B, nb_max) int32 physical block ids
+    lengths: jax.Array,       # (B,) valid context lengths
+    *,
+    bits: int = 4,
+    interpret: bool = False,
+) -> jax.Array:
+    """out (B, KV, G, hd) f32 = softmax(q k^T / sqrt(hd)) v over the paged
+    packed cache, gathering K/V blocks via ``block_tables`` and masking to
+    ``lengths``. Table entries beyond a sequence's context may point
+    anywhere (e.g. the null block); their scores mask to exact zeros."""
+    B, KV, G, hd = q.shape
+    bs = k_pool.shape[1]
+    nb_max = block_tables.shape[1]
+    grid = (B, nb_max)
+    kernel = functools.partial(_paged_attn_kernel, bits=bits, bs=bs,
+                               scale=hd ** -0.5)
+
+    def q_map(b, j, tbl, lens):
+        return (b, 0, 0, 0)
+
+    def kv_map(b, j, tbl, lens):
+        return (tbl[b, j], 0, 0, 0)
+
+    def sc_map(b, j, tbl, lens):
+        return (tbl[b, j], 0, 0)
+
+    def o_map(b, j, tbl, lens):
+        return (b, 0, 0, 0)
+
+    def acc_map(b, j, tbl, lens):
+        return (b, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # block_tables, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), q_map),
+            pl.BlockSpec((1, bs, KV, k_pool.shape[-1]), kv_map),
+            pl.BlockSpec((1, bs, KV), sc_map),
+            pl.BlockSpec((1, bs, KV, v_pool.shape[-1]), kv_map),
+            pl.BlockSpec((1, bs, KV), sc_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, KV, G, hd), o_map),
+            pl.BlockSpec((1, KV, G), acc_map),
+            pl.BlockSpec((1, KV, G), acc_map),
+        ],
+    )
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pool, k_sc, v_pool, v_sc)
+    return out

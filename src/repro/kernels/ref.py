@@ -130,3 +130,26 @@ def ref_kv_cache_attention(
     s = jnp.where(mask[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("begs,bseh->begh", p, vd)
+
+
+def ref_paged_attention(
+    q: jax.Array,             # (B, KV, G, hd)
+    k_pool: jax.Array,        # (n_blocks, bs, KV, hd/f)
+    k_sc: jax.Array,          # (n_blocks, bs, KV)
+    v_pool: jax.Array,
+    v_sc: jax.Array,
+    block_tables: jax.Array,  # (B, nb_max)
+    lengths: jax.Array,       # (B,)
+    bits: int,
+) -> jax.Array:
+    """Oracle: gather each sequence's blocks into a dense view, then run the
+    flat packed-cache attention oracle over it."""
+    B, nb = block_tables.shape
+    bs = k_pool.shape[1]
+
+    def view(pool):
+        g = pool[block_tables]                      # (B, nb, bs, ...)
+        return g.reshape(B, nb * bs, *pool.shape[2:])
+
+    return ref_kv_cache_attention(q, view(k_pool), view(k_sc),
+                                  view(v_pool), view(v_sc), lengths, bits)

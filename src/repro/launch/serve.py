@@ -6,6 +6,15 @@ CPU-runnable on reduced configs; the decode step is the same function the
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
       --batch 4 --prompt-len 32 --gen 16
+
+``--paged`` drives the continuous-batching Engine (serving/engine.py)
+instead of the fixed-batch loop: a mixed-length request stream is admitted
+through chunked prefill into the paged block-pool cache, with per-token
+streaming, admission control (``--max-queue``) and preemption on block
+exhaustion:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+      --paged --requests 12 --block-size 16 --gen 16
 """
 
 from __future__ import annotations
@@ -21,6 +30,51 @@ from repro.configs import get_config, reduce_for_smoke
 from repro.core.qlinear import QuantPolicy
 from repro.models import lm, frontends
 from repro.launch import steps as St
+from repro.serving import Engine, Request
+
+
+def serve_paged(cfg, qparams, args) -> int:
+    """Continuous-batching serve loop over the paged engine."""
+    key = jax.random.PRNGKey(args.seed)
+    max_len = args.prompt_len + args.gen + args.block_size
+    max_len = -(-max_len // args.block_size) * args.block_size
+    engine = Engine(cfg, qparams, n_slots=args.batch, max_len=max_len,
+                    block_size=args.block_size, max_queue=args.max_queue)
+    t0 = time.time()
+    first_tok: dict[int, float] = {}
+
+    def stream(uid):
+        def cb(tok, done):
+            first_tok.setdefault(uid, time.time())
+            if done:
+                print(f"  [req {uid}] done at +{time.time()-t0:.2f}s")
+        return cb
+
+    lens = jax.random.randint(key, (args.requests,), 4,
+                              args.prompt_len + 1)
+    reqs = []
+    for i in range(args.requests):
+        P = int(lens[i])
+        prompt = jax.random.randint(jax.random.fold_in(key, i), (P,),
+                                    0, cfg.vocab_size)
+        r = Request(uid=i, prompt=prompt, max_new=args.gen,
+                    on_token=stream(i))
+        reqs.append(r)
+        if not engine.submit(r):
+            print(f"  [req {i}] rejected (queue full)")
+    m = engine.run()
+    dt = time.time() - t0
+    done = [r for r in reqs if r.done]
+    n_tok = sum(len(r.out) for r in done)
+    ttfts = [first_tok[r.uid] - t0 for r in done if r.uid in first_tok]
+    print(f"  paged engine: {len(done)}/{len(reqs)} requests, {n_tok} tokens "
+          f"in {dt:.2f}s ({len(done)/max(dt, 1e-9):.2f} req/s, "
+          f"{n_tok/max(dt, 1e-9):.1f} tok/s)")
+    print(f"  mean TTFT {1e3*sum(ttfts)/max(len(ttfts),1):.0f} ms | "
+          f"decode steps {m['decode_steps']}, prefill chunks "
+          f"{m['prefill_chunks']}, preemptions {m['preemptions']}, "
+          f"util {m['slot_utilization']:.2f}, jit entries {m['n_compiles']}")
+    return 0
 
 
 def main():
@@ -34,6 +88,14 @@ def main():
     ap.add_argument("--nonuniform", action="store_true",
                     help="k-means codebook (paper §5.3 non-uniform support)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged continuous-batching engine")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV-cache block size (tokens)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="engine admission queue bound")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="number of mixed-length requests (--paged)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -54,6 +116,9 @@ def main():
     q_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(qparams))
     print(f"  packed in {time.time()-t0:.2f}s: {bf16_bytes/1e6:.1f} MB bf16 "
           f"-> {q_bytes/1e6:.1f} MB packed ({bf16_bytes/q_bytes:.2f}x)")
+
+    if args.paged:
+        return serve_paged(cfg, qparams, args)
 
     kw = {}
     if cfg.is_encdec:

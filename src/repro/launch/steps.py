@@ -82,6 +82,69 @@ def make_train_step(cfg, optimizer: optim.Optimizer, *, mode: str = "qat",
     return train_step
 
 
+def init_dp_err(params, n_dp: int) -> dict:
+    """Per-replica error-feedback residuals for compressed DP gradient
+    reduction (one leading replica axis, sharded over the dp mesh axis)."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_dp,) + p.shape, jnp.float32), params)
+
+
+def make_dp_train_step(cfg, optimizer: optim.Optimizer, mesh, *,
+                       mode: str = "qat", clip: float = 1.0,
+                       compressed: bool = False, axis: str = "data"):
+    """Explicit data-parallel train step: shard_map over ``axis`` with the
+    batch split across replicas and gradients mean-reduced across the wire.
+
+    ``compressed=True`` routes the reduction through
+    ``dist.collectives.compressed_psum`` — int8 block-64 codes on the wire
+    (4x fewer DCN bytes than f32) with per-replica error feedback carried
+    in ``state["dp_err"]`` (init via ``init_dp_err``; required only when
+    compressed), so quantization bias telescopes across steps instead of
+    accumulating. This is the ``--compressed-dp`` path of launch/train.py.
+    """
+    from repro.dist import collectives
+
+    loss_fn = make_loss_fn(cfg, mode=mode)
+    P = jax.sharding.PartitionSpec
+
+    def step(state, batch):
+        params, opt_state = state["params"], state["opt_state"]
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads = sharding.constrain_like_params(grads)
+        loss = jax.lax.pmean(loss, axis)
+        if compressed:
+            flat_g, tdef = jax.tree_util.tree_flatten(grads)
+            flat_e = tdef.flatten_up_to(state["dp_err"])
+            pairs = [collectives.compressed_psum(g, axis, e[0])
+                     for g, e in zip(flat_g, flat_e)]
+            grads = jax.tree_util.tree_unflatten(tdef, [g for g, _ in pairs])
+            new_err = jax.tree_util.tree_unflatten(
+                tdef, [e[None] for _, e in pairs])
+        else:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+            new_err = None
+        grads, gnorm = optim.clip_by_global_norm(grads, clip)
+        updates, opt_state, om = optimizer.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        new_state = {"params": params, "opt_state": opt_state,
+                     "step": state["step"] + 1}
+        if new_err is not None:
+            new_state["dp_err"] = new_err
+        metrics = {"loss": loss, "grad_norm": gnorm, **om}
+        return new_state, metrics
+
+    rep = P()
+    state_spec = {"params": rep, "opt_state": rep, "step": rep}
+    if compressed:
+        state_spec["dp_err"] = P(axis)
+    sharded = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(state_spec, P(axis)),
+        out_specs=(state_spec, rep),
+        check_rep=False)
+    return sharded
+
+
 def make_prefill_step(cfg, *, mode: str = "plain", max_len: Optional[int] = None):
     """(params, batch) -> (last-position logits, decode-ready caches).
 

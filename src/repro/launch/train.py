@@ -66,6 +66,9 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--compressed-dp", action="store_true",
+                    help="int8 error-feedback gradient all-reduce over the "
+                         "data axis (dist.collectives.compressed_psum)")
     args = ap.parse_args()
 
     cfg, shape, opt = build(args)
@@ -75,8 +78,20 @@ def main():
 
     key = jax.random.PRNGKey(args.seed)
     state = St.init_train_state(key, cfg, opt, mode="qat")
-    step_fn = jax.jit(St.make_train_step(cfg, opt, mode="qat"),
-                      donate_argnums=(0,))
+    if args.compressed_dp:
+        from repro.launch.mesh import make_cpu_mesh
+        n_dp = len(jax.devices())
+        assert shape.global_batch % n_dp == 0, (shape.global_batch, n_dp)
+        mesh = make_cpu_mesh((n_dp,), ("data",))
+        state["dp_err"] = St.init_dp_err(state["params"], n_dp)
+        print(f"[train] compressed DP all-reduce over {n_dp} replicas "
+              f"(int8 block-64 wire + error feedback)")
+        step_fn = jax.jit(St.make_dp_train_step(cfg, opt, mesh, mode="qat",
+                                                compressed=True),
+                          donate_argnums=(0,))
+    else:
+        step_fn = jax.jit(St.make_train_step(cfg, opt, mode="qat"),
+                          donate_argnums=(0,))
     pipe = make_pipeline(cfg, shape, seed=args.seed)
 
     fc = FaultConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)

@@ -317,6 +317,7 @@ def attn_apply(
     cache: Optional[dict] = None,            # {"k","v"} (+ ring) or {"xk","xv"}
     pos: Optional[jax.Array] = None,         # (B,) decode position
     segments: Optional[jax.Array] = None,    # (B,S) packed-sequence ids
+    block_tables: Optional[jax.Array] = None,  # (B, nb) paged-cache tables
 ) -> tuple[jax.Array, Optional[dict]]:
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -352,7 +353,64 @@ def attn_apply(
             q = apply_rope(q.reshape(B, S, H, hd), positions, cfg.rope_theta,
                            cfg.mrope_sections).reshape(B, S, KV, G, hd)
             k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
-        if cache is not None:                 # decode: S == 1
+        if cache is not None and block_tables is not None:
+            # Paged cache (serving engine): the layer cache is a shared block
+            # pool (n_blocks, bs_tok, KV, ...) and block_tables maps each
+            # row's logical block j to a physical block. Gather the slot's
+            # blocks into a dense (B, S_view) view, update rows
+            # [pos, pos + S), attend with the SAME masked math as the dense
+            # path (bit-identical on equal view lengths), then scatter only
+            # the written rows back into the pool.
+            bs_tok = cache["k"].shape[1]
+            nb = block_tables.shape[1]
+            S_view = nb * bs_tok
+            int8_cache = cfg.kv_cache_dtype in KV_QUANT and "k_sc" in cache
+            if int8_cache:
+                qf, dqf = KV_QUANT[cfg.kv_cache_dtype]
+                k, k_sc = qf(k)
+                v, v_sc = qf(v)
+
+            def gather(pool):
+                g = pool[block_tables]                   # (B, nb, bs_tok, ..)
+                return g.reshape(B, S_view, *pool.shape[2:])
+
+            kc = _cache_update(gather(cache["k"]), k, pos)
+            vc = _cache_update(gather(cache["v"]), v, pos)
+            if int8_cache:
+                ksc = _cache_update(gather(cache["k_sc"]), k_sc, pos)
+                vsc = _cache_update(gather(cache["v_sc"]), v_sc, pos)
+                kd, vd = dqf(kc, ksc), dqf(vc, vsc)
+            else:
+                kd, vd = kc, vc
+
+            if S == 1:                                   # decode step
+                valid = jnp.arange(S_view)[None, :] <= pos[:, None]
+                if window is not None:  # local layer: paged by absolute
+                    # position, masked to the window (not ring-folded)
+                    valid &= jnp.arange(S_view)[None, :] > pos[:, None] - window
+                out = decode_attention(q, kd, vd, valid)
+            else:                                        # chunked prefill
+                # single-request chunk (B == 1); the causal mask from
+                # q_offset also blanks the not-yet-written pool tail
+                # (exact zeros after softmax, so garbage rows are inert)
+                out = flash_attention(q, kd, vd, causal=True, window=window,
+                                      q_offset=pos[0])
+
+            rows = pos[:, None] + jnp.arange(S)[None, :]             # (B, S)
+            blk = jnp.take_along_axis(
+                block_tables, jnp.minimum(rows // bs_tok, nb - 1), axis=1)
+            offs = rows % bs_tok
+
+            def scatter(pool, new):
+                return pool.at[blk.reshape(-1), offs.reshape(-1)].set(
+                    new.reshape(B * S, *new.shape[2:]).astype(pool.dtype))
+
+            new_cache = {"k": scatter(cache["k"], k),
+                         "v": scatter(cache["v"], v)}
+            if int8_cache:
+                new_cache["k_sc"] = scatter(cache["k_sc"], k_sc)
+                new_cache["v_sc"] = scatter(cache["v_sc"], v_sc)
+        elif cache is not None:               # dense slot cache, decode S == 1
             int8_cache = cfg.kv_cache_dtype in KV_QUANT and "k_sc" in cache
             if int8_cache:
                 qf, dqf = KV_QUANT[cfg.kv_cache_dtype]

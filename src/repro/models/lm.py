@@ -181,7 +181,7 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
 # --------------------------------------------------------------------------- #
 
 def _apply_layer(p: dict, x, *, cfg, layer_type, is_moe, mode, positions,
-                 enc_out, cache, pos, segments=None):
+                 enc_out, cache, pos, segments=None, block_tables=None):
     new_cache: dict = {}
     if layer_type == "rwkv":
         y, st = R.rwkv_apply(p["rwkv"], x, cfg=cfg, mode=mode,
@@ -198,7 +198,8 @@ def _apply_layer(p: dict, x, *, cfg, layer_type, is_moe, mode, positions,
         y, kv = L.attn_apply(p["attn"], h, cfg=cfg, layer_type=layer_type,
                              mode=mode, positions=positions,
                              cache=cache.get("attn") if cache else None,
-                             pos=pos, segments=segments)
+                             pos=pos, segments=segments,
+                             block_tables=block_tables)
         if kv is not None:
             new_cache["attn"] = kv
     x = x + y
@@ -223,14 +224,16 @@ def _apply_layer(p: dict, x, *, cfg, layer_type, is_moe, mode, positions,
 
 
 def _apply_superblock(p: dict, x, cache, *, cfg, pattern, moe_flags, mode,
-                      positions, enc_out, pos, segments=None):
+                      positions, enc_out, pos, segments=None,
+                      block_tables=None):
     new_cache = {}
     for i, lt in enumerate(pattern):
         lc = cache.get(f"l{i}") if cache else None
         x, nc = _apply_layer(p[f"l{i}"], x, cfg=cfg, layer_type=lt,
                              is_moe=moe_flags[i], mode=mode,
                              positions=positions, enc_out=enc_out,
-                             cache=lc, pos=pos, segments=segments)
+                             cache=lc, pos=pos, segments=segments,
+                             block_tables=block_tables)
         new_cache[f"l{i}"] = nc
     return x, new_cache
 
@@ -299,11 +302,15 @@ def forward(
     pos: Optional[jax.Array] = None,         # (B,) decode position
     segments: Optional[jax.Array] = None,    # (B,S) sequence-packing ids
     collect_cache: bool = False,
+    block_tables: Optional[jax.Array] = None,  # (B, nb) paged-cache tables
 ):
     """Token ids -> final hidden states (B, S, D). Returns (hidden, new_caches).
 
     Train/prefill: caches=None (collect_cache=True to get prefill KV).
     Decode: caches given, S == 1, pos (B,).
+    Paged serving (serving/engine.py): caches hold shared block pools,
+    block_tables map each batch row's logical blocks to physical blocks;
+    S == 1 is a batched decode step, S > 1 a single-request prefill chunk.
     """
     B, S = tokens.shape
     dtype = jnp.dtype(cfg.dtype)
@@ -327,7 +334,8 @@ def forward(
                              else (False,) * len(cfg.pattern))
     sb_fn = functools.partial(_apply_superblock, cfg=cfg, pattern=cfg.pattern,
                               moe_flags=mp, mode=mode, positions=positions,
-                              enc_out=enc_out, pos=pos, segments=segments)
+                              enc_out=enc_out, pos=pos, segments=segments,
+                              block_tables=block_tables)
 
     new_caches: dict = {}
     if "blocks" in params:
@@ -376,7 +384,8 @@ def forward(
             x, nc = _apply_layer(params["rem"][f"r{i}"], x, cfg=cfg,
                                  layer_type=lt, is_moe=mp[i], mode=mode,
                                  positions=positions, enc_out=enc_out,
-                                 cache=lc, pos=pos, segments=segments)
+                                 cache=lc, pos=pos, segments=segments,
+                                 block_tables=block_tables)
             rem_cache[f"r{i}"] = nc
         if caches is not None or collect_cache:
             new_caches["rem"] = rem_cache

@@ -1,1 +1,3 @@
-from .scheduler import ContinuousBatcher, Request  # noqa: F401
+from .cache import BlockPool, init_paged_cache  # noqa: F401
+from .engine import Engine, Request  # noqa: F401
+from .scheduler import ContinuousBatcher  # noqa: F401

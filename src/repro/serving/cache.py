@@ -1,0 +1,302 @@
+"""Paged KV-cache block pool for the serving engine.
+
+The dense slot cache reserves ``n_slots x max_len`` rows per attention layer
+regardless of actual prompt lengths. The paged pool instead carves each
+layer's cache into fixed-size blocks of ``block_size`` token rows; a request
+holds a *block table* (logical block j -> physical block id) and only as many
+blocks as its context actually needs. Freed blocks return to a shared free
+list, so short and long requests coexist without fragmenting HBM — the
+vLLM / PagedAttention memory model realized over this repo's quantized
+sub-byte cache storage (int8 / packed-int4 codes + per-(token, head) scales,
+reusing ``core/packing`` via the layers.KV_QUANT codecs).
+
+Layout per attention layer (global AND local — local layers are paged by
+absolute position and masked to the window at attention time):
+
+  bfloat16 : k, v        (n_blocks, block_size, KV, hd)
+  int8     : k, v int8   (n_blocks, block_size, KV, hd)   + k_sc/v_sc f32
+  int4     : k, v uint8  (n_blocks, block_size, KV, hd/2) + k_sc/v_sc f32
+
+Physical block 0 is reserved as the NULL block: free slots' tables point at
+it, and writes from inactive decode rows land there. Its contents are
+garbage by design and are always masked to exact zeros in attention.
+
+Recurrent / RWKV layer state is O(1) per request and stays per-slot (leading
+``n_slots`` axis), exactly as in ``lm.init_cache``; ``slot_slice`` /
+``slot_merge`` move one slot's state in and out of the batched tree for the
+single-request chunked-prefill step.
+
+Refcounts are tracked per block so a future prefix-sharing / radix cache can
+alias blocks between requests; today every block has refcount 0 or 1.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import recurrent as R
+
+
+NULL_BLOCK = 0
+
+# cache-tree keys holding per-slot (non-paged) state
+_PER_SLOT_KEYS = ("rnn", "rwkv", "cross")
+
+
+class BlockPool:
+    """Host-side allocator over the physical block ids of a paged cache.
+
+    Block 0 is the null block and is never handed out. ``alloc`` is
+    all-or-nothing: either every requested block is granted or none are
+    (the caller then preempts and retries).
+    """
+
+    def __init__(self, n_blocks: int):
+        assert n_blocks >= 2, "pool needs >= 1 allocatable block + null block"
+        self.n_blocks = n_blocks
+        self._free: deque[int] = deque(range(1, n_blocks))
+        self._refs = [0] * n_blocks
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        if n > len(self._free):
+            return None
+        ids = [self._free.popleft() for _ in range(n)]
+        for b in ids:
+            self._refs[b] = 1
+        return ids
+
+    def ref(self, ids: list[int]) -> None:
+        """Increment refcounts (prefix sharing hook; unused by the engine)."""
+        for b in ids:
+            assert self._refs[b] > 0, f"ref on unallocated block {b}"
+            self._refs[b] += 1
+
+    def free(self, ids: list[int]) -> None:
+        for b in ids:
+            assert self._refs[b] > 0, f"double free of block {b}"
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                self._free.append(b)
+
+
+# --------------------------------------------------------------------------- #
+# Paged cache tree
+# --------------------------------------------------------------------------- #
+
+def _paged_attn_cache(cfg, n_blocks: int, block_size: int, dtype) -> dict:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros((n_blocks, block_size, KV, hd), jnp.int8),
+                "v": jnp.zeros((n_blocks, block_size, KV, hd), jnp.int8),
+                "k_sc": jnp.zeros((n_blocks, block_size, KV), jnp.float32),
+                "v_sc": jnp.zeros((n_blocks, block_size, KV), jnp.float32)}
+    if cfg.kv_cache_dtype == "int4":
+        return {"k": jnp.zeros((n_blocks, block_size, KV, hd // 2), jnp.uint8),
+                "v": jnp.zeros((n_blocks, block_size, KV, hd // 2), jnp.uint8),
+                "k_sc": jnp.zeros((n_blocks, block_size, KV), jnp.float32),
+                "v_sc": jnp.zeros((n_blocks, block_size, KV), jnp.float32)}
+    return {"k": jnp.zeros((n_blocks, block_size, KV, hd), dtype),
+            "v": jnp.zeros((n_blocks, block_size, KV, hd), dtype)}
+
+
+def _paged_layer_cache(cfg, layer_type: str, n_slots: int, n_blocks: int,
+                       block_size: int, dtype) -> dict:
+    c: dict = {}
+    if layer_type == "rwkv":
+        c["rwkv"] = R.rwkv_state_init(cfg, n_slots, dtype)
+        return c
+    if layer_type == "recurrent":
+        c["rnn"] = R.rglru_state_init(cfg, n_slots, dtype)
+    else:
+        c["attn"] = _paged_attn_cache(cfg, n_blocks, block_size, dtype)
+    return c
+
+
+def init_paged_cache(cfg, n_slots: int, n_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Paged decode-cache tree, stacked to mirror the parameter structure
+    (superblock scan axis first, like ``lm.init_cache``)."""
+    if cfg.is_encdec:
+        raise NotImplementedError("paged serving of encoder-decoder archs")
+    pattern, n_sb, n_rem = cfg.pattern, cfg.n_superblocks, cfg.n_remainder
+
+    def sb():
+        return {f"l{i}": _paged_layer_cache(cfg, pattern[i], n_slots,
+                                            n_blocks, block_size, dtype)
+                for i in range(len(pattern))}
+
+    out: dict = {}
+    if n_sb:
+        one = sb()
+        out["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_sb,) + x.shape), one)
+    if n_rem:
+        out["rem"] = {f"r{i}": _paged_layer_cache(cfg, pattern[i], n_slots,
+                                                  n_blocks, block_size, dtype)
+                      for i in range(n_rem)}
+    return out
+
+
+def has_per_slot_state(caches: dict) -> bool:
+    """True if the tree holds any per-slot (recurrent / rwkv) leaves."""
+    found = []
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                if k in _PER_SLOT_KEYS:
+                    found.append(k)
+                else:
+                    walk(v)
+
+    walk(caches)
+    return bool(found)
+
+
+def _map_per_slot(caches: dict, fn) -> dict:
+    """Apply ``fn(leaf, slot_axis)`` to every per-slot leaf; pool leaves pass
+    through. The slot axis is 1 under the stacked "blocks" subtree (leading
+    superblock axis) and 0 under "rem"."""
+
+    def walk(tree, slot_axis, per_slot):
+        if not isinstance(tree, dict):
+            return fn(tree, slot_axis) if per_slot else tree
+        return {k: walk(v, slot_axis, per_slot or k in _PER_SLOT_KEYS)
+                for k, v in tree.items()}
+
+    out = {}
+    for top, sub in caches.items():
+        out[top] = walk(sub, 1 if top == "blocks" else 0, False)
+    return out
+
+
+def slot_slice(caches: dict, slot_ix) -> dict:
+    """Narrow every per-slot leaf to the single slot ``slot_ix`` (batch 1);
+    paged pool leaves are shared and pass through unchanged. jit-safe
+    (``slot_ix`` may be a traced scalar)."""
+    return _map_per_slot(
+        caches,
+        lambda x, ax: jax.lax.dynamic_slice_in_dim(x, slot_ix, 1, axis=ax))
+
+
+def slot_merge(caches: dict, updated: dict, slot_ix) -> dict:
+    """Inverse of ``slot_slice``: write the batch-1 per-slot leaves of
+    ``updated`` back into the full tree at ``slot_ix``; pool leaves are taken
+    from ``updated`` wholesale (the forward already scattered into them)."""
+
+    def walk(full, upd, slot_axis, per_slot):
+        if not isinstance(full, dict):
+            if not per_slot:
+                return upd
+            start = (0,) * slot_axis + (slot_ix,) + (0,) * (full.ndim - slot_axis - 1)
+            return jax.lax.dynamic_update_slice(full, upd.astype(full.dtype), start)
+        return {k: walk(v, upd[k], slot_axis, per_slot or k in _PER_SLOT_KEYS)
+                for k, v in full.items()}
+
+    out = {}
+    for top, sub in caches.items():
+        out[top] = walk(sub, updated[top], 1 if top == "blocks" else 0, False)
+    return out
+
+
+def select_slots(old: dict, new: dict, mask: jax.Array) -> dict:
+    """Keep ``new`` per-slot state only where ``mask`` ((n_slots,) bool) is
+    set, restoring ``old`` elsewhere — the batched decode step must not
+    advance the recurrent state of idle / still-prefilling slots. Pool
+    leaves always take ``new`` (inactive rows only write the null block)."""
+
+    def walk(o, n, slot_axis, per_slot):
+        if not isinstance(o, dict):
+            if not per_slot:
+                return n
+            shape = [1] * o.ndim
+            shape[slot_axis] = mask.shape[0]
+            return jnp.where(mask.reshape(shape), n.astype(o.dtype), o)
+        return {k: walk(o[k], n[k], slot_axis, per_slot or k in _PER_SLOT_KEYS)
+                for k in o}
+
+    return {top: walk(old[top], new[top], 1 if top == "blocks" else 0, False)
+            for top in old}
+
+
+def _scatter_attn_rows(pool: dict, rows: dict, table_row, block_size: int,
+                       kv_dtype: str) -> dict:
+    """Write a whole-prompt prefill's K/V rows (batch 1, length P) into the
+    slot's blocks. Pool leaves may carry a leading superblock-stack dim."""
+    from repro.models.layers import KV_QUANT
+    k, v = rows["k"], rows["v"]               # (*lead, 1, P, KV, hd)
+    P = k.shape[-3]
+    n_full = -(-P // block_size) * block_size
+    nfb = n_full // block_size
+    ids = table_row[:nfb]
+
+    if kv_dtype in KV_QUANT:
+        qf = KV_QUANT[kv_dtype][0]
+        k, k_sc = qf(k)
+        v, v_sc = qf(v)
+        parts = {"k": k, "v": v, "k_sc": k_sc, "v_sc": v_sc}
+    else:
+        parts = {"k": k, "v": v}
+
+    out = dict(pool)
+    lead = pool["k"].ndim - 4                 # superblock-stack dims
+    for name, val in parts.items():
+        tgt = pool[name]
+        val = val.reshape(*val.shape[:lead], *val.shape[lead + 1:])  # drop B
+        pad = [(0, 0)] * val.ndim
+        pad[lead] = (0, n_full - P)
+        val = jnp.pad(val, pad).astype(tgt.dtype)
+        val = val.reshape(*val.shape[:lead], nfb, block_size,
+                          *val.shape[lead + 1:])
+        if lead:
+            out[name] = tgt.at[:, ids].set(val)
+        else:
+            out[name] = tgt.at[ids].set(val)
+    return out
+
+
+def write_prompt_rows(caches: dict, prefill: dict, table_row, slot_ix,
+                      block_size: int, kv_dtype: str) -> dict:
+    """Merge a ``collect_cache=True`` whole-prompt forward into the paged
+    tree: attention K/V rows scatter into the slot's blocks, recurrent /
+    rwkv final states land in the slot's per-slot row."""
+
+    def walk(full, upd, slot_axis):
+        out = {}
+        for key, fv in full.items():
+            if key == "attn":
+                out[key] = _scatter_attn_rows(fv, upd[key], table_row,
+                                              block_size, kv_dtype)
+            elif key in _PER_SLOT_KEYS:
+                out[key] = jax.tree.map(
+                    lambda f, u: jax.lax.dynamic_update_slice(
+                        f, u.astype(f.dtype),
+                        (0,) * slot_axis + (slot_ix,)
+                        + (0,) * (f.ndim - slot_axis - 1)),
+                    fv, upd[key])
+            else:
+                out[key] = walk(fv, upd[key], slot_axis)
+        return out
+
+    return {top: walk(caches[top], prefill[top], 1 if top == "blocks" else 0)
+            for top in caches}
+
+
+def reset_slot(caches: dict, slot_ix) -> dict:
+    """Zero one slot's per-slot state (fresh recurrent/rwkv state for a newly
+    admitted request). No-op for pure-attention archs."""
+
+    def zero(x, ax):
+        shape = x.shape[:ax] + (1,) + x.shape[ax + 1:]
+        start = (0,) * ax + (slot_ix,) + (0,) * (x.ndim - ax - 1)
+        return jax.lax.dynamic_update_slice(x, jnp.zeros(shape, x.dtype), start)
+
+    return _map_per_slot(caches, zero)

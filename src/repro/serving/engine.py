@@ -1,0 +1,419 @@
+"""Streaming continuous-batching engine over the paged KV-cache pool.
+
+The engine owns (1) a paged cache (serving/cache.py): per-layer block pools
+plus a host-side BlockPool allocator, and (2) exactly two jit'd fixed-shape
+step functions, so steady-state serving never recompiles:
+
+  _decode        batched one-token step over all n_slots (active or not);
+                 inactive rows write to the null block and are masked out.
+  _prefill_chunk single-request chunk of `chunk_size` prompt tokens written
+                 straight into the request's pool blocks. Long prompts are
+                 admitted chunk by chunk, interleaved with decode steps, so
+                 they never head-of-line-block running requests.
+
+Scheduling policy per `step()`: admit from the bounded queue while free
+slots AND first-chunk blocks exist -> run one prefill chunk (round-robin
+over prefilling slots) -> run one batched decode step.
+
+Preemption: when a request needs a block and the pool is exhausted, the
+lowest-priority occupied slot (ties: latest admitted) is evicted — its
+blocks are freed and it is requeued at the front with its generated tokens
+folded into the prompt (recompute-style preemption), so it resumes exactly
+where it left off after re-prefill.
+
+Determinism contract (tested): with a bf16 pool, greedy decode through the
+engine is bit-identical to decoding the request alone, because slot rows
+are disjoint (batch-independent math), masked cache positions contribute
+exact zeros, and the decode math on the gathered block view is the same
+masked softmax as the dense path. Quantized pools (int8/int4) quantize
+K/V at write time, so chunked prefill attends dequantized history where
+whole-prompt prefill attends raw bf16 — serving stays deterministic
+run-to-run but is not bit-identical to the unquantized isolated decode.
+Recurrent archs likewise may drift ulps (the associative scan's split
+points move with the chunking).
+
+`prefill="whole"` replays the legacy dense batcher's admission (one
+whole-prompt forward per request, recompiling per prompt length); the
+ContinuousBatcher shim uses it to stay bit-identical to the pre-paged
+scheduler. `prefill="chunked"` is the default and the fast path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from . import cache as C
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: jax.Array            # (P,) int32 (P may be 0)
+    max_new: int = 16
+    eos_id: Optional[int] = None
+    priority: int = 0            # lower priority is preempted first
+    on_token: Optional[Callable[[int, bool], None]] = None   # streaming
+    # filled by the engine
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    rejected: bool = False
+    n_preempted: int = 0
+
+
+_FREE, _PREFILL, _DECODE = 0, 1, 2
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    state: int = _FREE
+    prompt: Optional[np.ndarray] = None   # effective prompt (+ regenerated)
+    prefill_done: int = 0                 # prompt rows already in the cache
+    pos: int = 0                          # next decode row (== ctx length)
+    next_input: int = 0
+    blocks: list = dataclasses.field(default_factory=list)
+    admit_seq: int = 0
+
+
+class Engine:
+    """Paged continuous-batching engine. See module docstring."""
+
+    def __init__(self, cfg, params, *, n_slots: int, max_len: int,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 chunk_size: Optional[int] = None, max_queue: int = 64,
+                 prefill: str = "chunked",
+                 sample: Optional[Callable] = None):
+        if cfg.is_encdec:
+            raise NotImplementedError("engine: encoder-decoder serving")
+        if cfg.mrope_sections or cfg.n_vision_tokens:
+            raise NotImplementedError("engine: M-RoPE / vision frontends")
+        if cfg.pos_embed == "learned":
+            raise NotImplementedError("engine: learned positional embeddings")
+        assert max_len % block_size == 0, (max_len, block_size)
+        if chunk_size is None:
+            chunk_size = min(2 * block_size, max_len)
+            while max_len % chunk_size:
+                chunk_size -= block_size
+        assert chunk_size % block_size == 0 and max_len % chunk_size == 0
+        assert prefill in ("chunked", "whole")
+
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.chunk_size = chunk_size
+        self.max_queue = max_queue
+        self.prefill_mode = prefill
+        self.nb_max = max_len // block_size
+        self.n_blocks = n_blocks if n_blocks is not None \
+            else n_slots * self.nb_max + 1
+        self.sample = sample or (lambda logits: jnp.argmax(logits, -1))
+
+        self.caches = C.init_paged_cache(cfg, n_slots, self.n_blocks,
+                                         block_size)
+        self.pool = C.BlockPool(self.n_blocks)
+        self._has_state = C.has_per_slot_state(self.caches)
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.queue: deque[Request] = deque()
+
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(0,))
+        self._prefill_chunk = jax.jit(self._prefill_fn, donate_argnums=(0,))
+        self._prefill_whole = jax.jit(self._prefill_whole_fn,
+                                      donate_argnums=(0,))
+        self._reset = jax.jit(C.reset_slot, donate_argnums=(0,))
+
+        # counters
+        self.steps = 0                 # engine steps (admit+prefill+decode)
+        self.decode_steps = 0
+        self.prefill_chunks = 0
+        self.busy_slot_steps = 0
+        self.preemptions = 0
+        self.rejections = 0
+        self._admit_counter = 0
+        self._pf_rr = 0
+
+    # ---------------- jit'd step functions ----------------
+
+    def _decode_fn(self, caches, tables, tokens, pos, active):
+        h, new = lm.forward(self.params, self.cfg, tokens, caches=caches,
+                            pos=pos, block_tables=tables)
+        # inactive / prefilling slots keep their per-slot recurrent state
+        new = C.select_slots(caches, new, active)
+        logits = lm.logits_fn(self.params, self.cfg, h)[:, -1]
+        return new, logits
+
+    def _prefill_fn(self, caches, table_row, tokens, start, slot_ix):
+        sliced = C.slot_slice(caches, slot_ix)
+        _, new = lm.forward(self.params, self.cfg, tokens, caches=sliced,
+                            pos=start[None], block_tables=table_row[None])
+        return C.slot_merge(caches, new, slot_ix)
+
+    def _prefill_whole_fn(self, caches, table_row, prompt, slot_ix):
+        # legacy-equivalent admission: one full-prompt forward (same math,
+        # same float path as the dense batcher), rows scattered into blocks
+        _, pf = lm.forward(self.params, self.cfg, prompt, collect_cache=True)
+        return C.write_prompt_rows(caches, pf, table_row, slot_ix,
+                                   self.block_size, self.cfg.kv_cache_dtype)
+
+    # ---------------- admission / preemption ----------------
+
+    def _max_blocks_needed(self, P: int, max_new: int) -> int:
+        # blocks are only ever allocated for real rows (prefill pad rows
+        # land in the null block), so the worst case is the final context
+        rows = min(self.max_len, max(P + max_new, P + 1))
+        return -(-rows // self.block_size)
+
+    def submit(self, req: Request) -> bool:
+        """Admission control: bounded queue + must-fit-alone check.
+        Returns False (and marks the request rejected) when refused."""
+        P = int(np.asarray(req.prompt).shape[0])
+        if len(self.queue) >= self.max_queue \
+                or P > self.max_len - 1 \
+                or self._max_blocks_needed(P, req.max_new) > self.n_blocks - 1:
+            req.rejected = True
+            self.rejections += 1
+            return False
+        self.queue.append(req)
+        return True
+
+    def _table_row(self, slot: _Slot) -> np.ndarray:
+        row = np.full((self.nb_max,), C.NULL_BLOCK, np.int32)
+        row[: len(slot.blocks)] = slot.blocks
+        return row
+
+    def _pick_victim(self) -> Optional[int]:
+        occupied = [i for i, s in enumerate(self.slots) if s.state != _FREE]
+        if not occupied:
+            return None
+        return min(occupied, key=lambda i: (self.slots[i].req.priority,
+                                            -self.slots[i].admit_seq))
+
+    def _preempt(self, ix: int):
+        """Evict slot ix: free its blocks and requeue the request with its
+        generated tokens folded into the prompt (recompute preemption)."""
+        s = self.slots[ix]
+        req = s.req
+        req.n_preempted += 1
+        self.preemptions += 1
+        if s.blocks:
+            self.pool.free(s.blocks)
+        self.slots[ix] = _Slot()
+        self.queue.appendleft(req)
+
+    def _make_room(self, n: int, requester_ix: int) -> bool:
+        """Free blocks until n are available. Returns False if the requester
+        itself was evicted (it is the lowest-priority occupant)."""
+        while self.pool.n_free < n:
+            victim = self._pick_victim()
+            if victim is None:
+                return False
+            self._preempt(victim)
+            if victim == requester_ix:
+                return False
+        return True
+
+    def _free_ix(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s.state == _FREE:
+                return i
+        return None
+
+    def _admit(self):
+        while self.queue:
+            ix = self._free_ix()
+            if ix is None:
+                return
+            req = self.queue[0]
+            eff_prompt = np.concatenate(
+                [np.asarray(req.prompt, np.int32).reshape(-1),
+                 np.asarray(req.out, np.int32)])
+            P = len(eff_prompt)
+            first_blocks = self._first_alloc_size(P)
+            if first_blocks > self.pool.n_free:
+                return                       # wait for blocks to free up
+            self.queue.popleft()
+            self._admit_counter += 1
+            slot = _Slot(req=req, prompt=eff_prompt, pos=0, prefill_done=0,
+                         admit_seq=self._admit_counter)
+            self.slots[ix] = slot
+            if self._has_state:
+                self.caches = self._reset(self.caches,
+                                          jnp.asarray(ix, jnp.int32))
+            if P == 0:
+                slot.state = _DECODE         # zero-block request
+                slot.next_input = 0
+            elif self.prefill_mode == "whole":
+                slot.state = _PREFILL        # visible to _pick_victim
+                self._do_whole_prefill(ix)
+                if self.slots[ix].req is not req:
+                    break                    # admission failed (self-evicted)
+            else:
+                slot.state = _PREFILL
+
+    def _first_alloc_size(self, P: int) -> int:
+        if P == 0:
+            return 1
+        if self.prefill_mode == "whole":
+            return -(-P // self.block_size)
+        return -(-min(self.chunk_size, P) // self.block_size)
+
+    # ---------------- prefill ----------------
+
+    def _do_whole_prefill(self, ix: int):
+        s = self.slots[ix]
+        P = len(s.prompt)
+        need = -(-P // self.block_size) - len(s.blocks)
+        if need > 0:
+            if not self._make_room(need, ix):
+                return
+            s.blocks += self.pool.alloc(need)
+        self.caches = self._prefill_whole(
+            self.caches, jnp.asarray(self._table_row(s)),
+            jnp.asarray(s.prompt, jnp.int32)[None],
+            jnp.asarray(ix, jnp.int32))
+        s.state = _DECODE
+        s.prefill_done = P
+        s.pos = P
+        s.next_input = int(s.prompt[-1])
+
+    def _do_prefill_chunk(self, ix: int):
+        s = self.slots[ix]
+        P = len(s.prompt)
+        start = s.prefill_done
+        if self._has_state:
+            # recurrent state must see exactly the prompt: no pad tokens
+            length = min(self.chunk_size, P - start)
+        else:
+            length = self.chunk_size          # fixed shape; pad rows inert
+        real = min(length, P - start)
+        # blocks cover real rows only: pad-row writes beyond the table's
+        # allocated entries fall into the null block (never read)
+        need = -(-(start + real) // self.block_size) - len(s.blocks)
+        if need > 0:
+            if not self._make_room(need, ix):
+                return                        # self-preempted
+            s.blocks += self.pool.alloc(need)
+        chunk = np.zeros((length,), np.int32)
+        chunk[:real] = s.prompt[start:start + real]
+        self.caches = self._prefill_chunk(
+            self.caches, jnp.asarray(self._table_row(s)),
+            jnp.asarray(chunk)[None],
+            jnp.asarray(start, jnp.int32), jnp.asarray(ix, jnp.int32))
+        self.prefill_chunks += 1
+        s.prefill_done = start + real
+        if s.prefill_done >= P:
+            s.state = _DECODE
+            s.pos = P
+            s.next_input = int(s.prompt[-1])
+
+    # ---------------- decode ----------------
+
+    def _grow_for_decode(self):
+        """Ensure every decoding slot owns the block its next row lands in,
+        preempting (possibly the slot itself) on pool exhaustion."""
+        for i in range(self.n_slots):
+            s = self.slots[i]
+            if s.state != _DECODE:
+                continue
+            need = s.pos // self.block_size + 1 - len(s.blocks)
+            if need > 0:
+                if not self._make_room(need, i):
+                    continue                  # slot i was evicted
+                s.blocks += self.pool.alloc(need)
+
+    def _finish(self, ix: int):
+        s = self.slots[ix]
+        s.req.done = True
+        if s.blocks:
+            self.pool.free(s.blocks)
+        self.slots[ix] = _Slot()
+
+    def _do_decode(self):
+        self._grow_for_decode()
+        active = [i for i, s in enumerate(self.slots) if s.state == _DECODE]
+        if not active:
+            return
+        tokens = jnp.asarray(
+            [[s.next_input if s.state == _DECODE else 0] for s in self.slots],
+            jnp.int32)
+        pos = jnp.asarray(
+            [s.pos if s.state == _DECODE else 0 for s in self.slots],
+            jnp.int32)
+        tables = np.zeros((self.n_slots, self.nb_max), np.int32)
+        for i in active:
+            tables[i] = self._table_row(self.slots[i])
+        mask = np.zeros((self.n_slots,), bool)
+        mask[active] = True
+        self.caches, logits = self._decode(
+            self.caches, jnp.asarray(tables), tokens, pos, jnp.asarray(mask))
+        nxt = self.sample(logits)
+
+        self.decode_steps += 1
+        self.busy_slot_steps += len(active)
+        for i in active:
+            s = self.slots[i]
+            tok = int(nxt[i])
+            req = s.req
+            req.out.append(tok)
+            s.next_input = tok
+            s.pos += 1
+            done = ((req.eos_id is not None and tok == req.eos_id)
+                    or len(req.out) >= req.max_new
+                    or s.pos >= self.max_len - 1)
+            if req.on_token is not None:
+                req.on_token(tok, done)
+            if done:
+                self._finish(i)
+
+    # ---------------- main loop ----------------
+
+    def step(self) -> int:
+        """Admit, run one prefill chunk (if any), run one decode step.
+        Returns the number of occupied slots."""
+        self._admit()
+        prefilling = [i for i, s in enumerate(self.slots)
+                      if s.state == _PREFILL]
+        if prefilling:
+            ix = prefilling[self._pf_rr % len(prefilling)]
+            self._pf_rr += 1
+            self._do_prefill_chunk(ix)
+        self._do_decode()
+        self.steps += 1
+        return sum(s.state != _FREE for s in self.slots)
+
+    def run(self, max_steps: int = 10_000) -> dict:
+        while (self.queue or any(s.state != _FREE for s in self.slots)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.metrics()
+
+    def metrics(self) -> dict:
+        util = self.busy_slot_steps / max(self.decode_steps * self.n_slots, 1)
+        return {
+            "steps": self.decode_steps,
+            "engine_steps": self.steps,
+            "decode_steps": self.decode_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "preemptions": self.preemptions,
+            "rejections": self.rejections,
+            "slot_utilization": util,
+            "n_compiles": self.n_compiles(),
+        }
+
+    def n_compiles(self) -> Optional[int]:
+        """Total jit cache entries across the engine's step functions (the
+        no-recompilation-between-steps check in benchmarks/serving.py)."""
+        try:
+            return sum(int(f._cache_size()) for f in
+                       (self._decode, self._prefill_chunk,
+                        self._prefill_whole, self._reset))
+        except AttributeError:                 # older jax: no _cache_size
+            return None

@@ -1,149 +1,65 @@
-"""Continuous batching for the packed-weight serving path.
+"""Legacy continuous-batching API, now a thin shim over the paged Engine.
 
-Production serving never decodes a fixed batch to completion: requests
-arrive and finish at different times, and the decode step must keep its
-batch slots full (that is what keeps the step in the cache-read-bound
-regime the roofline assumes — idle slots still pay the full cache read).
+``ContinuousBatcher`` keeps the pre-paged interface (fixed slot table,
+``submit``/``step``/``run``) but delegates storage and stepping to
+``serving.engine.Engine`` running over the paged block pool with
+``prefill="whole"`` — the legacy admission path (one whole-prompt forward
+per request). With the pool sized to back every slot at full ``max_len``
+and the gathered block view exactly ``max_len`` rows long, the decode math
+is bit-identical to the old dense slot cache, so the original determinism
+contract still holds: greedy decoding of a request through the batcher
+equals decoding it alone.
 
-This scheduler keeps a fixed-shape slot table (the jit'd decode_step's
-batch), admits queued requests into free slots (prefilling the slot's cache
-region via a single-row prefill), steps all active slots together with
-per-slot positions (the decode path already takes ``pos: (B,)``), and
-retires slots on EOS/length. Fixed shapes = zero recompilation.
-
-Determinism contract (tested): greedy decoding of a request through the
-batcher is bit-identical to decoding it alone, because slot caches are
-disjoint along the batch axis and attention masks by per-slot length.
+New code should use ``Engine`` directly (chunked prefill, admission
+control, preemption, streaming); this class exists so existing callers and
+tests keep working unchanged.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
 from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.models import lm
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: jax.Array            # (P,) int32
-    max_new: int = 16
-    eos_id: Optional[int] = None
-    # filled by the batcher
-    out: list = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-@dataclasses.dataclass
-class _Slot:
-    req: Optional[Request] = None
-    pos: int = 0                 # next decode position (== tokens in cache)
-    generated: int = 0
+from .engine import Engine, Request  # noqa: F401  (Request re-exported)
 
 
 class ContinuousBatcher:
-    """Drives (prefill_step, decode_step) over a fixed slot table."""
+    """Drives the paged Engine with legacy dense-batcher semantics."""
 
     def __init__(self, cfg, params, *, n_slots: int, max_len: int,
                  sample: Optional[Callable] = None):
+        block_size = 16
+        while max_len % block_size:
+            block_size //= 2
+        self.engine = Engine(
+            cfg, params, n_slots=n_slots, max_len=max_len,
+            block_size=block_size,
+            n_blocks=n_slots * (max_len // block_size) + 1,  # never preempts
+            max_queue=10 ** 9, prefill="whole", sample=sample)
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
-        self.sample = sample or (lambda logits: jnp.argmax(logits, -1))
-        self.slots = [_Slot() for _ in range(n_slots)]
-        self.queue: deque[Request] = deque()
-        self.caches = lm.init_cache(cfg, n_slots, max_len)
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(0,))
-        self.steps = 0
-        self.busy_slot_steps = 0
 
-    # ---------------- internals ----------------
+    # legacy surface -------------------------------------------------------
 
-    def _decode_fn(self, caches, tokens, pos):
-        h, caches = lm.forward(self.params, self.cfg, tokens, caches=caches,
-                               pos=pos)
-        logits = lm.logits_fn(self.params, self.cfg, h)[:, -1]
-        return caches, logits
+    @property
+    def queue(self):
+        return self.engine.queue
 
-    def _admit(self, slot_ix: int, req: Request):
-        """Prefill the request into one slot's cache rows."""
-        P = int(req.prompt.shape[0])
-        _, pf = lm.forward(self.params, self.cfg, req.prompt[None, :],
-                           collect_cache=True)
-        row = lm.prefill_to_cache(self.cfg, pf, P, self.max_len)
+    @property
+    def steps(self) -> int:
+        return self.engine.decode_steps
 
-        def merge(full, one):
-            # batch axis = first axis where the single-row cache has size 1
-            # and the slot table has size n_slots (leading dims may be
-            # superblock stacks, which match exactly).
-            ax = next(i for i in range(full.ndim)
-                      if one.shape[i] == 1 and full.shape[i] == self.n_slots)
-            moved = jnp.moveaxis(full, ax, 0)
-            updated = moved.at[slot_ix].set(
-                jnp.moveaxis(one, ax, 0)[0].astype(full.dtype))
-            return jnp.moveaxis(updated, 0, ax)
+    @property
+    def busy_slot_steps(self) -> int:
+        return self.engine.busy_slot_steps
 
-        self.caches = jax.tree.map(merge, self.caches, row)
-        self.slots[slot_ix] = _Slot(req=req, pos=P, generated=0)
-        # the first batched decode step consumes the prompt's last token
-        req._next_input = int(req.prompt[-1])
-
-    def submit(self, req: Request):
-        self.queue.append(req)
-
-    def _free_ix(self) -> Optional[int]:
-        for i, s in enumerate(self.slots):
-            if s.req is None:
-                return i
-        return None
-
-    # ---------------- main loop ----------------
+    def submit(self, req: Request) -> bool:
+        return self.engine.submit(req)
 
     def step(self) -> int:
-        """Admit what fits, run one batched decode step. Returns #active."""
-        while self.queue:
-            ix = self._free_ix()
-            if ix is None:
-                break
-            self._admit(ix, self.queue.popleft())
-
-        active = [i for i, s in enumerate(self.slots) if s.req is not None]
-        if not active:
-            return 0
-
-        tokens = jnp.asarray(
-            [[s.req._next_input if s.req is not None else 0]
-             for s in self.slots], jnp.int32)
-        pos = jnp.asarray([s.pos for s in self.slots], jnp.int32)
-        self.caches, logits = self._decode(self.caches, tokens, pos)
-        nxt = self.sample(logits)
-
-        self.steps += 1
-        self.busy_slot_steps += len(active)
-        for i in active:
-            s = self.slots[i]
-            tok = int(nxt[i])
-            s.req.out.append(tok)
-            s.req._next_input = tok
-            s.pos += 1
-            s.generated += 1
-            if ((s.req.eos_id is not None and tok == s.req.eos_id)
-                    or s.generated >= s.req.max_new
-                    or s.pos >= self.max_len - 1):
-                s.req.done = True
-                self.slots[i] = _Slot()
-        return len(active)
+        return self.engine.step()
 
     def run(self, max_steps: int = 10_000) -> dict:
-        """Run until queue + slots drain. Returns utilization metrics."""
-        while (self.queue or any(s.req for s in self.slots)) \
-                and self.steps < max_steps:
-            self.step()
-        util = self.busy_slot_steps / max(self.steps * self.n_slots, 1)
-        return {"steps": self.steps, "slot_utilization": util}
+        m = self.engine.run(max_steps)
+        return {"steps": m["steps"], "slot_utilization": m["slot_utilization"]}

@@ -192,3 +192,36 @@ def test_kv_cache_attention_matches_ref(bits, gqa):
                                  backend="pallas_interpret", bs=16)
     np.testing.assert_allclose(np.asarray(want), np.asarray(got),
                                rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+# paged_attention (block-pooled packed-cache decode kernel, serving engine)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("gqa", [(2, 1), (2, 3)])
+def test_paged_attention_matches_ref(bits, gqa):
+    from repro.models.layers import quantize_kv, quantize_kv4
+    KV, G = gqa
+    B, hd, bs, n_blocks, nb_max = 3, 16, 8, 12, 4
+    q = jnp.asarray(RNG.normal(size=(B, KV, G, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(n_blocks, bs, KV, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(n_blocks, bs, KV, hd)), jnp.float32)
+    qf = quantize_kv4 if bits == 4 else quantize_kv
+    kp, ksc = qf(k)
+    vp, vsc = qf(v)
+    # disjoint shuffled tables; unused tail entries point at the null block
+    perm = RNG.permutation(np.arange(1, n_blocks))
+    lengths = np.asarray([5, 2 * bs + 3, 3 * bs], np.int32)
+    tables = np.zeros((B, nb_max), np.int32)
+    at = 0
+    for b in range(B):
+        used = -(-int(lengths[b]) // bs)
+        tables[b, :used] = perm[at:at + used]
+        at += used
+    tables, lengths = jnp.asarray(tables), jnp.asarray(lengths)
+    want = ref.ref_paged_attention(q, kp, ksc, vp, vsc, tables, lengths, bits)
+    got = ops.paged_attention(q, kp, ksc, vp, vsc, tables, lengths,
+                              bits=bits, backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=2e-4, atol=2e-4)
