@@ -1,16 +1,27 @@
-"""Serving-throughput smoke benchmark: paged engine vs legacy dense-style
-batching on a mixed workload (CI artifact BENCH_serving.json).
+"""Serving-throughput smoke benchmark (CI artifact BENCH_serving.json).
 
-Workload: more requests than slots, prompt lengths drawn from [8, 256] —
-the regime the paged engine exists for. The legacy path (ContinuousBatcher
-shim, whole-prompt admission) re-lowers its prefill for every distinct
-prompt length and reserves full-length cache rows per slot; the engine
-admits through fixed-shape chunked prefill (two jit entries total, zero
-recompilation between steps) over the block pool.
+Two workloads:
+
+1. Mixed lengths (paged engine vs legacy dense-style batching): more
+   requests than slots, prompt lengths drawn from [8, 256] — the regime the
+   paged engine exists for. The legacy path (ContinuousBatcher shim,
+   whole-prompt admission) re-lowers its prefill for every distinct prompt
+   length and reserves full-length cache rows per slot; the engine admits
+   through fixed-shape chunked prefill (zero recompilation between steps)
+   over the block pool.
+
+2. Shared prefix (radix cache + batched prefill vs the PR 2 engine): many
+   requests sharing a long block-aligned prompt prefix with short distinct
+   suffixes — the agent/chat regime prefix sharing exists for. The baseline
+   re-prefills the full prompt per request; the radix engine attaches the
+   cached prefix by refcount bump and fuses the remaining suffix chunks
+   `prefill_batch` requests at a time. CI gates: >= 1.3x req/s, >= 50%
+   fewer prefill tokens computed, greedy outputs token-identical.
 
 Reported per backend: wall time, requests/s, tokens/s, mean/median
-time-to-first-token, decode steps, and jit cache entries sampled early vs
-at the end (`recompiled_between_steps` must stay False for the engine).
+time-to-first-token, decode steps, prefill tokens computed/shared, and jit
+cache entries sampled early vs at the end (`recompiled_between_steps` must
+stay False for the engine).
 """
 
 import json
@@ -33,6 +44,11 @@ _PROMPT_RANGE = (8, 256)
 _MAX_LEN = 320
 _BLOCK = 32
 _CHUNK = 64
+# shared-prefix workload
+_SP_REQUESTS = 16
+_SP_PREFIX = 192                      # 6 blocks of 32, block-aligned
+_SP_SUFFIX = (8, 48)
+_SP_PREFILL_BATCH = 4
 
 
 def _workload(cfg, seed=0):
@@ -43,8 +59,37 @@ def _workload(cfg, seed=0):
     return prompts
 
 
-def _drive(make_backend, prompts) -> dict:
+def _shared_prefix_workload(cfg, seed=1):
+    rng = np.random.default_rng(seed)
+    prefix = np.asarray(rng.integers(0, cfg.vocab_size, (_SP_PREFIX,)),
+                        np.int32)
+    prompts = []
+    for _ in range(_SP_REQUESTS):
+        n = int(rng.integers(_SP_SUFFIX[0], _SP_SUFFIX[1] + 1))
+        sfx = np.asarray(rng.integers(0, cfg.vocab_size, (n,)), np.int32)
+        prompts.append(np.concatenate([prefix, sfx]))
+    return prompts
+
+
+def _drive(make_backend, prompts, warmup: bool = False) -> dict:
     backend = make_backend()
+    eng = backend.engine if isinstance(backend, ContinuousBatcher) else backend
+    if warmup:
+        # compile the engine's step functions outside the timed window and
+        # zero the counters: the shared-prefix gate compares steady-state
+        # serving, not first-call XLA compile time (the mixed-length
+        # comparison below keeps compile in-band on purpose — recompiling
+        # per prompt length is the dense path's pathology)
+        w = Request(uid=-1,
+                    prompt=jax.numpy.asarray(
+                        np.zeros((eng.chunk_size + 1,), np.int32)),
+                    max_new=2)
+        backend.submit(w)
+        backend.run()
+        eng.steps = eng.decode_steps = eng.prefill_chunks = 0
+        eng.busy_slot_steps = eng.preemptions = 0
+        eng.prefill_tokens_computed = eng.prefill_tokens_shared = 0
+        eng.reset_prefix_cache()
     t0 = time.time()
     ttft: dict[int, float] = {}
     reqs = []
@@ -58,7 +103,6 @@ def _drive(make_backend, prompts) -> dict:
     # run until both step functions have been exercised at least once,
     # snapshot the jit cache size, then drain: steady state must not add
     # cache entries (recompiled_between_steps below)
-    eng = backend.engine if isinstance(backend, ContinuousBatcher) else backend
     for _ in range(40):
         backend.step()
         if eng.decode_steps >= 2:
@@ -79,6 +123,9 @@ def _drive(make_backend, prompts) -> dict:
         "ttft_mean_s": round(float(np.mean(tt)), 3) if tt else None,
         "ttft_p50_s": round(float(np.median(tt)), 3) if tt else None,
         "decode_steps": int(m["steps"]) if "steps" in m else None,
+        "prefill_tokens_computed": m.get("prefill_tokens_computed"),
+        "prefill_tokens_shared": m.get("prefill_tokens_shared"),
+        "preemptions": m.get("preemptions"),
         "jit_entries_early": compiles_early,
         "jit_entries_end": compiles_end,
         "recompiled_between_steps": (
@@ -113,6 +160,34 @@ def run(json_out: str = "BENCH_serving.json") -> dict:
     print(f"[serving]   {dense['req_per_s']} req/s, "
           f"TTFT {dense['ttft_mean_s']}s", flush=True)
 
+    sp_prompts = _shared_prefix_workload(cfg)
+    print(f"[serving] shared-prefix workload: {_SP_REQUESTS} reqs, prefix "
+          f"{_SP_PREFIX} + suffix {_SP_SUFFIX}, gen {_GEN}", flush=True)
+    print("[serving] baseline engine (no sharing, prefill_batch=1)",
+          flush=True)
+    sp_base = _drive(
+        lambda: Engine(cfg, params, n_slots=_N_SLOTS, max_len=_MAX_LEN,
+                       block_size=_BLOCK, chunk_size=_CHUNK,
+                       max_queue=2 * _SP_REQUESTS),
+        sp_prompts, warmup=True)
+    print(f"[serving]   {sp_base['req_per_s']} req/s, "
+          f"{sp_base['prefill_tokens_computed']} prefill tokens", flush=True)
+    print(f"[serving] radix engine (prefix cache on, prefill_batch="
+          f"{_SP_PREFILL_BATCH})", flush=True)
+    sp_radix = _drive(
+        lambda: Engine(cfg, params, n_slots=_N_SLOTS, max_len=_MAX_LEN,
+                       block_size=_BLOCK, chunk_size=_CHUNK,
+                       max_queue=2 * _SP_REQUESTS, prefix_cache=True,
+                       prefill_batch=_SP_PREFILL_BATCH),
+        sp_prompts, warmup=True)
+    print(f"[serving]   {sp_radix['req_per_s']} req/s, "
+          f"{sp_radix['prefill_tokens_computed']} prefill tokens "
+          f"({sp_radix['prefill_tokens_shared']} shared)", flush=True)
+    sp_savings = 1.0 - (sp_radix["prefill_tokens_computed"]
+                        / max(sp_base["prefill_tokens_computed"], 1))
+    sp_speedup = sp_radix["req_per_s"] / max(sp_base["req_per_s"], 1e-9)
+    sp_same = sp_radix["outputs"] == sp_base["outputs"]
+
     same_tokens = paged["outputs"] == dense["outputs"]
     result = {
         "benchmark": "serving",
@@ -131,6 +206,17 @@ def run(json_out: str = "BENCH_serving.json") -> dict:
         "paged_matches_dense_tokens": same_tokens,
         "speedup_req_per_s": round(
             paged["req_per_s"] / max(dense["req_per_s"], 1e-9), 2),
+        "shared_prefix": {
+            "n_requests": _SP_REQUESTS,
+            "prefix_len": _SP_PREFIX,
+            "suffix_range": list(_SP_SUFFIX),
+            "prefill_batch": _SP_PREFILL_BATCH,
+            "baseline": {k: v for k, v in sp_base.items() if k != "outputs"},
+            "radix": {k: v for k, v in sp_radix.items() if k != "outputs"},
+            "radix_matches_baseline_tokens": sp_same,
+            "speedup_req_per_s": round(sp_speedup, 2),
+            "prefill_token_savings": round(sp_savings, 3),
+        },
         "total_s": round(time.time() - t0, 2),
     }
     out_dir = os.path.dirname(json_out)
@@ -139,7 +225,10 @@ def run(json_out: str = "BENCH_serving.json") -> dict:
     with open(json_out, "w") as fh:
         json.dump(result, fh, indent=1)
     print(f"[serving] paged {result['speedup_req_per_s']}x dense req/s; "
-          f"tokens match: {same_tokens} -> {json_out}")
+          f"tokens match: {same_tokens}")
+    print(f"[serving] shared-prefix: radix {result['shared_prefix']['speedup_req_per_s']}x "
+          f"baseline req/s, {100 * sp_savings:.0f}% prefill tokens saved; "
+          f"tokens match: {sp_same} -> {json_out}")
     return result
 
 

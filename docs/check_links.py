@@ -1,0 +1,49 @@
+"""Internal link checker for the documentation suite (CI docs job).
+
+Scans README.md and docs/*.md for markdown ``[text](target)`` links and
+fails if a relative target points at a path that does not exist in the
+repo. External (scheme://) links and pure #anchors are skipped — this
+guards the docs' internal wiring, not the internet. (Paths mentioned only
+in backticks are not checked.)
+
+Run from the repo root: python docs/check_links.py
+"""
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check(md: pathlib.Path) -> list[str]:
+    errors = []
+    for target in LINK.findall(md.read_text()):
+        if "://" in target or target.startswith(("#", "mailto:")):
+            continue
+        path = target.split("#")[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    missing = [f for f in files if not f.exists()]
+    errors = [f"missing documentation file: {f}" for f in missing]
+    for f in files:
+        if f.exists():
+            errors.extend(check(f))
+    for e in errors:
+        print(f"FAIL {e}")
+    if not errors:
+        print(f"OK: {len(files)} files, all internal links resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

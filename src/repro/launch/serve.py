@@ -11,10 +11,14 @@ CPU-runnable on reduced configs; the decode step is the same function the
 instead of the fixed-batch loop: a mixed-length request stream is admitted
 through chunked prefill into the paged block-pool cache, with per-token
 streaming, admission control (``--max-queue``) and preemption on block
-exhaustion:
+exhaustion. ``--prefix-cache`` turns on the prefix-sharing radix cache
+(requests with a common block-aligned prompt prefix attach already-filled
+blocks instead of re-prefilling them) and ``--prefill-batch N`` fuses up to
+N requests per prefill chunk step:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
-      --paged --requests 12 --block-size 16 --gen 16
+      --paged --requests 12 --block-size 16 --gen 16 \
+      --prefix-cache --prefill-batch 4
 """
 
 from __future__ import annotations
@@ -39,7 +43,9 @@ def serve_paged(cfg, qparams, args) -> int:
     max_len = args.prompt_len + args.gen + args.block_size
     max_len = -(-max_len // args.block_size) * args.block_size
     engine = Engine(cfg, qparams, n_slots=args.batch, max_len=max_len,
-                    block_size=args.block_size, max_queue=args.max_queue)
+                    block_size=args.block_size, max_queue=args.max_queue,
+                    prefix_cache=args.prefix_cache,
+                    prefill_batch=args.prefill_batch)
     t0 = time.time()
     first_tok: dict[int, float] = {}
 
@@ -74,6 +80,12 @@ def serve_paged(cfg, qparams, args) -> int:
           f"decode steps {m['decode_steps']}, prefill chunks "
           f"{m['prefill_chunks']}, preemptions {m['preemptions']}, "
           f"util {m['slot_utilization']:.2f}, jit entries {m['n_compiles']}")
+    if m["prefix_cache"] is not None:
+        total = m["prefill_tokens_computed"] + m["prefill_tokens_shared"]
+        print(f"  prefix cache: {m['prefill_tokens_shared']}/{total} prompt "
+              f"tokens attached from cache "
+              f"({m['prefix_cache']['cached_blocks']} blocks cached, "
+              f"{m['prefix_cache']['evictions']} evictions)")
     return 0
 
 
@@ -96,6 +108,11 @@ def main():
                     help="engine admission queue bound")
     ap.add_argument("--requests", type=int, default=12,
                     help="number of mixed-length requests (--paged)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share block-aligned prompt prefixes through the "
+                         "radix cache (--paged)")
+    ap.add_argument("--prefill-batch", type=int, default=1,
+                    help="requests fused per prefill chunk step (--paged)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -145,11 +145,16 @@ def flash_attention(
     *,
     causal: bool = True,
     window: Optional[int] = None,
-    q_offset: int = 0,
+    q_offset=0,                             # scalar or (B,) per-row offset
     segments: Optional[jax.Array] = None,   # (B, S) packed-sequence ids
 ) -> jax.Array:
     """Memory-bounded attention: lax.map over query chunks, lax.scan over key
     chunks, online max/denominator. Returns (B, Sq, KV, G, hd).
+
+    q_offset: absolute position of query row 0 — a scalar shared by the
+    batch, or a (B,) vector when rows sit at different offsets (the batched
+    multi-request prefill chunk). The scalar path keeps its original
+    (qc, kc) mask shapes bit-for-bit.
 
     segments: sequence-packing ids — attention is masked to seg_q == seg_k
     so multiple documents share one row without cross-attending."""
@@ -160,10 +165,14 @@ def flash_attention(
     nq, nk = Sq // qc, Sk // kc
     qr = q.reshape(B, nq, qc, KV, G, hd)
     neg = jnp.asarray(-1e30, jnp.float32)
+    per_row = jnp.ndim(q_offset) == 1
 
     def q_block(args):
         qi, qb = args                                    # qb: (B, qc, KV, G, hd)
-        qpos = q_offset + qi * qc + jnp.arange(qc)
+        if per_row:
+            qpos = q_offset[:, None] + qi * qc + jnp.arange(qc)  # (B, qc)
+        else:
+            qpos = q_offset + qi * qc + jnp.arange(qc)           # (qc,)
         seg_q = (jax.lax.dynamic_slice_in_dim(segments, qi * qc, qc, 1)
                  if segments is not None else None)
 
@@ -174,12 +183,20 @@ def flash_attention(
             s = jnp.einsum("bqegh,bseh->begqs", qb.astype(jnp.float32),
                            kb.astype(jnp.float32)) * scale   # (B,KV,G,qc,kc)
             kpos = ki * kc + jnp.arange(kc)
-            mask = jnp.ones((qc, kc), bool)
-            if causal:
-                mask &= qpos[:, None] >= kpos[None, :]
-            if window is not None:
-                mask &= (qpos[:, None] - kpos[None, :]) < window
-            s = jnp.where(mask, s, neg)
+            if per_row:
+                mask = jnp.ones((B, qc, kc), bool)
+                if causal:
+                    mask &= qpos[:, :, None] >= kpos[None, None, :]
+                if window is not None:
+                    mask &= (qpos[:, :, None] - kpos[None, None, :]) < window
+                s = jnp.where(mask[:, None, None], s, neg)
+            else:
+                mask = jnp.ones((qc, kc), bool)
+                if causal:
+                    mask &= qpos[:, None] >= kpos[None, :]
+                if window is not None:
+                    mask &= (qpos[:, None] - kpos[None, :]) < window
+                s = jnp.where(mask, s, neg)
             if seg_q is not None:
                 seg_k = jax.lax.dynamic_slice_in_dim(segments, ki * kc, kc, 1)
                 smask = seg_q[:, :, None] == seg_k[:, None, :]   # (B,qc,kc)
@@ -390,11 +407,12 @@ def attn_apply(
                     valid &= jnp.arange(S_view)[None, :] > pos[:, None] - window
                 out = decode_attention(q, kd, vd, valid)
             else:                                        # chunked prefill
-                # single-request chunk (B == 1); the causal mask from
-                # q_offset also blanks the not-yet-written pool tail
-                # (exact zeros after softmax, so garbage rows are inert)
+                # one or more request rows, each starting at its own pos;
+                # the causal mask from the per-row q_offset also blanks the
+                # not-yet-written pool tail (exact zeros after softmax, so
+                # garbage rows are inert)
                 out = flash_attention(q, kd, vd, causal=True, window=window,
-                                      q_offset=pos[0])
+                                      q_offset=pos)
 
             rows = pos[:, None] + jnp.arange(S)[None, :]             # (B, S)
             blk = jnp.take_along_axis(

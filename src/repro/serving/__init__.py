@@ -1,3 +1,20 @@
+"""repro.serving — continuous-batching inference over a paged, refcounted,
+prefix-shared KV-cache.
+
+Public surface:
+  Engine            the serving engine (chunked/batched prefill, paged
+                    decode, admission control, preemption, prefix sharing)
+  Request           one generation request (prompt, budget, streaming cb)
+  BlockPool         host-side refcounting block allocator
+  RadixCache        prefix-sharing radix index over the block pool
+  ContinuousBatcher legacy fixed-slot API, now a shim over Engine
+  init_paged_cache  paged cache tree constructor
+
+See docs/serving.md for the usage guide and docs/architecture.md for how
+the pieces fit together.
+"""
+
 from .cache import BlockPool, init_paged_cache  # noqa: F401
 from .engine import Engine, Request  # noqa: F401
+from .radix import RadixCache  # noqa: F401
 from .scheduler import ContinuousBatcher  # noqa: F401

@@ -26,8 +26,11 @@ Recurrent / RWKV layer state is O(1) per request and stays per-slot (leading
 ``slot_merge`` move one slot's state in and out of the batched tree for the
 single-request chunked-prefill step.
 
-Refcounts are tracked per block so a future prefix-sharing / radix cache can
-alias blocks between requests; today every block has refcount 0 or 1.
+Refcounts are tracked per block so the prefix-sharing radix cache
+(serving/radix.py) can alias blocks between requests: a block's refcount is
+the number of owners (request slots holding it in their table, plus the
+radix tree if the block is indexed), and it returns to the free list only
+when the last owner releases it.
 """
 
 from __future__ import annotations
@@ -48,11 +51,23 @@ _PER_SLOT_KEYS = ("rnn", "rwkv", "cross")
 
 
 class BlockPool:
-    """Host-side allocator over the physical block ids of a paged cache.
+    """Host-side refcounting allocator over the physical block ids of a
+    paged cache.
 
+    Pure host-side integer bookkeeping — it never touches device arrays.
     Block 0 is the null block and is never handed out. ``alloc`` is
     all-or-nothing: either every requested block is granted or none are
-    (the caller then preempts and retries).
+    (the caller then evicts/preempts and retries).
+
+    Refcount protocol: ``alloc`` hands out blocks at refcount 1 (one
+    owner). ``ref`` adds an owner to a live block — the prefix-sharing path
+    uses this to attach an already-filled block to another request's table,
+    and the radix tree itself holds one reference per indexed block.
+    ``free`` drops one ownership per block; a block rejoins the free list
+    only at refcount 0, so shared blocks survive any single owner's exit.
+    Double-free (freeing a block with refcount 0) is an AssertionError: the
+    caller's ownership accounting is corrupt and continuing would hand the
+    same physical block to two requests.
     """
 
     def __init__(self, n_blocks: int):
@@ -63,9 +78,16 @@ class BlockPool:
 
     @property
     def n_free(self) -> int:
+        """Blocks immediately allocatable (refcount 0, in the free list)."""
         return len(self._free)
 
+    def refcount(self, block: int) -> int:
+        """Current owner count of ``block`` (0 == free)."""
+        return self._refs[block]
+
     def alloc(self, n: int) -> Optional[list[int]]:
+        """Pop ``n`` free blocks at refcount 1, or None if fewer are free
+        (all-or-nothing; the pool is left unchanged on failure)."""
         if n > len(self._free):
             return None
         ids = [self._free.popleft() for _ in range(n)]
@@ -74,12 +96,14 @@ class BlockPool:
         return ids
 
     def ref(self, ids: list[int]) -> None:
-        """Increment refcounts (prefix sharing hook; unused by the engine)."""
+        """Add one owner to each live block (prefix-sharing attach)."""
         for b in ids:
             assert self._refs[b] > 0, f"ref on unallocated block {b}"
             self._refs[b] += 1
 
     def free(self, ids: list[int]) -> None:
+        """Drop one ownership per block; refcount-0 blocks rejoin the free
+        list. Asserts on double free (see class docstring)."""
         for b in ids:
             assert self._refs[b] > 0, f"double free of block {b}"
             self._refs[b] -= 1

@@ -1,32 +1,55 @@
 """Streaming continuous-batching engine over the paged KV-cache pool.
 
 The engine owns (1) a paged cache (serving/cache.py): per-layer block pools
-plus a host-side BlockPool allocator, and (2) exactly two jit'd fixed-shape
-step functions, so steady-state serving never recompiles:
+plus a host-side BlockPool allocator, (2) an optional prefix-sharing radix
+cache (serving/radix.py) indexing already-filled prompt blocks, and (3) a
+fixed set of jit'd fixed-shape step functions, so steady-state serving never
+recompiles:
 
-  _decode        batched one-token step over all n_slots (active or not);
-                 inactive rows write to the null block and are masked out.
-  _prefill_chunk single-request chunk of `chunk_size` prompt tokens written
-                 straight into the request's pool blocks. Long prompts are
-                 admitted chunk by chunk, interleaved with decode steps, so
-                 they never head-of-line-block running requests.
+  _decode          batched one-token step over all n_slots (active or not);
+                   inactive rows write to the null block and are masked out.
+  _prefill_chunk   single-request chunk of `chunk_size` prompt tokens written
+                   straight into the request's pool blocks. Long prompts are
+                   admitted chunk by chunk, interleaved with decode steps, so
+                   they never head-of-line-block running requests.
+  _prefill_batched (prefill_batch > 1) the same chunk math over a fixed
+                   batch of `prefill_batch` requests, padded with inert rows
+                   whose tables point at the null block — short-prompt
+                   bursts admit in one forward instead of prefill_batch.
 
 Scheduling policy per `step()`: admit from the bounded queue while free
 slots AND first-chunk blocks exist -> run one prefill chunk (round-robin
-over prefilling slots) -> run one batched decode step.
+over prefilling slots; up to prefill_batch of them fused into one batched
+chunk) -> run one batched decode step.
+
+Prefix sharing (prefix_cache=True): admission looks the effective prompt up
+in the radix cache; the longest block-aligned cached prefix is attached by
+refcount bump and prefill starts after it (`prefill_done = matched`). After
+every chunk the request's fully-filled prompt blocks are inserted into the
+tree, so concurrent and later requests share them — a full-prompt hit skips
+prefill entirely. When the pool runs low, unreferenced cached blocks are
+LRU-evicted before any live request is preempted (see serving/radix.py for
+the ownership protocol). Sharing requires chunked prefill and an arch
+without per-slot recurrent state; it is silently disabled otherwise (check
+`engine.radix is not None`).
 
 Preemption: when a request needs a block and the pool is exhausted, the
 lowest-priority occupied slot (ties: latest admitted) is evicted — its
 blocks are freed and it is requeued at the front with its generated tokens
 folded into the prompt (recompute-style preemption), so it resumes exactly
-where it left off after re-prefill.
+where it left off after re-prefill. Blocks the radix tree indexes survive
+the preemption (the tree holds its own reference) and typically let the
+re-prefill skip the part that was already done.
 
 Determinism contract (tested): with a bf16 pool, greedy decode through the
 engine is bit-identical to decoding the request alone, because slot rows
 are disjoint (batch-independent math), masked cache positions contribute
 exact zeros, and the decode math on the gathered block view is the same
-masked softmax as the dense path. Quantized pools (int8/int4) quantize
-K/V at write time, so chunked prefill attends dequantized history where
+masked softmax as the dense path. Prefix sharing and batched prefill keep
+this bit-identity: a matched block holds exactly the bytes re-prefilling
+the same tokens would write, and batched prefill rows are batch-independent
+(pad rows write only the null block). Quantized pools (int8/int4) quantize
+K/V at write time, so chunked prefill sees dequantized history where
 whole-prompt prefill attends raw bf16 — serving stays deterministic
 run-to-run but is not bit-identical to the unquantized isolated decode.
 Recurrent archs likewise may drift ulps (the associative scan's split
@@ -50,10 +73,31 @@ import numpy as np
 
 from repro.models import lm
 from . import cache as C
+from .radix import RadixCache
 
 
 @dataclasses.dataclass
 class Request:
+    """One generation request.
+
+    Fields set by the caller:
+      uid       opaque id (echoed in logs/metrics, not interpreted)
+      prompt    (P,) int32 token ids; P == 0 is legal (decode from BOS-less
+                empty context)
+      max_new   generation budget; decoding also stops at eos_id or when the
+                context hits the engine's max_len - 1
+      eos_id    stop token (None: run to max_new)
+      priority  preemption order under pool exhaustion — LOWER priority is
+                evicted first; ties evict the latest-admitted slot
+      on_token  streaming callback, called as on_token(token: int,
+                done: bool) from inside `step()` in generation order
+
+    Fields filled by the engine:
+      out         generated token ids (ints), streamed in order
+      done        True once the request completed (not set for rejected)
+      rejected    True if admission control refused the request
+      n_preempted times this request was evicted and re-queued
+    """
     uid: int
     prompt: jax.Array            # (P,) int32 (P may be 0)
     max_new: int = 16
@@ -80,15 +124,43 @@ class _Slot:
     next_input: int = 0
     blocks: list = dataclasses.field(default_factory=list)
     admit_seq: int = 0
+    # radix insert resume hint: deepest indexed node + blocks indexed so
+    # far (valid while this slot lives — see RadixCache.insert)
+    radix_node: object = None
+    radix_done: int = 0
 
 
 class Engine:
-    """Paged continuous-batching engine. See module docstring."""
+    """Paged continuous-batching engine (see module docstring).
+
+    Constructor arguments:
+      cfg, params    model config + parameter tree (bf16 or quantize_tree'd)
+      n_slots        decode batch width (fixed shape of the decode step)
+      max_len        max context rows per request; multiple of block_size
+      block_size     tokens per paged KV block
+      n_blocks       physical pool size incl. the null block (default: every
+                     slot can hold max_len rows, so preemption never fires)
+      chunk_size     prefill chunk length (multiple of block_size, divides
+                     max_len; default ~2 blocks)
+      max_queue      bounded admission queue; submit() beyond it rejects
+      prefill        "chunked" (default) | "whole" (legacy admission)
+      prefill_batch  requests fused per prefill chunk step (fixed shape,
+                     padded; forced to 1 for recurrent archs / whole mode)
+      prefix_cache   enable the prefix-sharing radix cache (chunked,
+                     attention-only archs; silently disabled otherwise)
+      sample         logits (n_slots, V) f32 -> next token ids (n_slots,);
+                     default greedy argmax
+
+    All device state lives in `self.caches` (the paged tree) and flows
+    through the jit'd step functions with donated buffers; everything else
+    is host-side Python bookkeeping.
+    """
 
     def __init__(self, cfg, params, *, n_slots: int, max_len: int,
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  chunk_size: Optional[int] = None, max_queue: int = 64,
-                 prefill: str = "chunked",
+                 prefill: str = "chunked", prefill_batch: int = 1,
+                 prefix_cache: bool = False,
                  sample: Optional[Callable] = None):
         if cfg.is_encdec:
             raise NotImplementedError("engine: encoder-decoder serving")
@@ -121,11 +193,23 @@ class Engine:
                                          block_size)
         self.pool = C.BlockPool(self.n_blocks)
         self._has_state = C.has_per_slot_state(self.caches)
+        # batched prefill pads with inert rows — recurrent state must see
+        # exactly the prompt tokens, so stateful archs stay one-per-chunk
+        self.prefill_batch = 1 if (self._has_state or prefill == "whole") \
+            else max(1, min(prefill_batch, n_slots))
+        # prefix sharing aliases attention blocks between requests; per-slot
+        # recurrent state has no block boundary to share at, and whole-mode
+        # prefill recomputes from scratch (it cannot consume cached blocks)
+        self.radix = RadixCache(self.pool, block_size) \
+            if (prefix_cache and prefill == "chunked"
+                and not self._has_state) else None
         self.slots = [_Slot() for _ in range(n_slots)]
         self.queue: deque[Request] = deque()
 
         self._decode = jax.jit(self._decode_fn, donate_argnums=(0,))
         self._prefill_chunk = jax.jit(self._prefill_fn, donate_argnums=(0,))
+        self._prefill_batched = jax.jit(self._prefill_batched_fn,
+                                        donate_argnums=(0,))
         self._prefill_whole = jax.jit(self._prefill_whole_fn,
                                       donate_argnums=(0,))
         self._reset = jax.jit(C.reset_slot, donate_argnums=(0,))
@@ -133,16 +217,21 @@ class Engine:
         # counters
         self.steps = 0                 # engine steps (admit+prefill+decode)
         self.decode_steps = 0
-        self.prefill_chunks = 0
+        self.prefill_chunks = 0        # chunk launches (a batched launch is 1)
         self.busy_slot_steps = 0
         self.preemptions = 0
         self.rejections = 0
+        self.prefill_tokens_computed = 0   # real prompt rows run through prefill
+        self.prefill_tokens_shared = 0     # prompt rows attached from the radix
         self._admit_counter = 0
         self._pf_rr = 0
 
     # ---------------- jit'd step functions ----------------
 
     def _decode_fn(self, caches, tables, tokens, pos, active):
+        """One token for every slot. tokens (n_slots, 1) int32, pos
+        (n_slots,) int32, tables (n_slots, nb_max) int32, active (n_slots,)
+        bool. Returns (new caches, (n_slots, V) f32 last-token logits)."""
         h, new = lm.forward(self.params, self.cfg, tokens, caches=caches,
                             pos=pos, block_tables=tables)
         # inactive / prefilling slots keep their per-slot recurrent state
@@ -151,10 +240,24 @@ class Engine:
         return new, logits
 
     def _prefill_fn(self, caches, table_row, tokens, start, slot_ix):
+        """One prompt chunk for one request. tokens (1, chunk) int32 (pad
+        rows zero), start scalar int32 (first row index), slot_ix scalar
+        int32 (per-slot recurrent state row). Pad-row K/V falls into the
+        null block; per-slot state is sliced/merged around the forward."""
         sliced = C.slot_slice(caches, slot_ix)
         _, new = lm.forward(self.params, self.cfg, tokens, caches=sliced,
                             pos=start[None], block_tables=table_row[None])
         return C.slot_merge(caches, new, slot_ix)
+
+    def _prefill_batched_fn(self, caches, tables, tokens, starts):
+        """Fixed-shape multi-request chunk. tokens (prefill_batch, chunk)
+        int32, starts (prefill_batch,) int32, tables (prefill_batch, nb_max)
+        int32. Pad rows carry an all-null table (writes land in the null
+        block, outputs discarded). Only valid for archs without per-slot
+        state, so the returned tree is the updated pool wholesale."""
+        _, new = lm.forward(self.params, self.cfg, tokens, caches=caches,
+                            pos=starts, block_tables=tables)
+        return new
 
     def _prefill_whole_fn(self, caches, table_row, prompt, slot_ix):
         # legacy-equivalent admission: one full-prompt forward (same math,
@@ -172,8 +275,10 @@ class Engine:
         return -(-rows // self.block_size)
 
     def submit(self, req: Request) -> bool:
-        """Admission control: bounded queue + must-fit-alone check.
-        Returns False (and marks the request rejected) when refused."""
+        """Admission control: bounded queue + must-fit-alone check (the
+        worst case ignores prefix sharing — a cached prefix can be evicted
+        before the request runs). Returns False (and marks the request
+        rejected) when refused; never blocks."""
         P = int(np.asarray(req.prompt).shape[0])
         if len(self.queue) >= self.max_queue \
                 or P > self.max_len - 1 \
@@ -198,7 +303,9 @@ class Engine:
 
     def _preempt(self, ix: int):
         """Evict slot ix: free its blocks and requeue the request with its
-        generated tokens folded into the prompt (recompute preemption)."""
+        generated tokens folded into the prompt (recompute preemption).
+        Blocks the radix tree indexes stay cached (the tree holds its own
+        reference), so the re-prefill usually resumes past them."""
         s = self.slots[ix]
         req = s.req
         req.n_preempted += 1
@@ -209,9 +316,13 @@ class Engine:
         self.queue.appendleft(req)
 
     def _make_room(self, n: int, requester_ix: int) -> bool:
-        """Free blocks until n are available. Returns False if the requester
-        itself was evicted (it is the lowest-priority occupant)."""
+        """Free blocks until n are available: LRU-evict unreferenced radix-
+        cached blocks first (free — no live request is harmed), then preempt
+        victims. Returns False if the requester itself was evicted (it is
+        the lowest-priority occupant)."""
         while self.pool.n_free < n:
+            if self.radix is not None and self.radix.evict_one():
+                continue
             victim = self._pick_victim()
             if victim is None:
                 return False
@@ -227,6 +338,11 @@ class Engine:
         return None
 
     def _admit(self):
+        """Move queued requests into free slots while first-chunk blocks are
+        available. With the radix cache on, the effective prompt's longest
+        cached block-aligned prefix is attached by refcount bump and prefill
+        starts after it; admission may LRU-evict unreferenced cached blocks
+        but never preempts a running request."""
         while self.queue:
             ix = self._free_ix()
             if ix is None:
@@ -236,13 +352,27 @@ class Engine:
                 [np.asarray(req.prompt, np.int32).reshape(-1),
                  np.asarray(req.out, np.int32)])
             P = len(eff_prompt)
-            first_blocks = self._first_alloc_size(P)
+            shared: list[int] = []
+            if self.radix is not None and P > 0:
+                shared = self.radix.match(eff_prompt)
+            m = len(shared) * self.block_size
+            first_blocks = self._first_alloc_size(P, m)
+            while self.radix is not None \
+                    and first_blocks > self.pool.n_free \
+                    and self.radix.evict_one():
+                pass                         # eviction racing admission
             if first_blocks > self.pool.n_free:
+                if shared:
+                    self.pool.free(shared)   # release the match's references
                 return                       # wait for blocks to free up
             self.queue.popleft()
             self._admit_counter += 1
-            slot = _Slot(req=req, prompt=eff_prompt, pos=0, prefill_done=0,
-                         admit_seq=self._admit_counter)
+            self.prefill_tokens_shared += m
+            if self.radix is not None:
+                self.radix.hit_tokens += m
+                self.radix.miss_tokens += P - m
+            slot = _Slot(req=req, prompt=eff_prompt, pos=0, prefill_done=m,
+                         blocks=list(shared), admit_seq=self._admit_counter)
             self.slots[ix] = slot
             if self._has_state:
                 self.caches = self._reset(self.caches,
@@ -250,6 +380,11 @@ class Engine:
             if P == 0:
                 slot.state = _DECODE         # zero-block request
                 slot.next_input = 0
+            elif m >= P:
+                slot.state = _DECODE         # full-prefix hit: skip prefill
+                slot.prefill_done = P
+                slot.pos = P
+                slot.next_input = int(eff_prompt[-1])
             elif self.prefill_mode == "whole":
                 slot.state = _PREFILL        # visible to _pick_victim
                 self._do_whole_prefill(ix)
@@ -258,12 +393,17 @@ class Engine:
             else:
                 slot.state = _PREFILL
 
-    def _first_alloc_size(self, P: int) -> int:
+    def _first_alloc_size(self, P: int, shared: int = 0) -> int:
+        """Blocks the first prefill chunk needs beyond `shared` attached
+        prefix tokens (shared is always block-aligned)."""
         if P == 0:
             return 1
+        if shared >= P:
+            return 0
         if self.prefill_mode == "whole":
             return -(-P // self.block_size)
-        return -(-min(self.chunk_size, P) // self.block_size)
+        rows = shared + min(self.chunk_size, P - shared)
+        return -(-rows // self.block_size) - shared // self.block_size
 
     # ---------------- prefill ----------------
 
@@ -279,12 +419,16 @@ class Engine:
             self.caches, jnp.asarray(self._table_row(s)),
             jnp.asarray(s.prompt, jnp.int32)[None],
             jnp.asarray(ix, jnp.int32))
+        self.prefill_tokens_computed += P
         s.state = _DECODE
         s.prefill_done = P
         s.pos = P
         s.next_input = int(s.prompt[-1])
 
-    def _do_prefill_chunk(self, ix: int):
+    def _prep_chunk(self, ix: int):
+        """Host-side half of a chunk: pick bounds, ensure blocks (possibly
+        preempting), build the padded token row. Returns (tokens (length,),
+        start, real) or None if the slot was evicted while making room."""
         s = self.slots[ix]
         P = len(s.prompt)
         start = s.prefill_done
@@ -299,20 +443,75 @@ class Engine:
         need = -(-(start + real) // self.block_size) - len(s.blocks)
         if need > 0:
             if not self._make_room(need, ix):
-                return                        # self-preempted
+                return None                   # self-preempted
             s.blocks += self.pool.alloc(need)
         chunk = np.zeros((length,), np.int32)
         chunk[:real] = s.prompt[start:start + real]
+        return chunk, start, real
+
+    def _finish_chunk(self, ix: int, real: int):
+        """Advance bookkeeping after a chunk ran: index newly completed full
+        prompt blocks in the radix tree, flip to decode when done."""
+        s = self.slots[ix]
+        s.prefill_done += real
+        self.prefill_tokens_computed += real
+        if self.radix is not None:
+            s.radix_node, s.radix_done = self.radix.insert(
+                s.prompt[:s.prefill_done], s.blocks,
+                at=s.radix_node, done=s.radix_done)
+        if s.prefill_done >= len(s.prompt):
+            s.state = _DECODE
+            s.pos = len(s.prompt)
+            s.next_input = int(s.prompt[-1])
+
+    def _do_prefill_chunk(self, ix: int):
+        prep = self._prep_chunk(ix)
+        if prep is None:
+            return
+        chunk, start, real = prep
+        s = self.slots[ix]
         self.caches = self._prefill_chunk(
             self.caches, jnp.asarray(self._table_row(s)),
             jnp.asarray(chunk)[None],
             jnp.asarray(start, jnp.int32), jnp.asarray(ix, jnp.int32))
         self.prefill_chunks += 1
-        s.prefill_done = start + real
-        if s.prefill_done >= P:
-            s.state = _DECODE
-            s.pos = P
-            s.next_input = int(s.prompt[-1])
+        self._finish_chunk(ix, real)
+
+    def _do_prefill_batched(self, ixs: list[int]):
+        """Run one fused chunk over up to prefill_batch prefilling slots.
+        Pad rows (fewer live slots than prefill_batch) get an all-null
+        table: their writes land in the null block and their outputs are
+        never read."""
+        preps = []
+        for ix in ixs:
+            s = self.slots[ix]
+            if s.state != _PREFILL:
+                continue                      # evicted by an earlier prep
+            req = s.req
+            prep = self._prep_chunk(ix)
+            if prep is not None:
+                preps.append((ix, req, prep))
+        # a later slot's _make_room may have preempted an earlier prepped
+        # slot; only launch rows whose slot still holds the same request
+        live = [(ix, prep) for ix, req, prep in preps
+                if self.slots[ix].state == _PREFILL
+                and self.slots[ix].req is req]
+        if not live:
+            return
+        Bp = self.prefill_batch
+        tokens = np.zeros((Bp, self.chunk_size), np.int32)
+        starts = np.zeros((Bp,), np.int32)
+        tables = np.full((Bp, self.nb_max), C.NULL_BLOCK, np.int32)
+        for j, (ix, (chunk, start, _)) in enumerate(live):
+            tokens[j] = chunk
+            starts[j] = start
+            tables[j] = self._table_row(self.slots[ix])
+        self.caches = self._prefill_batched(
+            self.caches, jnp.asarray(tables), jnp.asarray(tokens),
+            jnp.asarray(starts))
+        self.prefill_chunks += 1
+        for ix, (_, _, real) in live:
+            self._finish_chunk(ix, real)
 
     # ---------------- decode ----------------
 
@@ -376,24 +575,41 @@ class Engine:
     # ---------------- main loop ----------------
 
     def step(self) -> int:
-        """Admit, run one prefill chunk (if any), run one decode step.
-        Returns the number of occupied slots."""
+        """Admit, run one prefill chunk step (batched over up to
+        prefill_batch requests), run one batched decode step. Returns the
+        number of occupied slots. Streaming callbacks fire from inside this
+        call, in generation order."""
         self._admit()
         prefilling = [i for i, s in enumerate(self.slots)
                       if s.state == _PREFILL]
         if prefilling:
-            ix = prefilling[self._pf_rr % len(prefilling)]
+            k = self._pf_rr % len(prefilling)
             self._pf_rr += 1
-            self._do_prefill_chunk(ix)
+            if self.prefill_batch > 1:
+                sel = (prefilling[k:] + prefilling[:k])[:self.prefill_batch]
+                self._do_prefill_batched(sel)
+            else:
+                self._do_prefill_chunk(prefilling[k])
         self._do_decode()
         self.steps += 1
         return sum(s.state != _FREE for s in self.slots)
 
     def run(self, max_steps: int = 10_000) -> dict:
+        """Step until the queue and all slots drain (or max_steps); returns
+        `metrics()`."""
         while (self.queue or any(s.state != _FREE for s in self.slots)) \
                 and self.steps < max_steps:
             self.step()
         return self.metrics()
+
+    def reset_prefix_cache(self):
+        """Invalidate the radix index (e.g. after swapping params). Cached
+        blocks not attached to a live request return to the free list;
+        in-flight requests are unaffected. No-op when sharing is off."""
+        if self.radix is not None:
+            self.radix.reset()
+            for s in self.slots:        # resume hints point into the old tree
+                s.radix_node, s.radix_done = None, 0
 
     def metrics(self) -> dict:
         util = self.busy_slot_steps / max(self.decode_steps * self.n_slots, 1)
@@ -402,9 +618,13 @@ class Engine:
             "engine_steps": self.steps,
             "decode_steps": self.decode_steps,
             "prefill_chunks": self.prefill_chunks,
+            "prefill_tokens_computed": self.prefill_tokens_computed,
+            "prefill_tokens_shared": self.prefill_tokens_shared,
             "preemptions": self.preemptions,
             "rejections": self.rejections,
             "slot_utilization": util,
+            "prefix_cache": (self.radix.metrics()
+                             if self.radix is not None else None),
             "n_compiles": self.n_compiles(),
         }
 
@@ -414,6 +634,7 @@ class Engine:
         try:
             return sum(int(f._cache_size()) for f in
                        (self._decode, self._prefill_chunk,
-                        self._prefill_whole, self._reset))
+                        self._prefill_batched, self._prefill_whole,
+                        self._reset))
         except AttributeError:                 # older jax: no _cache_size
             return None

@@ -1,0 +1,217 @@
+"""Prefix-sharing radix cache over the refcounted paged block pool.
+
+The serving engine's paged cache (serving/cache.py) stores K/V in fixed-size
+token blocks addressed through per-request block tables. For a causal model,
+the K/V rows a prefill writes for position ``t`` are a pure function of the
+token prefix ``tokens[:t + 1]`` — chunking, batching, and which request did
+the writing are all invisible to the bytes that land in the block. That
+makes fully-filled prompt blocks *content-addressable*: a new request whose
+prompt shares a block-aligned prefix with a previously prefilled one can
+attach the already-filled physical blocks by refcount bump instead of
+re-running prefill over them.
+
+``RadixCache`` is the host-side index that realizes this. It is a radix
+tree with one node per block: a node's edge label is the tuple of
+``block_size`` token ids stored in that block, so a root-to-node path spells
+a block-aligned token prefix and the node holds the physical block id whose
+K/V encode exactly that prefix. All bookkeeping is host-side Python over
+integer block ids — nothing here traces or touches device memory; the
+device-side attach is just the engine writing the matched ids into the
+request's block table.
+
+Ownership protocol (the whole correctness story is refcounts):
+
+  * every node holds ONE pool reference on its block for as long as the
+    node exists, so a cached block can never be handed back to the free
+    list (and overwritten) while the tree still maps tokens to it — this
+    is the invalidation guarantee across preemption and slot reuse;
+  * ``match`` bumps the refcount of every returned block — the caller owns
+    those references and releases them through the normal ``pool.free``
+    path when the request finishes or is preempted, exactly like blocks it
+    allocated itself;
+  * ``evict_one`` removes the least-recently-used *leaf* node whose block
+    has no owner besides the tree (refcount 1) and drops the tree's
+    reference, returning the block to the free list. Interior nodes are
+    never evicted before their children, so any path present in the tree
+    is always fully backed by live blocks.
+
+Only blocks written by *prefill* are ever inserted. Decode writes its row
+``P + i`` with the engine's duplicate-last-token convention (the first
+decode step re-runs ``prompt[-1]`` at position ``P``), so a decode-written
+row differs from what prefilling ``prompt + out`` would produce at the same
+position; inserting such blocks would silently break the bit-identity
+contract. The engine therefore inserts after each prefill chunk — full
+blocks only, which later chunks and decode never rewrite.
+
+Sharing is restricted to archs without per-slot recurrent state (the radix
+tree can alias attention blocks, but an RG-LRU / RWKV hidden state is a
+single O(1) tensor per slot that cannot be split at a block boundary).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from .cache import BlockPool
+
+
+class _Node:
+    """One cached block: edge label ``key`` (the block's token ids), the
+    physical ``block`` id, and an LRU stamp. Children are keyed by their own
+    token tuples."""
+
+    __slots__ = ("key", "block", "parent", "children", "last_use")
+
+    def __init__(self, key: Optional[tuple], block: int,
+                 parent: Optional["_Node"], last_use: int):
+        self.key = key
+        self.block = block
+        self.parent = parent
+        self.children: dict[tuple, _Node] = {}
+        self.last_use = last_use
+
+
+class RadixCache:
+    """Host-side radix index: block-aligned token prefixes -> physical block
+    ids of the paged pool, with LRU eviction of unreferenced entries.
+
+    Determinism: attaching matched blocks is exact reuse — the bytes in a
+    matched block are identical to what re-prefilling the same tokens would
+    write (bf16 pools bit-identical; quantized pools identical quantized
+    codes), so greedy decode with sharing enabled is token-identical to the
+    non-shared engine.
+    """
+
+    def __init__(self, pool: BlockPool, block_size: int):
+        self.pool = pool
+        self.block_size = block_size
+        self._root = _Node(None, -1, None, 0)
+        self._clock = 0
+        self.n_nodes = 0
+        # token-level accounting for the benchmark's savings report; the
+        # engine records these once per successful admission (match() does
+        # not, so blocked-admission re-probes cannot inflate them)
+        self.hit_tokens = 0
+        self.miss_tokens = 0
+        self.evictions = 0
+
+    # ---------------- queries ----------------
+
+    def _keys(self, tokens) -> list[tuple]:
+        bs = self.block_size
+        n = len(tokens) // bs
+        return [tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+                for i in range(n)]
+
+    def match(self, tokens) -> list[int]:
+        """Longest block-aligned prefix lookup.
+
+        ``tokens``: 1-D int sequence (the request's effective prompt).
+        Returns the physical block ids covering the longest cached prefix
+        (possibly empty), refcount-bumped: the caller owns one reference per
+        returned block and releases them via ``pool.free`` like blocks it
+        allocated itself. Touches the whole matched path for LRU.
+
+        Does NOT update ``hit_tokens``/``miss_tokens`` — a caller may probe
+        and then fail to admit (and re-probe next step), so it records
+        those once per *successful* admission itself.
+        """
+        self._clock += 1
+        node, out = self._root, []
+        for key in self._keys(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            self.pool.ref([child.block])
+            child.last_use = self._clock
+            out.append(child.block)
+            node = child
+        return out
+
+    def insert(self, tokens, blocks: list[int], *, at=None,
+               done: int = 0) -> tuple["_Node", int]:
+        """Index the fully-filled prefix blocks of a prefilled prompt.
+
+        ``tokens``: the rows actually prefilled so far (``prompt[:done]``);
+        ``blocks``: the owning slot's physical block ids covering them. Only
+        ``len(tokens) // block_size`` full blocks are inserted; each new
+        node takes one pool reference. Idempotent: existing nodes are kept
+        (a second request that independently prefilled the same content
+        keeps its private copy unindexed).
+
+        Returns ``(deepest node, blocks indexed)`` — pass them back as
+        ``at``/``done`` on the next chunk's insert to extend the path
+        without re-walking (and re-tupling) the whole prefix. A resume
+        node is always safe while its slot lives: every node on the path
+        holds one of the slot's own blocks, so it cannot be evicted out
+        from under the slot (the engine drops hints on ``reset``).
+        """
+        self._clock += 1
+        node = self._root if at is None else at
+        bs = self.block_size
+        n = len(tokens) // bs
+        for i in range(done, n):
+            key = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(key, blocks[i], node, self._clock)
+                self.pool.ref([blocks[i]])
+                node.children[key] = child
+                self.n_nodes += 1
+            child.last_use = self._clock
+            node = child
+        return node, n
+
+    # ---------------- eviction / invalidation ----------------
+
+    def _evictable(self):
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            if not n.children and self.pool.refcount(n.block) == 1:
+                yield n
+            stack.extend(n.children.values())
+
+    def evict_one(self) -> bool:
+        """Drop the LRU unreferenced leaf, returning its block to the free
+        list. Returns False when nothing is evictable (every cached block is
+        still attached to a live request, or the tree is empty). O(n_nodes)
+        scan per call — the tree is bounded by the pool (hundreds of
+        blocks), so a heap is not worth its invalidation bookkeeping yet."""
+        victim = min(self._evictable(), key=lambda n: n.last_use,
+                     default=None)
+        if victim is None:
+            return False
+        del victim.parent.children[victim.key]
+        self.n_nodes -= 1
+        self.evictions += 1
+        self.pool.free([victim.block])
+        return True
+
+    def reset(self) -> None:
+        """Invalidate the whole index, releasing every tree-held reference.
+        Blocks still attached to live requests survive (their slots hold
+        their own references); everything else returns to the free list."""
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            self.pool.free([n.block])
+        self._root.children.clear()
+        self.n_nodes = 0
+
+    # ---------------- introspection ----------------
+
+    @property
+    def n_cached_blocks(self) -> int:
+        return self.n_nodes
+
+    @property
+    def n_evictable(self) -> int:
+        return sum(1 for _ in self._evictable())
+
+    def metrics(self) -> dict:
+        return {"cached_blocks": self.n_nodes,
+                "hit_tokens": self.hit_tokens,
+                "miss_tokens": self.miss_tokens,
+                "evictions": self.evictions}

@@ -10,9 +10,12 @@ is bit-identical to the old dense slot cache, so the original determinism
 contract still holds: greedy decoding of a request through the batcher
 equals decoding it alone.
 
-New code should use ``Engine`` directly (chunked prefill, admission
-control, preemption, streaming); this class exists so existing callers and
-tests keep working unchanged.
+The shim deliberately pins the PR 2 engine configuration: whole-prompt
+prefill (which implies ``prefill_batch == 1`` and no prefix sharing — the
+whole-prompt forward recomputes from scratch and cannot consume cached
+blocks). New code should use ``Engine`` directly (chunked/batched prefill,
+admission control, preemption, prefix sharing, streaming); this class
+exists so existing callers and tests keep working unchanged.
 """
 
 from __future__ import annotations
@@ -23,7 +26,17 @@ from .engine import Engine, Request  # noqa: F401  (Request re-exported)
 
 
 class ContinuousBatcher:
-    """Drives the paged Engine with legacy dense-batcher semantics."""
+    """Drives the paged Engine with legacy dense-batcher semantics.
+
+    Constructor: ``cfg, params`` (model config + bf16/quantized params),
+    ``n_slots`` (fixed decode batch width), ``max_len`` (context rows per
+    slot), ``sample`` (logits (n_slots, V) f32 -> (n_slots,) ids; default
+    greedy argmax).
+
+    Determinism: greedy decode of any submitted request is bit-identical to
+    decoding it alone (bf16 pools; see the module docstring). The queue is
+    unbounded and the pool never preempts.
+    """
 
     def __init__(self, cfg, params, *, n_slots: int, max_len: int,
                  sample: Optional[Callable] = None):
@@ -34,7 +47,8 @@ class ContinuousBatcher:
             cfg, params, n_slots=n_slots, max_len=max_len,
             block_size=block_size,
             n_blocks=n_slots * (max_len // block_size) + 1,  # never preempts
-            max_queue=10 ** 9, prefill="whole", sample=sample)
+            max_queue=10 ** 9, prefill="whole", prefill_batch=1,
+            prefix_cache=False, sample=sample)
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -44,22 +58,31 @@ class ContinuousBatcher:
 
     @property
     def queue(self):
+        """The engine's admission deque (pending Request objects)."""
         return self.engine.queue
 
     @property
     def steps(self) -> int:
+        """Decode steps taken so far (legacy name)."""
         return self.engine.decode_steps
 
     @property
     def busy_slot_steps(self) -> int:
+        """Sum over decode steps of the number of active slots."""
         return self.engine.busy_slot_steps
 
     def submit(self, req: Request) -> bool:
+        """Queue a request. Always True unless the prompt cannot fit a slot
+        (P > max_len - 1); the legacy queue is unbounded."""
         return self.engine.submit(req)
 
     def step(self) -> int:
+        """Admit + one whole-prompt prefill + one batched decode step.
+        Returns the number of occupied slots."""
         return self.engine.step()
 
     def run(self, max_steps: int = 10_000) -> dict:
+        """Drain queue and slots; returns the legacy metrics subset
+        (``steps``, ``slot_utilization``)."""
         m = self.engine.run(max_steps)
         return {"steps": m["steps"], "slot_utilization": m["slot_utilization"]}
