@@ -1,6 +1,6 @@
 """Serving-throughput smoke benchmark (CI artifact BENCH_serving.json).
 
-Two workloads:
+Four workloads:
 
 1. Mixed lengths (paged engine vs legacy dense-style batching): more
    requests than slots, prompt lengths drawn from [8, 256] — the regime the
@@ -18,12 +18,27 @@ Two workloads:
    `prefill_batch` requests at a time. CI gates: >= 1.3x req/s, >= 50%
    fewer prefill tokens computed, greedy outputs token-identical.
 
+3. Quantized serving (the paper's deployment form through the engine): the
+   same mixed-length workload on a fully PLANNED w2a2 model — every dense
+   runs kernels/ops.lut_gemm with precomputed per-layer product LUTs and
+   dynamically quantized activations — vs the bf16 engine. Reported:
+   tokens/s, weight bytes moved per decoded token (packed vs bf16), and the
+   kernel-dispatch counters. CI gates: the workload completes, greedy decode
+   is token-deterministic run-to-run, and the lut_gemm dispatch counter is
+   nonzero (a silent fallback to full dequantization fails the gate).
+
+4. Group-scale ablation (perplexity proxy): logit MSE vs the bf16 model at
+   equal bits, per-output-channel w2a16 vs group-wise G=64 w2a16 on a
+   widened qwen1.5-0.5b smoke config. CI gates grouped MSE strictly below
+   per-channel MSE.
+
 Reported per backend: wall time, requests/s, tokens/s, mean/median
 time-to-first-token, decode steps, prefill tokens computed/shared, and jit
 cache entries sampled early vs at the end (`recompiled_between_steps` must
 stay False for the engine).
 """
 
+import dataclasses
 import json
 import os
 import platform
@@ -33,6 +48,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
+from repro.core import qplan
+from repro.kernels import ops as kops
 from repro.models import lm
 from repro.serving import ContinuousBatcher, Engine, Request
 
@@ -49,6 +66,11 @@ _SP_REQUESTS = 16
 _SP_PREFIX = 192                      # 6 blocks of 32, block-aligned
 _SP_SUFFIX = (8, 48)
 _SP_PREFILL_BATCH = 4
+# quantized-serving workload (planned w2a2 engine; interpret-mode kernels on
+# CPU are slow, so a subset of the mixed-length requests keeps CI fast)
+_Q_PLAN = "w2a2"
+_Q_REQUESTS = 6
+_Q_GROUP = 64                         # group-scale ablation group size
 
 
 def _workload(cfg, seed=0):
@@ -134,6 +156,81 @@ def _drive(make_backend, prompts, warmup: bool = False) -> dict:
     }
 
 
+def _weight_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def _quantized_serving(cfg, params, prompts) -> dict:
+    """Planned w2a2 engine vs the bf16 engine on mixed-length requests.
+
+    The quantized engine's every plan-covered dense reaches
+    kernels/ops.lut_gemm (asserted via the trace-time dispatch counter — a
+    silent fallback to full dequantization would leave it at zero), runs the
+    workload twice to check greedy decode is token-deterministic run-to-run,
+    and reports weight-bytes-moved per decoded token vs bf16 (each decode
+    step reads every weight once, so the packed-tree byte ratio is the
+    HBM-traffic ratio of the weight stream)."""
+    qcfg = dataclasses.replace(cfg, quant=qplan.get_plan(_Q_PLAN))
+    qparams = jax.block_until_ready(lm.quantize_tree(params, qcfg))
+
+    def eng(c, p):
+        return Engine(c, p, n_slots=_N_SLOTS, max_len=_MAX_LEN,
+                      block_size=_BLOCK, chunk_size=_CHUNK,
+                      max_queue=2 * _N_REQUESTS)
+
+    # warmup=True: compile outside the timed window (interpret-mode Pallas
+    # compile otherwise dominates and tok/s would measure XLA, not serving);
+    # the dispatch counters are trace-time, so they fire during the warmup
+    kops.reset_dispatch_counts()
+    q1 = _drive(lambda: eng(qcfg, qparams), prompts, warmup=True)
+    counts = {k: v for k, v in kops.dispatch_counts().items() if ":" not in k}
+    q2 = _drive(lambda: eng(qcfg, qparams), prompts, warmup=True)
+    bf = _drive(lambda: eng(cfg, params), prompts, warmup=True)
+    qb, fb = _weight_bytes(qparams), _weight_bytes(params)
+    return {
+        "plan": _Q_PLAN,
+        "n_requests": len(prompts),
+        "quantized": {k: v for k, v in q1.items() if k != "outputs"},
+        "bf16": {k: v for k, v in bf.items() if k != "outputs"},
+        "deterministic_run_to_run": q1["outputs"] == q2["outputs"],
+        "kernel_dispatches": counts,
+        "lut_gemm_dispatched": counts.get("lut_gemm", 0) > 0,
+        "weight_bytes": qb,
+        "weight_bytes_bf16": fb,
+        "weight_bytes_moved_per_token_ratio": round(qb / max(fb, 1), 4),
+        "tok_per_s_vs_bf16": round(
+            q1["tok_per_s"] / max(bf["tok_per_s"], 1e-9), 3),
+    }
+
+
+def _group_ablation() -> dict:
+    """Perplexity proxy at equal bits: logit MSE vs bf16 for per-channel
+    w2a16 vs group-wise (G=_Q_GROUP) w2a16. Widened smoke dims so layers
+    have K > G (multiple scale groups per row)."""
+    import jax.numpy as jnp
+    cfg = dataclasses.replace(reduce_for_smoke(get_config(_ARCH)),
+                              d_model=128, d_ff=256)
+    params = lm.init_params(jax.random.PRNGKey(2), cfg, mode="plain")
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 32), 0,
+                                cfg.vocab_size)
+
+    def logits(c, p):
+        h, _ = lm.forward(p, c, tokens)
+        return lm.logits_fn(p, c, h).astype(jnp.float32)
+
+    base = logits(cfg, params)
+    out = {"arch": cfg.name, "d_model": cfg.d_model, "w_bits": 2,
+           "group_size": _Q_GROUP}
+    for name, plan in (("per_channel", qplan.make_plan(2)),
+                       ("grouped", qplan.make_plan(2, group_size=_Q_GROUP))):
+        c = dataclasses.replace(cfg, quant=plan)
+        qp = lm.quantize_tree(params, c)
+        out[f"logit_mse_{name}"] = float(jnp.mean((logits(c, qp) - base) ** 2))
+    out["grouped_better"] = (out["logit_mse_grouped"]
+                             < out["logit_mse_per_channel"])
+    return out
+
+
 def run(json_out: str = "BENCH_serving.json") -> dict:
     cfg = reduce_for_smoke(get_config(_ARCH))
     params = lm.init_params(jax.random.PRNGKey(0), cfg, mode="plain")
@@ -188,6 +285,24 @@ def run(json_out: str = "BENCH_serving.json") -> dict:
     sp_speedup = sp_radix["req_per_s"] / max(sp_base["req_per_s"], 1e-9)
     sp_same = sp_radix["outputs"] == sp_base["outputs"]
 
+    print(f"[serving] quantized engine: plan {_Q_PLAN}, {_Q_REQUESTS} reqs "
+          f"(kernel-backed LUT GEMM, run twice for determinism)", flush=True)
+    quantized = _quantized_serving(cfg, params, prompts[:_Q_REQUESTS])
+    print(f"[serving]   {quantized['quantized']['tok_per_s']} tok/s "
+          f"({quantized['tok_per_s_vs_bf16']}x bf16), weight bytes "
+          f"{quantized['weight_bytes_moved_per_token_ratio']}x bf16, "
+          f"lut_gemm dispatches "
+          f"{quantized['kernel_dispatches'].get('lut_gemm', 0)}, "
+          f"deterministic {quantized['deterministic_run_to_run']}", flush=True)
+
+    print("[serving] group-scale ablation (w2a16 per-channel vs grouped)",
+          flush=True)
+    ablation = _group_ablation()
+    print(f"[serving]   logit MSE per-channel "
+          f"{ablation['logit_mse_per_channel']:.5f} vs grouped "
+          f"{ablation['logit_mse_grouped']:.5f} "
+          f"(grouped_better={ablation['grouped_better']})", flush=True)
+
     same_tokens = paged["outputs"] == dense["outputs"]
     result = {
         "benchmark": "serving",
@@ -217,6 +332,8 @@ def run(json_out: str = "BENCH_serving.json") -> dict:
             "speedup_req_per_s": round(sp_speedup, 2),
             "prefill_token_savings": round(sp_savings, 3),
         },
+        "quantized_serving": quantized,
+        "group_scale_ablation": ablation,
         "total_s": round(time.time() - t0, 2),
     }
     out_dir = os.path.dirname(json_out)

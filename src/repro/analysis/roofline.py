@@ -322,13 +322,21 @@ def parse_hlo(hlo: str, *, bf16_model: bool = False) -> HloStats:
 
 def param_bytes(cfg, quantized: bool) -> float:
     """Model weight bytes (global). Quantized: policy-covered GEMM weights at
-    w_bits packed, embeddings/norms/router bf16."""
+    w_bits packed, embeddings/norms/router bf16. ``cfg.quant`` may be a
+    single QuantPolicy or a qplan.QuantPlan — for a plan the catch-all GEMM
+    policy (resolved for a representative dense tag) sets the bitwidth."""
     P = cfg.n_params()
-    if not quantized or cfg.quant.w_bits is None:
+    # representative GEMM class: the MLP projections hold the parameter
+    # majority, so a mixed plan is billed at its catch-all rule rather than
+    # an attention-specific one (approximation: all covered weights at one
+    # bitwidth; attention falls back when a plan skips the MLP class)
+    pol = cfg.quant.policy_for("mlp.w_up") or cfg.quant.policy_for("attn.wq")
+    if not quantized or pol is None or pol.w_bits is None:
         return P * 2.0
     embed = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
     covered = P - embed
-    return covered * cfg.quant.w_bits / 8.0 + embed * 2.0
+    group = (32.0 / pol.group_size) if pol.group_size else 0.0
+    return covered * (pol.w_bits + group) / 8.0 + embed * 2.0
 
 
 def kv_cache_bytes(cfg, batch: int, seq: int) -> float:

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.qlinear import QuantPolicy
+from repro.core.qplan import QuantPlan
 
 
 # --------------------------------------------------------------------------- #
@@ -65,8 +66,10 @@ class ModelConfig:
     # --- moe
     moe: Optional[MoEConfig] = None
     moe_pattern: Optional[tuple] = None   # per-pattern-slot: MoE mlp? (None => all)
-    # --- quantization policy for the paper's technique
-    quant: QuantPolicy = QuantPolicy(w_bits=2, a_bits=None)
+    # --- quantization policy/plan for the paper's technique: a single
+    #     QuantPolicy (legacy dequant-einsum serving) or a qplan.QuantPlan
+    #     (ordered tag -> policy table; kernel-backed planned serving)
+    quant: QuantPolicy | QuantPlan = QuantPolicy(w_bits=2, a_bits=None)
     kv_cache_dtype: str = "bfloat16"   # bfloat16 | int8 (serve-time cache)
     # --- training
     dtype: str = "bfloat16"

@@ -1,2 +1,3 @@
-"""DeepGEMM core: quantization, packing, LUT construction, quantized layers."""
-from . import conv, lut, packing, qlinear, quant  # noqa: F401
+"""DeepGEMM core: quantization, packing, LUT construction, quantized layers,
+and the per-layer execution-plan subsystem (qplan)."""
+from . import conv, lut, packing, qlinear, qplan, quant  # noqa: F401

@@ -51,6 +51,18 @@ def packed_len(n: int, bits: int) -> int:
     return n // f
 
 
+def padded_len(n: int, bits: int, group_size: int | None = None) -> int:
+    """Packed axis length after padding n codes up to a pack-factor multiple
+    — and to a scale-group multiple when group-wise quantization is on (the
+    group reshape (out, K/G, G) needs whole groups; group_size must itself
+    be a pack-factor multiple so packed bytes never straddle groups)."""
+    m = PACK_FACTOR[bits]
+    if group_size is not None:
+        assert group_size % m == 0, (group_size, m)
+        m = group_size
+    return n + (-n) % m
+
+
 # --------------------------------------------------------------------------- #
 # Scheme 'a' — natural order
 # --------------------------------------------------------------------------- #

@@ -16,19 +16,32 @@ Three execution modes, all sharing one parameter pytree:
 
 Mixed precision (paper §1, HAWQ-V3 discussion): a ``QuantPolicy`` maps layer
 classes -> bits (None = keep bf16), so sensitive layers (router, embeddings)
-stay high precision while GEMM-heavy layers drop to 2 bits.
+stay high precision while GEMM-heavy layers drop to 2 bits. ``core/qplan.py``
+generalizes the single policy into an ordered tag -> policy table (the
+execution plan) and is where kernel-backed serving is opted into: a policy
+with ``kernel`` set produces QuantizedWeight leaves that ``models/layers.
+dense`` dispatches through the Pallas kernels; a legacy policy (kernel None)
+keeps the historical dequant-einsum formulation bit-for-bit.
+
+Everything the serving hot path needs is precomputed OFFLINE at quantize
+time and stored in the packed pytree: sub-byte codes (packing scheme
+recorded and dispatched explicitly), group-wise scales (per (out, K/G)
+along the contraction axis — finer than per-channel at the same bits), the
+activation codebook, and the weight x activation product LUT. The jit'd
+forward never calls ``product_lut`` or ``uniform_codebook``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import packing, quant
-from .lut import product_lut
+from .lut import ProductLUT, product_lut
 from repro.kernels import ops as kops
 
 
@@ -36,19 +49,75 @@ from repro.kernels import ops as kops
 # Policy
 # --------------------------------------------------------------------------- #
 
+def _component_parts(component: str) -> list[str]:
+    """'tok_embed' -> ['tok_embed', 'tok', 'embed']."""
+    return [component] + (component.split("_") if "_" in component else [])
+
+
+def tag_matches(pattern: str, tag: str) -> bool:
+    """True if ``pattern`` matches ``tag`` (shared by QuantPolicy.skip and
+    qplan.QuantPlan rules).
+
+    * ``"*"`` matches every tag.
+    * Otherwise both are split into path components on ``.``/``/`` and the
+      pattern's component sequence must appear as a CONTIGUOUS subsequence
+      of the tag's components ('moe.experts' matches
+      'blocks.l0.moe.experts.we_gate'). A single-component pattern also
+      matches a component's underscore-separated words ('norm' matches
+      'final_norm' but not 'w_denorm' — never substrings).
+    """
+    if pattern == "*":
+        return True
+    pat = [c for c in re.split(r"[./]", pattern) if c]
+    tc = [c for c in re.split(r"[./]", tag) if c]
+    if not pat or len(pat) > len(tc):
+        return False
+    if len(pat) == 1:
+        return any(pat[0] in _component_parts(c) for c in tc)
+    return any(all(tc[i + j] == pat[j] for j in range(len(pat)))
+               for i in range(len(tc) - len(pat) + 1))
+
+
+def skip_matches(name: str, tag: str) -> bool:
+    """Skip-list match: component semantics of ``tag_matches`` (supports
+    dotted entries like 'moe.experts'), NOT substrings."""
+    return tag_matches(name, tag)
+
+
 @dataclasses.dataclass(frozen=True)
 class QuantPolicy:
-    """Per-layer-class quantization policy (mixed precision)."""
+    """Per-layer-class quantization policy (mixed precision).
+
+    ``group_size`` switches weight calibration from per-output-channel to
+    group-wise along K: one scale per (out, K/G) group (K padded to a
+    multiple of G). ``kernel`` opts the layer into kernel-backed serving
+    dispatch: None keeps the legacy dequant-einsum forward; 'auto' resolves
+    to 'lut_gemm' when a_bits is set, else 'dequant_matmul'; or name one
+    explicitly. 'bf16' pins the layer to full precision: such a policy
+    never applies, so quantize_tree leaves the weight untouched.
+    """
     w_bits: Optional[int] = 2          # None => bf16 layer
     a_bits: Optional[int] = None       # None => weight-only (w2a16)
     signed: bool = True
     scheme: str = "d"                  # packing scheme for serving
     nonuniform: bool = False           # k-means codebook instead of uniform
-    # layer classes to keep full precision (names matched against layer tags)
+    # layer classes to keep full precision (matched against tag components)
     skip: tuple = ("router", "embed", "norm")
+    group_size: Optional[int] = None   # K-group size for scales (None: per-channel)
+    kernel: Optional[str] = None       # None | 'auto' | 'dequant_matmul' | 'lut_gemm'
 
     def applies(self, tag: str) -> bool:
-        return self.w_bits is not None and not any(s in tag for s in self.skip)
+        return self.w_bits is not None and self.kernel != "bf16" and not any(
+            skip_matches(s, tag) for s in self.skip)
+
+    def policy_for(self, tag: str) -> Optional["QuantPolicy"]:
+        """Uniform interface with qplan.QuantPlan."""
+        return self if self.applies(tag) else None
+
+    def resolved_kernel(self) -> Optional[str]:
+        if self.kernel != "auto":
+            return self.kernel
+        return "lut_gemm" if self.a_bits is not None else "dequant_matmul"
 
 
 BF16_POLICY = QuantPolicy(w_bits=None)
@@ -66,9 +135,19 @@ W4A8 = QuantPolicy(w_bits=4, a_bits=8)
 class QuantizedWeight:
     """Serving-time packed weight for one dense layer.
 
-    packed   : (out, in/f) uint8 — scheme-'a' packed codes along K
+    packed   : (out, in/f) uint8 — packed codes along K (scheme in ``scheme``;
+               schemes 'c'/'d' are byte-identical to 'a' — the index-ready
+               trick lives in the unpack masks, see core/packing.py)
     codebook : (2^bits,) f32 — *unscaled* levels (uniform ints or k-means)
-    scales   : (out,) f32 — per-output-channel scale
+    scales   : (out,) f32 per-output-channel, or (out, K/G) group-wise when
+               ``group_size`` is set (K the padded contraction axis)
+    a_levels : (2^a_bits,) f32 activation codebook, precomputed at quantize
+               time for w{b}a{b} plans (None otherwise)
+    plut     : (2^(bits+a_bits),) f32 product LUT table, precomputed at
+               quantize time for w{b}a{b} plans (None otherwise)
+    kernel   : serving dispatch — None keeps the legacy dequant-einsum path
+               in models/layers.dense; 'dequant_matmul' / 'lut_gemm' route
+               through kernels/ops.
     """
     packed: jax.Array
     codebook: jax.Array
@@ -76,17 +155,29 @@ class QuantizedWeight:
     bits: int
     in_features: int
     out_features: int
+    group_size: Optional[int] = None
+    a_bits: Optional[int] = None
+    scheme: str = "a"
+    kernel: Optional[str] = None
+    a_levels: Optional[jax.Array] = None
+    plut: Optional[jax.Array] = None
 
     def tree_flatten_with_keys(self):
         return (
             (jax.tree_util.GetAttrKey("packed"), self.packed),
             (jax.tree_util.GetAttrKey("codebook"), self.codebook),
             (jax.tree_util.GetAttrKey("scales"), self.scales),
-        ), (self.bits, self.in_features, self.out_features)
+            (jax.tree_util.GetAttrKey("a_levels"), self.a_levels),
+            (jax.tree_util.GetAttrKey("plut"), self.plut),
+        ), (self.bits, self.in_features, self.out_features, self.group_size,
+            self.a_bits, self.scheme, self.kernel)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        packed, codebook, scales, a_levels, plut = children
+        bits, in_f, out_f, group_size, a_bits, scheme, kernel = aux
+        return cls(packed, codebook, scales, bits, in_f, out_f, group_size,
+                   a_bits, scheme, kernel, a_levels, plut)
 
     @property
     def nbytes_packed(self) -> int:
@@ -99,25 +190,64 @@ jax.tree_util.register_pytree_with_keys(
     QuantizedWeight.tree_unflatten)
 
 
-def _pad_k(wt: jax.Array, bits: int) -> jax.Array:
-    """Pad the contraction axis to a pack-factor multiple with zeros (the
-    zero-value code dequantizes to exactly 0.0 -> padded columns contribute
-    nothing; dequant_weight slices them back off)."""
-    pad = (-wt.shape[-1]) % packing.PACK_FACTOR[bits]
+def _pad_k(wt: jax.Array, bits: int, group_size: Optional[int] = None) -> jax.Array:
+    """Pad the contraction axis to a pack-factor (and group-size) multiple
+    with zeros (the zero-value code dequantizes to exactly 0.0 -> padded
+    columns contribute nothing; dequant_weight slices them back off)."""
+    pad = packing.padded_len(wt.shape[-1], bits, group_size) - wt.shape[-1]
     if pad:
         cfgpad = [(0, 0)] * (wt.ndim - 1) + [(0, pad)]
         wt = jnp.pad(wt, cfgpad)
     return wt
 
 
-def quantize_weight(
-    w: jax.Array, policy: QuantPolicy
-) -> QuantizedWeight:
+def _pack_for_scheme(idx: jax.Array, bits: int, scheme: str) -> jax.Array:
+    """Explicit scheme dispatch (reconciles quantize_weight with lut_gemm's
+    scheme: what is packed is what the kernel unpacks). Schemes 'c'/'d'
+    share 'a''s byte layout by construction — pack_indexready IS pack; the
+    index-ready saving is in the unpack masks — so dequant_weight's natural
+    unpack stays valid for every scheme (property-tested)."""
+    if scheme in ("c", "d"):
+        return packing.pack_indexready(idx, bits)
+    return packing.pack(idx, bits)
+
+
+def _calibrate(wt: jax.Array, bits: int, signed: bool,
+               group_size: Optional[int]) -> tuple[jax.Array, jax.Array]:
+    """(..., out, K) -> (scales, scales expanded to (..., out, K)).
+    Per-channel: scales (..., out). Group-wise: scales (..., out, K/G)."""
+    if group_size is None:
+        scales = quant.group_scales(wt, bits, None, signed=signed)
+        return scales, scales[..., None]
+    scales = quant.group_scales(wt, bits, group_size, signed=signed)
+    return scales, quant.expand_group_scales(scales, group_size)
+
+
+def _act_tables(policy: QuantPolicy, w_levels: jax.Array):
+    """Precompute the activation codebook + product LUT once, offline, for
+    plans that run the paper-faithful w{b}a{b} kernel."""
+    if policy.a_bits is None or policy.resolved_kernel() != "lut_gemm":
+        return None, None
+    a_levels = quant.uniform_codebook(policy.a_bits, True).levels
+    plut = product_lut(w_levels, a_levels).table
+    return a_levels, plut
+
+
+def quantize_weight(w: jax.Array, policy: QuantPolicy) -> QuantizedWeight:
     """Offline weight quantize+pack (paper: 'packing and quantization of
-    weights was handled offline'). w: (in, out) -> packed (out, ceil(in/f))."""
+    weights was handled offline'). w: (in, out) -> packed (out, ceil(in/f)).
+
+    With ``policy.group_size`` set, scales are per (out, K/G) group along
+    the contraction axis. With ``policy.kernel`` set, the returned leaf also
+    carries the precomputed activation codebook and product LUT and is
+    dispatched through the Pallas kernels by models/layers.dense.
+    """
     bits = policy.w_bits
     assert bits is not None
-    wt = _pad_k(w.T.astype(jnp.float32), bits)              # (out, in_pad)
+    G = policy.group_size
+    if policy.nonuniform and G is not None:
+        raise NotImplementedError("group-wise scales with a k-means codebook")
+    wt = _pad_k(w.T.astype(jnp.float32), bits, G)            # (out, in_pad)
     if policy.nonuniform:
         cb = quant.kmeans_codebook(wt, bits)
         # per-channel scale folded as amax normalisation before codebook fit
@@ -125,43 +255,56 @@ def quantize_weight(
         idx = quant.codebook_quantize(wt, cb)
         levels = cb.levels
     else:
-        scales, _ = quant.compute_scale_zero_point(
-            wt, bits, signed=policy.signed, axis=0, symmetric=True)
-        scales = scales.reshape(-1)                          # (out,)
-        q = quant.quantize(wt, scales[:, None], bits=bits, signed=policy.signed)
+        scales, sfull = _calibrate(wt, bits, policy.signed, G)
+        q = quant.quantize(wt, sfull, bits=bits, signed=policy.signed)
         idx = quant.to_index(q, bits, policy.signed)
         levels = quant.uniform_codebook(bits, policy.signed).levels
-    packed = packing.pack(idx, bits)
+    a_levels, plut = _act_tables(policy, levels)
     return QuantizedWeight(
-        packed=packed, codebook=levels, scales=scales, bits=bits,
-        in_features=w.shape[0], out_features=w.shape[1])
+        packed=_pack_for_scheme(idx, bits, policy.scheme), codebook=levels,
+        scales=scales, bits=bits,
+        in_features=w.shape[0], out_features=w.shape[1],
+        group_size=G, a_bits=policy.a_bits, scheme=policy.scheme,
+        kernel=policy.resolved_kernel() if policy.kernel else None,
+        a_levels=a_levels, plut=plut)
 
 
 def quantize_expert_weight(w: jax.Array, policy: QuantPolicy) -> QuantizedWeight:
     """Offline quantize+pack for stacked expert weights. w: (E, in, out) ->
-    packed (E, out, in/f), scales (E, out) per-expert-per-channel."""
+    packed (E, out, in/f), scales (E, out) per-expert-per-channel or
+    (E, out, K/G) group-wise."""
     bits = policy.w_bits
     assert bits is not None and w.ndim == 3
-    wt = _pad_k(jnp.swapaxes(w, 1, 2).astype(jnp.float32), bits)  # (E, out, in_pad)
-    scales, _ = quant.compute_scale_zero_point(
-        wt.reshape(-1, wt.shape[-1]), bits, signed=policy.signed, axis=0,
-        symmetric=True)
-    scales = scales.reshape(wt.shape[0], wt.shape[1])        # (E, out)
-    q = quant.quantize(wt, scales[..., None], bits=bits, signed=policy.signed)
+    G = policy.group_size
+    wt = _pad_k(jnp.swapaxes(w, 1, 2).astype(jnp.float32), bits, G)  # (E, out, in_pad)
+    scales, sfull = _calibrate(wt, bits, policy.signed, G)
+    q = quant.quantize(wt, sfull, bits=bits, signed=policy.signed)
     idx = quant.to_index(q, bits, policy.signed)
     levels = quant.uniform_codebook(bits, policy.signed).levels
+    # experts dispatch through expert_dequant_matmul (weight-only); the
+    # activation-quantized grouped LUT GEMM for experts is deferred.
+    kern = policy.resolved_kernel() if policy.kernel else None
+    if kern == "lut_gemm":
+        kern = "dequant_matmul"
     return QuantizedWeight(
-        packed=packing.pack(idx, bits), codebook=levels, scales=scales,
-        bits=bits, in_features=w.shape[1], out_features=w.shape[2])
+        packed=_pack_for_scheme(idx, bits, policy.scheme), codebook=levels,
+        scales=scales, bits=bits, in_features=w.shape[1],
+        out_features=w.shape[2], group_size=G, a_bits=None,
+        scheme=policy.scheme, kernel=kern)
 
 
 def dequant_weight(qw: QuantizedWeight) -> jax.Array:
-    """Full dequantization (codebook gather + per-channel scale), returned in
-    (in, out) / (E, in, out) orientation for einsum use. This is the GSPMD-
-    shardable formulation the dry-run lowers; the Pallas kernels fuse the same
-    three steps tile-wise in VMEM."""
+    """Full dequantization (codebook gather + per-channel or group scale),
+    returned in (in, out) / (E, in, out) orientation for einsum use. This is
+    the GSPMD-shardable formulation the dry-run lowers; the Pallas kernels
+    fuse the same steps tile-wise in VMEM. (Valid for every packing scheme:
+    'c'/'d' store the same bytes as 'a'.)"""
     idx = packing.unpack(qw.packed, qw.bits).astype(jnp.int32)   # (..., out, in_pad)
-    w = jnp.take(qw.codebook, idx) * qw.scales[..., None]
+    w = jnp.take(qw.codebook, idx)
+    if qw.group_size is not None:
+        w = w * quant.expand_group_scales(qw.scales, qw.group_size)
+    else:
+        w = w * qw.scales[..., None]
     w = w[..., : qw.in_features]                                 # drop K padding
     return jnp.swapaxes(w, -1, -2)                               # (..., in, out)
 
@@ -216,39 +359,73 @@ def dense_serve(
 ) -> jax.Array:
     """Serving forward with packed weights. x: (..., in) -> (..., out).
 
-    a_bits None  -> w{b}a16 path (codebook dequant + MXU matmul).
+    a_bits None  -> w{b}a16 path (codebook dequant + MXU matmul), unless the
+                    leaf's plan kernel is 'lut_gemm' (then qw.a_bits is used).
     a_bits set   -> paper-faithful w{b}a{b}: dynamic activation quant, LUT GEMM.
+
+    The activation codebook and product LUT come from the leaf when they
+    were precomputed at quantize time (planned trees); only legacy ad-hoc
+    calls construct them here.
     """
+    if a_bits is None and qw.kernel == "lut_gemm":
+        a_bits = qw.a_bits
     lead = x.shape[:-1]
     xm = x.reshape(-1, qw.in_features)
     # weights are K-padded to a pack-factor multiple; mirror it on activations
     k_pad = qw.packed.shape[-1] * packing.PACK_FACTOR[qw.bits]
     if k_pad != qw.in_features:
         xm = jnp.pad(xm, ((0, 0), (0, k_pad - qw.in_features)))
+    # pad LARGE awkward token counts to a multiple of 8: the kernels pick
+    # block sizes that DIVIDE M, so e.g. a prime M=251 would degrade to
+    # per-row grid programs. M <= 8 already runs as a single block (no pad
+    # — decode with few slots must not trace extra rows forever). Zero
+    # rows are inert and sliced off.
+    n_rows = xm.shape[0]
+    if n_rows > 8 and n_rows % 8:
+        xm = jnp.pad(xm, ((0, (-n_rows) % 8), (0, 0)))
+    G = qw.group_size
     if a_bits is None:
         y = kops.dequant_matmul(
             xm, qw.packed, qw.codebook, qw.scales, bits=qw.bits,
-            backend=backend, block=block)
+            group_size=G, backend=backend, block=block)
     else:
-        # Dynamic per-tensor activation quantization (paper Fig. 7 'Quantization').
+        # Dynamic per-token activation quantization (paper Fig. 7
+        # 'Quantization', at row granularity): each row's scale depends only
+        # on its own activations, so outputs are batch-composition-independent
+        # and prefill+decode stays consistent with the full forward.
         if a_scale is None:
-            a_scale, _ = quant.compute_scale_zero_point(xm, a_bits, signed=True)
+            a_scale, _ = quant.compute_scale_zero_point(
+                xm, a_bits, signed=True, axis=0)                    # (M, 1)
         aq = quant.quantize(xm, a_scale, bits=a_bits, signed=True)
         a_idx = quant.to_index(aq, a_bits, True)
-        a_levels = quant.uniform_codebook(a_bits, True).levels
+        if qw.a_levels is not None and a_bits == qw.a_bits:
+            a_levels = qw.a_levels
+        else:
+            a_levels = quant.uniform_codebook(a_bits, True).levels
         if kops._resolve(backend) == "ref":
             # Shardable dequant formulation — exactly equal to the LUT GEMM.
             a_deq = jnp.take(a_levels, a_idx.astype(jnp.int32))
             w_deq = jnp.take(qw.codebook,
                              packing.unpack(qw.packed, qw.bits).astype(jnp.int32))
+            if G is not None:
+                w_deq = w_deq * quant.expand_group_scales(qw.scales, G)
             y = jax.lax.dot_general(a_deq, w_deq, (((1,), (1,)), ((), ())),
                                     preferred_element_type=jnp.float32)
-            y = y * qw.scales[None, :] * a_scale
+            y = y * a_scale if G is not None \
+                else y * qw.scales[None, :] * a_scale
         else:
             ap = packing.pack(a_idx, a_bits)
-            plut = product_lut(qw.codebook, a_levels)
-            y = kops.lut_gemm(ap, qw.packed, plut, backend=backend, block=block)
-            y = y * qw.scales[None, :] * a_scale
+            if qw.plut is not None and a_bits == qw.a_bits:
+                table = qw.plut
+            else:
+                table = product_lut(qw.codebook, a_levels).table
+            plut = ProductLUT(table, qw.bits, a_bits)
+            y = kops.lut_gemm(ap, qw.packed, plut, scheme=qw.scheme,
+                              w_scales=qw.scales if G is not None else None,
+                              group_size=G, backend=backend, block=block)
+            y = y * a_scale if G is not None \
+                else y * qw.scales[None, :] * a_scale
+    y = y[:n_rows]
     if bias is not None:
         y = y + bias
     return y.reshape(*lead, qw.out_features).astype(x.dtype)

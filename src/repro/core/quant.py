@@ -66,6 +66,41 @@ def compute_scale_zero_point(
     return scale, zp
 
 
+def group_scales(
+    x: jax.Array,
+    bits: int,
+    group_size: Optional[int] = None,
+    *,
+    signed: bool = True,
+    eps: float = 1e-8,
+) -> jax.Array:
+    """Symmetric amax calibration along the LAST axis, group-wise.
+
+    group_size None: one scale per leading index — x (..., K) -> (...,).
+    group_size G:    K must be a multiple of G; x (..., K) -> (..., K/G),
+                     one scale per contiguous K-group. Finer groups bound
+                     the rounding error by the *group* amax instead of the
+                     row amax — the T-MAC-style accuracy lever at equal
+                     bits (expand with ``jnp.repeat(scales, G, -1)``).
+    """
+    qmin, qmax = qrange(bits, signed)
+    bound = max(abs(qmin), qmax)
+    if group_size is not None:
+        K = x.shape[-1]
+        assert K % group_size == 0, (K, group_size)
+        x = x.reshape(*x.shape[:-1], K // group_size, group_size)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    return jnp.maximum(amax / bound, eps)
+
+
+def expand_group_scales(scales: jax.Array, group_size: int) -> jax.Array:
+    """(..., K/G) group scales -> (..., K) per-element scales (each scale
+    broadcast over its contiguous K-group). The single definition of the
+    group layout — the pack path, the ref oracles and dequant_weight all
+    expand through here so they cannot drift apart."""
+    return jnp.repeat(scales, group_size, axis=-1)
+
+
 def quantize(
     x: jax.Array,
     scale: jax.Array,

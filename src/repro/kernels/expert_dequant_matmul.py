@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import packing
-from .lut_gemm import _unpack_natural
+from .lut_gemm import _expand_scales_tile, _fit, _unpack_natural
 
 
 def _expert_kernel(x_ref, w_ref, cb_ref, sc_ref, o_ref, *, bits: int):
@@ -50,15 +50,36 @@ def _expert_kernel(x_ref, w_ref, cb_ref, sc_ref, o_ref, *, bits: int):
         o_ref[0] = o_ref[0] * sc_ref[0][None, :]
 
 
+def _expert_grouped_kernel(x_ref, w_ref, cb_ref, sc_ref, o_ref, *, bits: int,
+                           group_size: int):
+    """Group-wise variant: k-position-dependent scales fold into the
+    dequantized tile before the contraction (no epilogue)."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    w_idx = _unpack_natural(w_ref[0], bits)               # (bn, bk) int32
+    w_deq = jnp.take(cb_ref[...], w_idx)
+    w_deq = w_deq * _expand_scales_tile(sc_ref[0], group_size)
+    x = x_ref[0].astype(jnp.float32)                      # (bm, bk)
+    o_ref[0] += jax.lax.dot_general(
+        x, w_deq, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret"))
+    jax.jit, static_argnames=("bits", "group_size", "bm", "bn", "bk",
+                              "interpret"))
 def expert_dequant_matmul_pallas(
     x: jax.Array,            # (E, M, K) tokens per expert (capacity-padded)
     w_packed: jax.Array,     # (E, N, K/f) uint8
     codebook: jax.Array,     # (2^bits,) f32
-    scales: jax.Array,       # (E, N) f32 per-expert-per-channel
+    scales: jax.Array,       # (E, N) per-channel or (E, N, K/G) group-wise
     *,
     bits: int = 2,
+    group_size: int | None = None,
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
@@ -69,14 +90,25 @@ def expert_dequant_matmul_pallas(
     E, M, K = x.shape
     E2, N, Kp = w_packed.shape
     assert E == E2 and Kp * f == K, (x.shape, w_packed.shape, bits)
+    grouped = group_size is not None
+    if grouped:
+        assert group_size % f == 0 and K % group_size == 0, (K, group_size, f)
+        assert scales.shape == (E, N, K // group_size), (scales.shape,)
 
-    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    bm, bn = _fit(bm, M), _fit(bn, N)
+    unit = group_size if grouped else f
+    bk = _fit(max(bk // unit, 1), K // unit) * unit
     bkp = bk // f
-    assert M % bm == 0 and N % bn == 0 and Kp % bkp == 0, (
-        f"({E},{M},{N},{K}) not divisible by blocks ({bm},{bn},{bk})")
 
     grid = (E, M // bm, N // bn, K // bk)
-    kernel = functools.partial(_expert_kernel, bits=bits)
+    if grouped:
+        kernel = functools.partial(_expert_grouped_kernel, bits=bits,
+                                   group_size=group_size)
+        scale_spec = pl.BlockSpec((1, bn, bk // group_size),
+                                  lambda e, i, j, k: (e, j, k))
+    else:
+        kernel = functools.partial(_expert_kernel, bits=bits)
+        scale_spec = pl.BlockSpec((1, bn), lambda e, i, j, k: (e, j))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -84,7 +116,7 @@ def expert_dequant_matmul_pallas(
             pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
             pl.BlockSpec((1, bn, bkp), lambda e, i, j, k: (e, j, k)),
             pl.BlockSpec((codebook.shape[0],), lambda e, i, j, k: (0,)),
-            pl.BlockSpec((1, bn), lambda e, i, j, k: (e, j)),
+            scale_spec,
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
         out_shape=jax.ShapeDtypeStruct((E, M, N), jnp.float32),

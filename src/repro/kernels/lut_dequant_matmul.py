@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import packing
-from .lut_gemm import _unpack_natural
+from .lut_gemm import _expand_scales_tile, _fit, _unpack_natural
 
 
 def _dequant_matmul_kernel(a_ref, w_ref, cb_ref, scale_ref, o_ref, *, bits: int):
@@ -52,35 +52,67 @@ def _dequant_matmul_kernel(a_ref, w_ref, cb_ref, scale_ref, o_ref, *, bits: int)
         o_ref[...] = o_ref[...] * scale_ref[...][None, :]
 
 
+def _dequant_matmul_grouped_kernel(a_ref, w_ref, cb_ref, scale_ref, o_ref, *,
+                                   bits: int, group_size: int):
+    """Group-wise scales are k-position-dependent, so they fold into the
+    dequantized weight tile BEFORE the MXU contraction (no epilogue): the
+    (bn, bk/G) scale tile broadcasts over each G-code group."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w_idx = _unpack_natural(w_ref[...], bits)            # (bn, bk) int32
+    w_deq = jnp.take(cb_ref[...], w_idx)                 # (bn, bk) f32
+    w_deq = w_deq * _expand_scales_tile(scale_ref[...], group_size)
+    a = a_ref[...].astype(jnp.float32)                   # (bm, bk)
+    o_ref[...] += jax.lax.dot_general(
+        a, w_deq, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret")
+    jax.jit, static_argnames=("bits", "group_size", "bm", "bn", "bk", "interpret")
 )
 def dequant_matmul_pallas(
     a: jax.Array,            # (M, K) bf16/f32
     w_packed: jax.Array,     # (N, K/f) uint8
     codebook: jax.Array,     # (2^bits,) f32 — dequant levels (non-uniform OK)
-    scales: jax.Array,       # (N,) f32 per-output-channel
+    scales: jax.Array,       # (N,) per-channel or (N, K/G) group-wise f32
     *,
     bits: int = 2,
+    group_size: int | None = None,
     bm: int = 128,
     bn: int = 256,
     bk: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
     """out = (a @ dequant(w).T) * scales, f32. Weight-only quantization
-    (w2a16/w4a16): activations stay bf16 on the MXU."""
+    (w2a16/w4a16): activations stay bf16 on the MXU. ``group_size`` selects
+    the group-wise scale formulation (scales (N, K/G))."""
     f = packing.PACK_FACTOR[bits]
     M, K = a.shape
     N, Kp = w_packed.shape
     assert Kp * f == K, (a.shape, w_packed.shape, bits)
+    grouped = group_size is not None
+    if grouped:
+        assert group_size % f == 0 and K % group_size == 0, (K, group_size, f)
+        assert scales.shape == (N, K // group_size), (scales.shape, N, K)
 
-    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    bm, bn = _fit(bm, M), _fit(bn, N)
+    unit = group_size if grouped else f
+    bk = _fit(max(bk // unit, 1), K // unit) * unit
     bkp = bk // f
-    assert M % bm == 0 and N % bn == 0 and Kp % bkp == 0, (
-        f"shape ({M},{N},{K}) not divisible by blocks ({bm},{bn},{bk})")
 
     grid = (M // bm, N // bn, K // bk)
-    kernel = functools.partial(_dequant_matmul_kernel, bits=bits)
+    if grouped:
+        kernel = functools.partial(_dequant_matmul_grouped_kernel, bits=bits,
+                                   group_size=group_size)
+        scale_spec = pl.BlockSpec((bn, bk // group_size),
+                                  lambda i, j, k: (j, k))
+    else:
+        kernel = functools.partial(_dequant_matmul_kernel, bits=bits)
+        scale_spec = pl.BlockSpec((bn,), lambda i, j, k: (j,))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -88,7 +120,7 @@ def dequant_matmul_pallas(
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bn, bkp), lambda i, j, k: (j, k)),
             pl.BlockSpec((codebook.shape[0],), lambda i, j, k: (0,)),
-            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+            scale_spec,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),

@@ -62,16 +62,10 @@ def _unpack_indexready(tile: jax.Array, bits: int) -> jax.Array:
     return out.reshape(*tile.shape[:-1], tile.shape[-1] * f).astype(jnp.int32)
 
 
-def _lut_gemm_kernel(
-    a_ref, w_ref, lut_ref, o_ref, *, bits: int, scheme: str, lookup_impl: str, bk: int
-):
-    k_steps = pl.num_programs(2)
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
+def _lut_products(a_ref, w_ref, lut_ref, *, bits: int, scheme: str,
+                  lookup_impl: str) -> jax.Array:
+    """Shared tile body: unpack both operands, build LUT indices, look up.
+    Returns the (bm, bn, bk) product tile."""
     a_idx = _unpack_natural(a_ref[...], bits)                    # (bm, bk) int32
     if scheme in ("c", "d"):
         w_pre = _unpack_indexready(w_ref[...], bits)             # (bn, bk) = w<<b
@@ -85,31 +79,89 @@ def _lut_gemm_kernel(
         # Lookup as a matmul: one_hot(idx) @ lut — MXU-friendly lowering.
         oh = jax.nn.one_hot(idx.reshape(idx.shape[0], -1), lut.shape[0],
                             dtype=jnp.float32)
-        prods = (oh @ lut.astype(jnp.float32)).reshape(idx.shape)
-    else:
-        prods = jnp.take(lut, idx)                               # vector gather
+        return (oh @ lut.astype(jnp.float32)).reshape(idx.shape)
+    return jnp.take(lut, idx)                                    # vector gather
 
+
+def _lut_gemm_kernel(
+    a_ref, w_ref, lut_ref, o_ref, *, bits: int, scheme: str, lookup_impl: str, bk: int
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prods = _lut_products(a_ref, w_ref, lut_ref, bits=bits, scheme=scheme,
+                          lookup_impl=lookup_impl)
     o_ref[...] += prods.sum(axis=-1).astype(jnp.float32)
+
+
+def _lut_gemm_grouped_kernel(
+    a_ref, w_ref, lut_ref, sc_ref, o_ref, *, bits: int, scheme: str,
+    lookup_impl: str, group_size: int
+):
+    """Group-scale epilogue fused per K step: the tile's K codes split into
+    bk/G groups; each group's partial sum is scaled by its (out, group)
+    weight scale before accumulation (the LUT holds UNSCALED level products,
+    so the fine-grained scale is the only float multiply in the loop)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prods = _lut_products(a_ref, w_ref, lut_ref, bits=bits, scheme=scheme,
+                          lookup_impl=lookup_impl)     # (bm, bn, bk)
+    bm, bn, bk = prods.shape
+    ng = bk // group_size
+    pg = prods.reshape(bm, bn, ng, group_size).sum(axis=-1)      # (bm, bn, ng)
+    sc = sc_ref[...]                                             # (bn, ng)
+    o_ref[...] += (pg * sc[None, :, :]).sum(axis=-1).astype(jnp.float32)
+
+
+def _expand_scales_tile(sc: jax.Array, group_size: int) -> jax.Array:
+    """In-kernel (bn, ng) group-scale tile -> (bn, ng*G) per-code scales.
+    Broadcast+reshape (no gather) so it lowers on Mosaic; the layout is the
+    contiguous-group convention of quant.expand_group_scales."""
+    bn, ng = sc.shape
+    return jnp.broadcast_to(sc[:, :, None], (bn, ng, group_size)) \
+              .reshape(bn, ng * group_size)
+
+
+def _fit(target: int, n: int) -> int:
+    """Largest divisor of n that is <= target (>= 1). Keeps block choices
+    valid for any shape instead of asserting on non-divisible dims."""
+    b = max(1, min(target, n))
+    while n % b:
+        b -= 1
+    return b
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "scheme", "lookup_impl", "bm", "bn", "bk", "interpret"),
+    static_argnames=("bits", "scheme", "lookup_impl", "group_size",
+                     "bm", "bn", "bk", "interpret"),
 )
 def lut_gemm_pallas(
     a_packed: jax.Array,     # (M, K/f) uint8
     w_packed: jax.Array,     # (N, K/f) uint8
     lut_table: jax.Array,    # (2^(2*bits),) f32/int32
+    w_scales: jax.Array | None = None,   # (N, K/G) group-wise weight scales
     *,
     bits: int = 2,
     scheme: str = "d",
     lookup_impl: str = "take",
+    group_size: int | None = None,
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,           # in CODES (not bytes); VMEM idx tile = bm*bn*bk_step
     interpret: bool = False,
 ) -> jax.Array:
     """Blocked LUT GEMM. out[m,n] = sum_k LUT[(w[n,k]<<b) | a[m,k]], f32.
+
+    With ``w_scales``/``group_size`` the group-scale epilogue runs fused in
+    the K loop: out[m,n] = sum_g s[n,g] * sum_{k in g} LUT[...].
 
     The (bm, bn, bk_step) index tensor is the VMEM working set; the k grid
     dimension walks K in bk-code steps so the working set stays bounded:
@@ -120,30 +172,54 @@ def lut_gemm_pallas(
     N, Kp2 = w_packed.shape
     assert Kp == Kp2, (a_packed.shape, w_packed.shape)
     K = Kp * f
+    grouped = w_scales is not None
+    if grouped:
+        assert group_size is not None and group_size % f == 0 \
+            and K % group_size == 0, (K, group_size, f)
 
-    bm = min(bm, M)
-    bn = min(bn, N)
-    bk = min(bk, K)
-    # The 3D index tile must fit VMEM: cap the per-step K chunk.
-    while bm * bn * bk * 8 > 8 * 1024 * 1024 and bk > f:
-        bk //= 2
+    bm = _fit(bm, M)
+    bn = _fit(bn, N)
+    # K-step unit: one group when scaled (the epilogue needs whole groups
+    # per tile), else one packed byte's worth of codes.
+    unit = group_size if grouped else f
+    u = _fit(max(bk // unit, 1), K // unit)
+    # The 3D index tile must fit VMEM: cap the per-step K chunk first...
+    cap = 8 * 1024 * 1024
+    while bm * bn * (u * unit) * 8 > cap and u > 1:
+        u = _fit(max(u // 2, 1), K // unit)
+    # ...then, if the K step bottomed out at one unit (large group sizes),
+    # shrink the M/N tile too so the budget holds for any group_size.
+    while bm * bn * (u * unit) * 8 > cap and (bm > 8 or bn > 8):
+        if bm >= bn and bm > 8:
+            bm = _fit(max(bm // 2, 1), M)
+        else:
+            bn = _fit(max(bn // 2, 1), N)
+    bk = u * unit
     bkp = bk // f
-    assert M % bm == 0 and N % bn == 0 and Kp % bkp == 0, (
-        f"shape ({M},{N},{K}) not divisible by blocks ({bm},{bn},{bk})")
 
     grid = (M // bm, N // bn, Kp // bkp)
-    kernel = functools.partial(
-        _lut_gemm_kernel, bits=bits, scheme=scheme, lookup_impl=lookup_impl, bk=bk
-    )
+    in_specs = [
+        pl.BlockSpec((bm, bkp), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bn, bkp), lambda i, j, k: (j, k)),
+        pl.BlockSpec((lut_table.shape[0],), lambda i, j, k: (0,)),
+    ]
+    args = [a_packed, w_packed, lut_table.astype(jnp.float32)]
+    if grouped:
+        in_specs.append(
+            pl.BlockSpec((bn, bk // group_size), lambda i, j, k: (j, k)))
+        args.append(w_scales.astype(jnp.float32))
+        kernel = functools.partial(
+            _lut_gemm_grouped_kernel, bits=bits, scheme=scheme,
+            lookup_impl=lookup_impl, group_size=group_size)
+    else:
+        kernel = functools.partial(
+            _lut_gemm_kernel, bits=bits, scheme=scheme,
+            lookup_impl=lookup_impl, bk=bk)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bkp), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bn, bkp), lambda i, j, k: (j, k)),
-            pl.BlockSpec((lut_table.shape[0],), lambda i, j, k: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         interpret=interpret,
-    )(a_packed, w_packed, lut_table.astype(jnp.float32))
+    )(*args)

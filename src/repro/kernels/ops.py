@@ -7,9 +7,16 @@ Backends:
                       correctness path for this container
   'pallas'            real Pallas lowering (TPU target)
   'auto'              pallas on TPU, pallas_interpret on CPU
+
+Dispatch counters: every wrapper bumps ``DISPATCH_COUNTS`` at trace time
+(wrappers run Python once per jit trace), so a test — or the CI serving
+gate — can assert that a planned model actually reached ``lut_gemm`` /
+``dequant_matmul`` instead of silently falling back to full dequantization.
 """
 
 from __future__ import annotations
+
+from collections import Counter
 
 import jax
 
@@ -20,6 +27,22 @@ from .lut_dequant_matmul import dequant_matmul_pallas
 from .expert_dequant_matmul import expert_dequant_matmul_pallas
 from .kv_cache_attention import kv_cache_attention_pallas
 from .paged_attention import paged_attention_pallas
+
+DISPATCH_COUNTS: Counter = Counter()
+
+
+def reset_dispatch_counts() -> None:
+    DISPATCH_COUNTS.clear()
+
+
+def dispatch_counts() -> dict:
+    """Snapshot of per-op (and per-op:backend) trace-time dispatch counts."""
+    return dict(DISPATCH_COUNTS)
+
+
+def _count(op: str, backend: str) -> None:
+    DISPATCH_COUNTS[op] += 1
+    DISPATCH_COUNTS[f"{op}:{backend}"] += 1
 
 
 def _on_tpu() -> bool:
@@ -39,19 +62,26 @@ def lut_gemm(
     *,
     scheme: str = "d",
     lookup_impl: str = "take",
+    w_scales: jax.Array | None = None,
+    group_size: int | None = None,
     backend: str = "auto",
     block: tuple[int, int, int] | None = None,
 ) -> jax.Array:
-    """Paper-faithful LUT GEMM: out[m,n] = sum_k LUT[(w[n,k]<<b)|a[m,k]]."""
+    """Paper-faithful LUT GEMM: out[m,n] = sum_k LUT[(w[n,k]<<b)|a[m,k]].
+    ``w_scales`` (N, K/G) + ``group_size`` enable the fused group-scale
+    epilogue (per-K-group partial sums scaled before accumulation)."""
     b = _resolve(backend)
+    _count("lut_gemm", b)
     if b == "ref":
-        return _ref.ref_lut_gemm(a_packed, w_packed, lut)
+        return _ref.ref_lut_gemm(a_packed, w_packed, lut,
+                                 w_scales=w_scales, group_size=group_size)
     kw = {}
     if block is not None:
         kw = dict(bm=block[0], bn=block[1], bk=block[2])
     return lut_gemm_pallas(
-        a_packed, w_packed, lut.table,
+        a_packed, w_packed, lut.table, w_scales,
         bits=lut.w_bits, scheme=scheme, lookup_impl=lookup_impl,
+        group_size=group_size,
         interpret=(b == "pallas_interpret"), **kw,
     )
 
@@ -63,19 +93,24 @@ def dequant_matmul(
     scales: jax.Array,
     *,
     bits: int,
+    group_size: int | None = None,
     backend: str = "auto",
     block: tuple[int, int, int] | None = None,
 ) -> jax.Array:
-    """TPU-native packed-weight matmul: (a @ dequant(w).T) * scales."""
+    """TPU-native packed-weight matmul: (a @ dequant(w).T) * scales.
+    ``group_size`` selects the group-wise scale formulation (scales (N, K/G))."""
     b = _resolve(backend)
+    _count("dequant_matmul", b)
     if b == "ref":
-        return _ref.ref_dequant_matmul(a, w_packed, codebook, scales, bits)
+        return _ref.ref_dequant_matmul(a, w_packed, codebook, scales, bits,
+                                       group_size=group_size)
     kw = {}
     if block is not None:
         kw = dict(bm=block[0], bn=block[1], bk=block[2])
     return dequant_matmul_pallas(
         a, w_packed, codebook, scales,
-        bits=bits, interpret=(b == "pallas_interpret"), **kw,
+        bits=bits, group_size=group_size,
+        interpret=(b == "pallas_interpret"), **kw,
     )
 
 
@@ -91,19 +126,23 @@ def expert_dequant_matmul(
     scales: jax.Array,
     *,
     bits: int,
+    group_size: int | None = None,
     backend: str = "auto",
     block: tuple[int, int, int] | None = None,
 ) -> jax.Array:
     """Grouped per-expert packed matmul (MoE serving hot-spot)."""
     b = _resolve(backend)
+    _count("expert_dequant_matmul", b)
     if b == "ref":
-        return _ref.ref_expert_dequant_matmul(x, w_packed, codebook, scales, bits)
+        return _ref.ref_expert_dequant_matmul(x, w_packed, codebook, scales,
+                                              bits, group_size=group_size)
     kw = {}
     if block is not None:
         kw = dict(bm=block[0], bn=block[1], bk=block[2])
     return expert_dequant_matmul_pallas(
         x, w_packed, codebook, scales,
-        bits=bits, interpret=(b == "pallas_interpret"), **kw)
+        bits=bits, group_size=group_size,
+        interpret=(b == "pallas_interpret"), **kw)
 
 
 def kv_cache_attention(

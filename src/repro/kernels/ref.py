@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import packing
+from repro.core import packing, quant
 from repro.core.lut import ProductLUT
 
 
@@ -24,14 +24,24 @@ def ref_lut_gemm(
     a_packed: jax.Array,
     w_packed: jax.Array,
     lut: ProductLUT,
+    w_scales: jax.Array | None = None,
+    group_size: int | None = None,
 ) -> jax.Array:
     """Paper-faithful LUT GEMM: index construction + table lookup + accumulate.
-    out[m, n] = sum_k lut[w_idx[n, k] << a_bits | a_idx[m, k]]"""
+    out[m, n] = sum_k lut[w_idx[n, k] << a_bits | a_idx[m, k]]
+
+    With group-wise weight scales (w_scales (N, K/G), group_size G), each
+    K-group's partial sum is scaled before accumulation:
+    out[m, n] = sum_g s[n, g] * sum_{k in g} lut[...]."""
     a_idx = packing.unpack(a_packed, lut.a_bits).astype(jnp.int32)  # (M, K)
     w_idx = packing.unpack(w_packed, lut.w_bits).astype(jnp.int32)  # (N, K)
     idx = (w_idx[None, :, :] << lut.a_bits) | a_idx[:, None, :]      # (M, N, K)
     prods = jnp.take(lut.table, idx)                                  # (M, N, K)
-    return prods.sum(axis=-1).astype(jnp.float32)
+    if w_scales is None:
+        return prods.sum(axis=-1).astype(jnp.float32)
+    M, N, K = prods.shape
+    pg = prods.reshape(M, N, K // group_size, group_size).sum(axis=-1)
+    return (pg * w_scales[None, :, :]).sum(axis=-1).astype(jnp.float32)
 
 
 def ref_dequant_gemm(
@@ -71,14 +81,21 @@ def ref_dequant_matmul(
     codebook: jax.Array,
     scales: jax.Array,
     bits: int,
+    group_size: int | None = None,
 ) -> jax.Array:
     """TPU-native path oracle: unpack -> codebook dequant -> matmul -> scale.
 
     a: (M, K) float; w_packed: (N, K/f) uint8; codebook: (2^bits,) f32;
-    scales: (N,) per-output-channel f32. out: (M, N) f32.
+    scales: (N,) per-output-channel f32, or (N, K/G) group-wise with
+    ``group_size`` set (scales fold into the dequantized weight before the
+    contraction — elementwise multiply + dot stays GSPMD-shardable).
+    out: (M, N) f32.
     """
     w_idx = packing.unpack(w_packed, bits).astype(jnp.int32)       # (N, K)
     w_deq = jnp.take(codebook, w_idx)                               # (N, K) f32
+    if group_size is not None:
+        w_deq = w_deq * quant.expand_group_scales(scales, group_size)
+        return jnp.dot(a.astype(jnp.float32), w_deq.T)
     out = jnp.dot(a.astype(jnp.float32), w_deq.T)                   # (M, N)
     return out * scales[None, :]
 
@@ -98,12 +115,16 @@ def ref_expert_dequant_matmul(
     x: jax.Array,            # (E, M, K)
     w_packed: jax.Array,     # (E, N, K/f)
     codebook: jax.Array,
-    scales: jax.Array,       # (E, N)
+    scales: jax.Array,       # (E, N) or (E, N, K/G) group-wise
     bits: int,
+    group_size: int | None = None,
 ) -> jax.Array:
     """Grouped per-expert oracle: out[e] = (x[e] @ dequant(w[e]).T) * sc[e]."""
     w_idx = packing.unpack(w_packed, bits).astype(jnp.int32)    # (E, N, K)
     w_deq = jnp.take(codebook, w_idx)                            # (E, N, K)
+    if group_size is not None:
+        w_deq = w_deq * quant.expand_group_scales(scales, group_size)
+        return jnp.einsum("emk,enk->emn", x.astype(jnp.float32), w_deq)
     out = jnp.einsum("emk,enk->emn", x.astype(jnp.float32), w_deq)
     return out * scales[:, None, :]
 

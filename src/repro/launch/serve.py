@@ -7,6 +7,15 @@ CPU-runnable on reduced configs; the decode step is the same function the
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
       --batch 4 --prompt-len 32 --gen 16
 
+Quantized execution plans (docs/quantization.md): by default the model is
+packed under a kernel-backed plan — ``--w-bits``/``--a-bits``/
+``--group-size`` build it, or ``--plan NAME`` picks a preset from
+repro.core.qplan.PLANS (e.g. ``w2a2``, ``w2a16g128``, ``mixed_attn4_mlp2``).
+Every plan-covered dense then dispatches through kernels/ops (lut_gemm for
+w{b}a{b}, dequant_matmul for w{b}a16) in prefill AND decode — including
+through the paged engine. ``--plan legacy`` restores the historical
+dequant-einsum serving forward.
+
 ``--paged`` drives the continuous-batching Engine (serving/engine.py)
 instead of the fixed-batch loop: a mixed-length request stream is admitted
 through chunked prefill into the paged block-pool cache, with per-token
@@ -32,6 +41,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.core.qlinear import QuantPolicy
+from repro.core.qplan import PLANS, get_plan, make_plan
+from repro.kernels import ops as kops
 from repro.models import lm, frontends
 from repro.launch import steps as St
 from repro.serving import Engine, Request
@@ -86,6 +97,9 @@ def serve_paged(cfg, qparams, args) -> int:
               f"tokens attached from cache "
               f"({m['prefix_cache']['cached_blocks']} blocks cached, "
               f"{m['prefix_cache']['evictions']} evictions)")
+    counts = {k: v for k, v in kops.dispatch_counts().items() if ":" not in k}
+    if counts:
+        print(f"  kernel dispatches (trace-time): {counts}")
     return 0
 
 
@@ -97,6 +111,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--w-bits", type=int, default=2)
+    ap.add_argument("--a-bits", type=int, default=None,
+                    help="dynamic activation bits: w{b}a{b} LUT-GEMM plan "
+                         "(default: weight-only w{b}a16)")
+    ap.add_argument("--group-size", type=int, default=None,
+                    help="group-wise weight-scale group along K "
+                         "(default: per-output-channel)")
+    ap.add_argument("--plan", default=None,
+                    help=f"named plan preset ({', '.join(sorted(PLANS))}) "
+                         "or 'legacy' for the historical dequant-einsum "
+                         "path; overrides --w-bits/--a-bits/--group-size")
     ap.add_argument("--nonuniform", action="store_true",
                     help="k-means codebook (paper §5.3 non-uniform support)")
     ap.add_argument("--seed", type=int, default=0)
@@ -118,15 +142,27 @@ def main():
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
-    cfg = dataclasses.replace(
-        cfg, quant=QuantPolicy(w_bits=args.w_bits, nonuniform=args.nonuniform))
+    if args.plan == "legacy":
+        quant = QuantPolicy(w_bits=args.w_bits, nonuniform=args.nonuniform)
+        desc = f"legacy w{args.w_bits} (dequant-einsum)"
+    elif args.plan is not None:
+        quant = get_plan(args.plan)
+        desc = f"plan '{args.plan}'"
+    else:
+        quant = make_plan(args.w_bits, args.a_bits, args.group_size,
+                          nonuniform=args.nonuniform)
+        a = f"a{args.a_bits}" if args.a_bits else "a16"
+        g = f" g{args.group_size}" if args.group_size else ""
+        desc = f"plan w{args.w_bits}{a}{g}"
+    cfg = dataclasses.replace(cfg, quant=quant)
 
     key = jax.random.PRNGKey(args.seed)
     B, P = args.batch, args.prompt_len
-    print(f"[serve] {cfg.name}: packing weights to {args.w_bits}-bit "
+    print(f"[serve] {cfg.name}: packing weights under {desc} "
           f"({'k-means' if args.nonuniform else 'uniform'} codebook)")
     params = lm.init_params(key, cfg, mode="plain")
     t0 = time.time()
+    kops.reset_dispatch_counts()
     qparams = jax.jit(lambda p: lm.quantize_tree(p, cfg))(params)
     qparams = jax.block_until_ready(qparams)
     bf16_bytes = sum(x.size * 2 for x in jax.tree.leaves(params))
@@ -178,6 +214,9 @@ def main():
           f"({n_tok/max(t_dec,1e-9):.1f} tok/s)")
     gen = jnp.stack(out_tokens, axis=1)
     print(f"  sample generation (batch 0): {gen[0].tolist()}")
+    counts = {k: v for k, v in kops.dispatch_counts().items() if ":" not in k}
+    if counts:
+        print(f"  kernel dispatches (trace-time): {counts}")
     return 0
 
 

@@ -23,33 +23,49 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.core import quant
-from repro.core.qlinear import QuantPolicy, QuantizedWeight, dequant_weight
+from repro.core.qlinear import (QuantPolicy, QuantizedWeight, dense_serve,
+                                dequant_weight)
+from repro.core.qplan import plan_backend
 from repro.dist.sharding import shard
 
 
 # --------------------------------------------------------------------------- #
 # Dense dispatch (plain | qat | packed-serve)
 # --------------------------------------------------------------------------- #
+#
+# ``policy`` everywhere below is either a single QuantPolicy (legacy) or a
+# qplan.QuantPlan (ordered tag -> policy table); both expose ``policy_for``.
 
 def dense_init(key, din: int, dout: int, *, bias: bool = False, tag: str = "",
-               policy: QuantPolicy, mode: str, dtype=jnp.float32) -> dict:
+               policy, mode: str, dtype=jnp.float32) -> dict:
     """mode 'qat' attaches LSQ step parameters where the policy applies."""
     w = jax.random.normal(key, (din, dout), dtype) * (din ** -0.5)
     p = {"w": w}
     if bias:
         p["b"] = jnp.zeros((dout,), dtype)
-    if mode == "qat" and policy.applies(tag):
-        p["w_step"] = quant.lsq_init_step(w, policy.w_bits, policy.signed).astype(dtype)
-        if policy.a_bits is not None:
+    lp = policy.policy_for(tag)
+    if mode == "qat" and lp is not None:
+        p["w_step"] = quant.lsq_init_step(w, lp.w_bits, lp.signed).astype(dtype)
+        if lp.a_bits is not None:
             p["a_step"] = jnp.asarray(0.05, dtype)
     return p
 
 
-def dense(p: dict, x: jax.Array, *, tag: str = "", policy: QuantPolicy,
+def dense(p: dict, x: jax.Array, *, tag: str = "", policy,
           mode: str = "plain") -> jax.Array:
-    """x: (..., in) -> (..., out)."""
+    """x: (..., in) -> (..., out).
+
+    Packed serving leaves ({"qw": QuantizedWeight}) dispatch on the leaf's
+    plan: ``qw.kernel`` set routes through kernels/ops (dequant_matmul for
+    w{b}a16, lut_gemm with dynamic activation quantization for w{b}a{b}) on
+    the plan's backend; ``qw.kernel`` None keeps the legacy dequant-einsum
+    formulation bit-for-bit (the GSPMD-shardable dry-run form).
+    """
     if "qw" in p:  # packed serving leaf
         qw: QuantizedWeight = p["qw"]
+        if qw.kernel is not None:  # planned: kernel-backed hot path
+            return dense_serve(qw, x, bias=p.get("b"),
+                               backend=plan_backend(policy))
         w = dequant_weight(qw).astype(x.dtype)        # codebook LUT dequant
         y = x @ w
         if "b" in p:
@@ -57,9 +73,12 @@ def dense(p: dict, x: jax.Array, *, tag: str = "", policy: QuantPolicy,
         return y
     w = p["w"]
     if mode == "qat" and "w_step" in p:
-        w = quant.lsq_fake_quant(w, p["w_step"], policy.w_bits, policy.signed)
-        if "a_step" in p and policy.a_bits is not None:
-            x = quant.lsq_fake_quant(x, p["a_step"], policy.a_bits, policy.signed)
+        lp = policy.policy_for(tag) or (policy if isinstance(policy, QuantPolicy)
+                                        else None)
+        if lp is not None and lp.w_bits is not None:
+            w = quant.lsq_fake_quant(w, p["w_step"], lp.w_bits, lp.signed)
+            if "a_step" in p and lp.a_bits is not None:
+                x = quant.lsq_fake_quant(x, p["a_step"], lp.a_bits, lp.signed)
     y = x @ w.astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
@@ -538,22 +557,40 @@ def moe_init(key, cfg, *, mode: str, dtype=jnp.float32) -> dict:
         "we_up": jax.random.normal(ks[2], (E, D, F), dtype) * (D ** -0.5),
         "we_down": jax.random.normal(ks[3], (E, F, D), dtype) * (F ** -0.5),
     }
-    if mode == "qat" and pol.applies("moe.experts") and pol.w_bits is not None:
+    lp = pol.policy_for("moe.experts")
+    if mode == "qat" and lp is not None:
         for n in ("we_gate", "we_up", "we_down"):
-            p[n + "_step"] = quant.lsq_init_step(p[n], pol.w_bits, pol.signed).astype(dtype)
+            p[n + "_step"] = quant.lsq_init_step(p[n], lp.w_bits, lp.signed).astype(dtype)
     if moe.n_shared:
         p["shared"] = mlp_init(ks[4], cfg, d_ff=moe.n_shared * F, mode=mode,
                                dtype=dtype, tag="moe.shared")
     return p
 
 
-def _expert_w(p: dict, name: str, *, pol: QuantPolicy, mode: str) -> jax.Array:
+def _expert_w(p: dict, name: str, *, pol, mode: str) -> jax.Array:
     w = p[name]
     if isinstance(w, QuantizedWeight):
         return dequant_weight(w)                       # (E, D, F) f32
     if mode == "qat" and name + "_step" in p:
-        w = quant.lsq_fake_quant(w, p[name + "_step"], pol.w_bits, pol.signed)
+        lp = pol.policy_for("moe.experts") or (pol if isinstance(pol, QuantPolicy)
+                                               else None)
+        if lp is not None and lp.w_bits is not None:
+            w = quant.lsq_fake_quant(w, p[name + "_step"], lp.w_bits, lp.signed)
     return w
+
+
+def _expert_matmul(qw: QuantizedWeight, x: jax.Array, backend: str) -> jax.Array:
+    """Planned expert projection: x (E, M, D_in) -> (E, M, D_out) f32 through
+    the grouped packed-weight kernel (kernels/expert_dequant_matmul). Mirrors
+    the K padding quantize_expert_weight applied."""
+    from repro.core import packing
+    from repro.kernels import ops as kops
+    k_pad = qw.packed.shape[-1] * packing.PACK_FACTOR[qw.bits]
+    if k_pad != qw.in_features:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, k_pad - qw.in_features)))
+    return kops.expert_dequant_matmul(
+        x, qw.packed, qw.codebook, qw.scales, bits=qw.bits,
+        group_size=qw.group_size, backend=backend)
 
 
 def moe_apply(p: dict, x: jax.Array, *, cfg, mode: str = "plain") -> jax.Array:
@@ -599,13 +636,36 @@ def moe_apply(p: dict, x: jax.Array, *, cfg, mode: str = "plain") -> jax.Array:
     ein = jnp.einsum("gsd,gsec->egcd", xg, dispatch)                # (E, G, C, D)
     ein = shard(ein, "experts_act", "group", None, "embed_act")
 
-    wg = _expert_w(p, "we_gate", pol=pol, mode=mode).astype(x.dtype)
-    wu = _expert_w(p, "we_up", pol=pol, mode=mode).astype(x.dtype)
-    wd = _expert_w(p, "we_down", pol=pol, mode=mode).astype(x.dtype)
-    g = jnp.einsum("egcd,edf->egcf", ein, wg)
-    u = jnp.einsum("egcd,edf->egcf", ein, wu)
-    h = (jax.nn.silu(g) if cfg.mlp != "geglu" else jax.nn.gelu(g)) * u
-    eo = jnp.einsum("egcf,efd->egcd", h, wd)                        # (E, G, C, D)
+    if any(isinstance(p[n], QuantizedWeight) and p[n].kernel is not None
+           for n in ("we_gate", "we_up", "we_down")):
+        # plan-covered expert path: packed weights stay packed in HBM and
+        # run through the grouped kernel (w{b}a16 per expert; 'ref' backend
+        # keeps the shardable einsum formulation for the dry-run). Dispatch
+        # is PER LEAF: a mixed plan may route some projections through the
+        # kernel and keep others bf16/legacy.
+        be = plan_backend(pol)
+        Ex, Gx, Cx, Dx = ein.shape
+        xe = ein.reshape(Ex, Gx * Cx, Dx)
+
+        def proj(name, xin):                                  # -> (E, M, N)
+            leaf = p[name]
+            if isinstance(leaf, QuantizedWeight) and leaf.kernel is not None:
+                return _expert_matmul(leaf, xin.astype(x.dtype), be)   # f32
+            w = _expert_w(p, name, pol=pol, mode=mode).astype(x.dtype)
+            return jnp.einsum("emk,ekn->emn", xin.astype(x.dtype), w)
+
+        g = proj("we_gate", xe)
+        u = proj("we_up", xe)
+        h = (jax.nn.silu(g) if cfg.mlp != "geglu" else jax.nn.gelu(g)) * u
+        eo = proj("we_down", h).reshape(Ex, Gx, Cx, Dx)       # (E, G, C, D)
+    else:
+        wg = _expert_w(p, "we_gate", pol=pol, mode=mode).astype(x.dtype)
+        wu = _expert_w(p, "we_up", pol=pol, mode=mode).astype(x.dtype)
+        wd = _expert_w(p, "we_down", pol=pol, mode=mode).astype(x.dtype)
+        g = jnp.einsum("egcd,edf->egcf", ein, wg)
+        u = jnp.einsum("egcd,edf->egcf", ein, wu)
+        h = (jax.nn.silu(g) if cfg.mlp != "geglu" else jax.nn.gelu(g)) * u
+        eo = jnp.einsum("egcf,efd->egcd", h, wd)                    # (E, G, C, D)
 
     out = jnp.einsum("egcd,gsec->gsd", eo.astype(jnp.float32), combine)
     out = out.reshape(B, S, D).astype(x.dtype)

@@ -504,22 +504,28 @@ def chunked_ce_loss(params: dict, cfg, hidden: jax.Array, labels: jax.Array,
 # --------------------------------------------------------------------------- #
 
 def quantize_tree(params, cfg) -> dict:
-    """Replace policy-covered dense {"w": ...} with {"qw": QuantizedWeight}.
+    """Replace plan-covered dense {"w": ...} with {"qw": QuantizedWeight}.
     Expert tensors (we_gate/we_up/we_down) are packed per-expert. LSQ steps
-    are dropped (training-only)."""
+    are dropped (training-only).
+
+    ``cfg.quant`` may be a single QuantPolicy (legacy: every covered layer
+    gets the same format and the historical dequant-einsum forward) or a
+    qplan.QuantPlan (ordered tag -> policy table: each layer class gets its
+    own bits/group-size/kernel, resolved here, offline — the hot path only
+    ever sees the precomputed leaves)."""
     pol = cfg.quant
-    if pol.w_bits is None:
+    if isinstance(pol, qlinear.QuantPolicy) and pol.w_bits is None:
         return params
 
-    def qdense(w):
+    def qdense(w, lp):
         # leading stack dims from scan-over-superblocks -> vmap the packer
-        fn = functools.partial(qlinear.quantize_weight, policy=pol)
+        fn = functools.partial(qlinear.quantize_weight, policy=lp)
         for _ in range(w.ndim - 2):
             fn = jax.vmap(fn)
         return fn(w)
 
-    def qexpert(w):
-        fn = functools.partial(qlinear.quantize_expert_weight, policy=pol)
+    def qexpert(w, lp):
+        fn = functools.partial(qlinear.quantize_expert_weight, policy=lp)
         for _ in range(w.ndim - 3):
             fn = jax.vmap(fn)
         return fn(w)
@@ -529,16 +535,27 @@ def quantize_tree(params, cfg) -> dict:
             out = {}
             for k, v in tree.items():
                 tag = f"{path}.{k}" if path else k
+                if k in ("we_gate", "we_up", "we_down"):
+                    # resolve expert leaves under the canonical
+                    # '...moe.experts.<leaf>' tag — the SAME 'moe.experts'
+                    # class moe_init/_expert_w resolve for QAT, so plan
+                    # rules (and legacy skip lists) naming 'experts' agree
+                    # between training and packing
+                    lp = pol.policy_for(f"{path}.experts.{k}" if path
+                                        else f"experts.{k}")
+                    if lp is not None and hasattr(v, "ndim") and v.ndim >= 3:
+                        out[k] = qexpert(v, lp)
+                    else:
+                        out[k] = v
+                    continue
+                lp = pol.policy_for(tag)
                 if (isinstance(v, dict) and "w" in v and
                         hasattr(v["w"], "ndim") and v["w"].ndim >= 2 and
-                        pol.applies(tag)):
-                    q = {"qw": qdense(v["w"])}
+                        lp is not None):
+                    q = {"qw": qdense(v["w"], lp)}
                     if "b" in v:
                         q["b"] = v["b"]
                     out[k] = q
-                elif k in ("we_gate", "we_up", "we_down") and pol.applies("moe.experts") \
-                        and hasattr(v, "ndim") and v.ndim >= 3:
-                    out[k] = qexpert(v)
                 elif k.endswith("_step"):
                     continue
                 else:

@@ -31,6 +31,52 @@ def test_pack_unpack_roundtrip(bits, rows, groups, seed):
         np.asarray(packing.unpack_paired(packed, bits)), np.asarray(idx))
 
 
+@given(bits=st.sampled_from([2, 3, 4]), rows=st.integers(1, 4),
+       groups=st.integers(1, 6), seed=st.integers(0, 2 ** 16),
+       scheme=st.sampled_from(["a", "c", "d"]))
+def test_pack_roundtrip_across_schemes(bits, rows, groups, seed, scheme):
+    """quantize-time packing is byte-identical across schemes 'a'/'c'/'d'
+    (pack_indexready IS pack), so every scheme round-trips through the
+    natural unpack AND honours the scheme's unpack contract."""
+    f = packing.PACK_FACTOR[bits]
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, 2 ** bits, (rows, groups * f)), jnp.uint8)
+    packer = packing.pack_indexready if scheme in ("c", "d") else packing.pack
+    packed = packer(idx, bits)
+    np.testing.assert_array_equal(np.asarray(packing.pack(idx, bits)),
+                                  np.asarray(packed))     # byte identity
+    np.testing.assert_array_equal(np.asarray(packing.unpack(packed, bits)),
+                                  np.asarray(idx))        # natural roundtrip
+    got = packing.UNPACK_SCHEMES[scheme](packed, bits)
+    want = (idx.astype(jnp.int32) << bits) if scheme in ("c", "d") else idx
+    np.testing.assert_array_equal(np.asarray(got, np.int32) & 0xFF,
+                                  np.asarray(want, np.int32) & 0xFF)
+
+
+@given(bits=st.sampled_from([2, 3, 4]), out=st.integers(1, 6),
+       kg=st.integers(1, 4), seed=st.integers(0, 2 ** 16))
+def test_groupwise_scale_reshape_roundtrip(bits, out, kg, seed):
+    """Group-wise quantize_weight: scales shape (out, K/G), dequant equals
+    the manual codebook-gather x repeated-scale expansion, and the error is
+    bounded by each element's GROUP scale."""
+    from repro.core.qlinear import QuantPolicy, dequant_weight, quantize_weight
+    G = 2 * packing.PACK_FACTOR[bits]
+    K = kg * G
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(K, out)) * 2.0, jnp.float32)
+    qw = quantize_weight(w, QuantPolicy(w_bits=bits, group_size=G))
+    assert qw.scales.shape == (out, kg)
+    # manual expansion: take(codebook, unpack) * repeat(scales, G)
+    idx = packing.unpack(qw.packed, bits).astype(jnp.int32)
+    manual = (jnp.take(qw.codebook, idx)
+              * jnp.repeat(qw.scales, G, axis=-1))[:, :K].T
+    np.testing.assert_array_equal(np.asarray(dequant_weight(qw)),
+                                  np.asarray(manual))
+    err = np.abs(np.asarray(w) - np.asarray(manual))
+    bound = np.repeat(np.asarray(qw.scales), G, axis=-1).T + 1e-6
+    assert (err <= bound).all()
+
+
 @given(bits=st.sampled_from([1, 2, 3, 4]), seed=st.integers(0, 2 ** 16))
 def test_indexready_contract(bits, seed):
     """unpack_indexready(pack_indexready(w)) == w << bits (scheme 'c'/'d')."""
