@@ -32,6 +32,12 @@ Four workloads:
    widened qwen1.5-0.5b smoke config. CI gates grouped MSE strictly below
    per-channel MSE.
 
+5. Tensor-parallel serving (subprocess, 8 fake CPU devices): the engine on
+   a --tp 8 "model" mesh vs the single-device engine. CI gates: bf16 greedy
+   output token-identical, planned w2a2 run-to-run deterministic with a
+   nonzero lut_gemm dispatch count, zero steady-state recompiles, and
+   per-device weight bytes < 25% of the replicated footprint.
+
 Reported per backend: wall time, requests/s, tokens/s, mean/median
 time-to-first-token, decode steps, prefill tokens computed/shared, and jit
 cache entries sampled early vs at the end (`recompiled_between_steps` must
@@ -42,6 +48,9 @@ import dataclasses
 import json
 import os
 import platform
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -231,6 +240,84 @@ def _group_ablation() -> dict:
     return out
 
 
+_TP_SCRIPT = """
+import dataclasses, json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import qplan
+from repro.kernels import ops as kops
+from repro.launch.mesh import make_tp_mesh
+from repro.models import lm
+from repro.serving import Engine, Request
+
+TP = 8
+
+def run_engine(cfg, params, mesh, gen, n_req):
+    rng = np.random.default_rng(1)
+    e = Engine(cfg, params, n_slots=2, max_len=64, block_size=8,
+               chunk_size=16, mesh=mesh)
+    prompts = [np.asarray(rng.integers(0, cfg.vocab_size, (int(n),)),
+                          np.int32) for n in rng.integers(4, 40, n_req)]
+    reqs = [Request(uid=i, prompt=jnp.asarray(p), max_new=gen)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        e.submit(r)
+    c0 = None
+    t0 = time.time()
+    while e.queue or any(s.state != 0 for s in e.slots):
+        e.step()
+        if c0 is None and e.decode_steps >= 2:
+            c0 = e.n_compiles()
+    return ([r.out for r in reqs], e, c0, time.time() - t0)
+
+cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+params = lm.init_params(jax.random.PRNGKey(0), cfg, mode="plain")
+mesh = make_tp_mesh(TP)
+
+o1, e1, _, t1 = run_engine(cfg, params, None, 8, 4)
+o8, e8, c0, t8 = run_engine(cfg, params, mesh, 8, 4)
+
+qcfg = dataclasses.replace(cfg, quant=qplan.get_plan("w2a2"))
+qp = lm.quantize_tree(params, qcfg, tp=TP)
+kops.reset_dispatch_counts()
+q1, qe, qc0, _ = run_engine(qcfg, qp, mesh, 4, 3)
+counts = {k: v for k, v in kops.dispatch_counts().items() if ":" not in k}
+q2, qe2, _, _ = run_engine(qcfg, qp, mesh, 4, 3)
+
+print("TPJSON:" + json.dumps({
+    "tp": TP,
+    "token_identical": o1 == o8,
+    "deterministic_w2a2": q1 == q2,
+    "recompiled_between_steps": e8.n_compiles() > c0,
+    "recompiled_between_steps_w2a2": qe.n_compiles() > qc0,
+    "per_device_weight_bytes": e8.per_device_weight_bytes(),
+    "replicated_weight_bytes": e1.per_device_weight_bytes(),
+    "per_device_weight_fraction": round(
+        e8.per_device_weight_bytes() / e1.per_device_weight_bytes(), 4),
+    "per_device_w2a2_weight_bytes": qe.per_device_weight_bytes(),
+    "kernel_dispatches": counts,
+    "lut_gemm_dispatched": counts.get("lut_gemm", 0) > 0,
+    "wall_s_single": round(t1, 2),
+    "wall_s_tp": round(t8, 2),
+}))
+"""
+
+
+def _tp_serving() -> dict:
+    """Run the tensor-parallel comparison in a subprocess with 8 fake CPU
+    devices (the fake-device flag must not leak into this process's jax)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env.setdefault("PYTHONPATH", "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(_TP_SCRIPT)],
+                       capture_output=True, text=True, env=env, timeout=1200)
+    if r.returncode != 0:
+        return {"error": r.stderr[-2000:]}
+    line = next(ln for ln in r.stdout.splitlines() if ln.startswith("TPJSON:"))
+    return json.loads(line[len("TPJSON:"):])
+
+
 def run(json_out: str = "BENCH_serving.json") -> dict:
     cfg = reduce_for_smoke(get_config(_ARCH))
     params = lm.init_params(jax.random.PRNGKey(0), cfg, mode="plain")
@@ -303,6 +390,18 @@ def run(json_out: str = "BENCH_serving.json") -> dict:
           f"{ablation['logit_mse_grouped']:.5f} "
           f"(grouped_better={ablation['grouped_better']})", flush=True)
 
+    print("[serving] tensor-parallel engine: tp=8 on fake CPU devices "
+          "(subprocess)", flush=True)
+    tp = _tp_serving()
+    if "error" in tp:
+        print(f"[serving]   TP run FAILED: {tp['error'][:400]}", flush=True)
+    else:
+        print(f"[serving]   token-identical {tp['token_identical']}, w2a2 "
+              f"deterministic {tp['deterministic_w2a2']}, per-device weights "
+              f"{tp['per_device_weight_fraction']}x replicated, lut_gemm "
+              f"dispatches {tp['kernel_dispatches'].get('lut_gemm', 0)}",
+              flush=True)
+
     same_tokens = paged["outputs"] == dense["outputs"]
     result = {
         "benchmark": "serving",
@@ -334,6 +433,7 @@ def run(json_out: str = "BENCH_serving.json") -> dict:
         },
         "quantized_serving": quantized,
         "group_scale_ablation": ablation,
+        "tp_serving": tp,
         "total_s": round(time.time() - t0, 2),
     }
     out_dir = os.path.dirname(json_out)

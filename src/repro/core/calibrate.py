@@ -1,0 +1,81 @@
+"""Offline activation-range calibration for static activation scales.
+
+The paper's w{b}a{b} path quantizes activations dynamically (one scale per
+token row, computed in the forward). A *static* scale removes that reduction
+from the hot path: run a few sample batches OFFLINE, record each dense
+layer's input amax, and fold ``amax / qmax`` into the packed tree
+(``QuantizedWeight.a_sc``) at ``quantize_tree`` time. The trade is the usual
+PTQ one — a calibrated range can clip outlier tokens the dynamic scale would
+have absorbed — which is why ``QuantPolicy.a_scale`` defaults to 'dynamic'
+and the CI test compares the two by logit MSE rather than assuming parity.
+
+Mechanics: ``models.layers.dense`` calls ``observe(tag, x)`` on every
+forward. Outside a ``collect_act_stats()`` context that is a zero-cost
+no-op; inside it, an unordered ``io_callback`` folds the running |x| max
+into a host-side dict keyed by the layer-class tag ("attn.wq",
+"mlp.w_down", ...). Callbacks fire per scan iteration, so one tag
+accumulates the max over every stacked layer that shares it — matching the
+tag granularity plans are written in.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import io_callback as _io_callback
+
+_ACTIVE: Optional[dict] = None
+
+
+@contextlib.contextmanager
+def collect_act_stats():
+    """Collect per-tag activation amax stats from every ``dense`` call made
+    while the context is active. Yields the (live) stats dict; flush pending
+    callbacks with ``jax.effects_barrier()`` before reading it."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, {}
+    try:
+        yield _ACTIVE
+    finally:
+        jax.effects_barrier()
+        _ACTIVE = prev
+
+
+def observe(tag: str, x: jax.Array) -> None:
+    """Record ``max |x|`` for ``tag`` when calibration is active; no-op (and
+    no inserted ops) otherwise."""
+    if _ACTIVE is None:
+        return
+    stats = _ACTIVE
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+
+    def cb(v):
+        v = float(v)
+        if v > stats.get(tag, 0.0):
+            stats[tag] = v
+
+    _io_callback(cb, None, amax, ordered=False)
+
+
+def lookup(stats: Optional[dict], tag: str) -> Optional[float]:
+    """Find the amax recorded for ``tag``: the calibration key is the
+    layer-class suffix of the full tree path ('blocks.l0.attn.wq' ->
+    'attn.wq'), so try suffixes longest-first."""
+    if not stats:
+        return None
+    parts = [p for p in tag.split(".") if p]
+    for i in range(len(parts)):
+        key = ".".join(parts[i:])
+        if key in stats:
+            return stats[key]
+    return None
+
+
+def static_scale(amax: float, a_bits: int) -> float:
+    """Symmetric signed scale: amax / qmax (the same convention as the
+    dynamic per-token path in ``qlinear.dense_serve``)."""
+    qmax = 2 ** (a_bits - 1) - 1
+    return max(amax, 1e-8) / max(qmax, 1)

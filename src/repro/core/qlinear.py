@@ -95,6 +95,13 @@ class QuantPolicy:
     to 'lut_gemm' when a_bits is set, else 'dequant_matmul'; or name one
     explicitly. 'bf16' pins the layer to full precision: such a policy
     never applies, so quantize_tree leaves the weight untouched.
+
+    ``a_scale`` picks how w{b}a{b} activation scales are produced at serve
+    time: 'dynamic' (default) computes one scale per token row inside the
+    forward; 'static' uses a scale calibrated OFFLINE over sample batches
+    (core/calibrate.py + lm.calibrate_act_scales) and stored on the packed
+    leaf — no per-token reduction on the hot path. Layers without
+    calibration stats fall back to dynamic.
     """
     w_bits: Optional[int] = 2          # None => bf16 layer
     a_bits: Optional[int] = None       # None => weight-only (w2a16)
@@ -105,6 +112,7 @@ class QuantPolicy:
     skip: tuple = ("router", "embed", "norm")
     group_size: Optional[int] = None   # K-group size for scales (None: per-channel)
     kernel: Optional[str] = None       # None | 'auto' | 'dequant_matmul' | 'lut_gemm'
+    a_scale: str = "dynamic"           # 'dynamic' | 'static' (calibrated)
 
     def applies(self, tag: str) -> bool:
         return self.w_bits is not None and self.kernel != "bf16" and not any(
@@ -148,6 +156,12 @@ class QuantizedWeight:
     kernel   : serving dispatch — None keeps the legacy dequant-einsum path
                in models/layers.dense; 'dequant_matmul' / 'lut_gemm' route
                through kernels/ops.
+    a_sc     : scalar f32 STATIC activation scale, calibrated offline
+               (QuantPolicy.a_scale == 'static'); None -> dynamic per-token
+    tp       : tensor-parallel role recorded at quantize time — 'col' (packed
+               codes + scales shard along out/N), 'row' (shard along the
+               packed contraction axis, outputs psum'd) or None (replicate).
+               Only honoured when a dist.sharding.use_tp context is active.
     """
     packed: jax.Array
     codebook: jax.Array
@@ -161,6 +175,8 @@ class QuantizedWeight:
     kernel: Optional[str] = None
     a_levels: Optional[jax.Array] = None
     plut: Optional[jax.Array] = None
+    a_sc: Optional[jax.Array] = None
+    tp: Optional[str] = None
 
     def tree_flatten_with_keys(self):
         return (
@@ -169,15 +185,16 @@ class QuantizedWeight:
             (jax.tree_util.GetAttrKey("scales"), self.scales),
             (jax.tree_util.GetAttrKey("a_levels"), self.a_levels),
             (jax.tree_util.GetAttrKey("plut"), self.plut),
+            (jax.tree_util.GetAttrKey("a_sc"), self.a_sc),
         ), (self.bits, self.in_features, self.out_features, self.group_size,
-            self.a_bits, self.scheme, self.kernel)
+            self.a_bits, self.scheme, self.kernel, self.tp)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        packed, codebook, scales, a_levels, plut = children
-        bits, in_f, out_f, group_size, a_bits, scheme, kernel = aux
+        packed, codebook, scales, a_levels, plut, a_sc = children
+        bits, in_f, out_f, group_size, a_bits, scheme, kernel, tp = aux
         return cls(packed, codebook, scales, bits, in_f, out_f, group_size,
-                   a_bits, scheme, kernel, a_levels, plut)
+                   a_bits, scheme, kernel, a_levels, plut, a_sc, tp)
 
     @property
     def nbytes_packed(self) -> int:
@@ -190,11 +207,25 @@ jax.tree_util.register_pytree_with_keys(
     QuantizedWeight.tree_unflatten)
 
 
-def _pad_k(wt: jax.Array, bits: int, group_size: Optional[int] = None) -> jax.Array:
-    """Pad the contraction axis to a pack-factor (and group-size) multiple
-    with zeros (the zero-value code dequantizes to exactly 0.0 -> padded
-    columns contribute nothing; dequant_weight slices them back off)."""
-    pad = packing.padded_len(wt.shape[-1], bits, group_size) - wt.shape[-1]
+def _k_multiple(policy: QuantPolicy, tp_shards: int = 1) -> int:
+    """Contraction-axis padding unit: the pack factor (or the scale-group
+    size, itself a pack-factor multiple), lcm'd with the ACTIVATION pack
+    factor for w{b}a{b} LUT plans, times the TP shard count for row-parallel
+    layers — so every shard holds whole packed bytes on both operands and
+    whole scale groups (a group boundary never straddles a shard split)."""
+    import math
+    m = policy.group_size if policy.group_size is not None \
+        else packing.PACK_FACTOR[policy.w_bits]
+    if policy.a_bits is not None and policy.resolved_kernel() == "lut_gemm":
+        m = math.lcm(m, packing.PACK_FACTOR[policy.a_bits])
+    return m * max(tp_shards, 1)
+
+
+def _pad_k(wt: jax.Array, multiple: int) -> jax.Array:
+    """Pad the contraction axis to a ``multiple`` with zeros (the zero-value
+    code dequantizes to exactly 0.0 -> padded columns contribute nothing;
+    dequant_weight slices them back off)."""
+    pad = (-wt.shape[-1]) % multiple
     if pad:
         cfgpad = [(0, 0)] * (wt.ndim - 1) + [(0, pad)]
         wt = jnp.pad(wt, cfgpad)
@@ -233,7 +264,9 @@ def _act_tables(policy: QuantPolicy, w_levels: jax.Array):
     return a_levels, plut
 
 
-def quantize_weight(w: jax.Array, policy: QuantPolicy) -> QuantizedWeight:
+def quantize_weight(w: jax.Array, policy: QuantPolicy, *,
+                    tp_role: Optional[str] = None, tp_shards: int = 1,
+                    a_static: Optional[float] = None) -> QuantizedWeight:
     """Offline weight quantize+pack (paper: 'packing and quantization of
     weights was handled offline'). w: (in, out) -> packed (out, ceil(in/f)).
 
@@ -241,13 +274,20 @@ def quantize_weight(w: jax.Array, policy: QuantPolicy) -> QuantizedWeight:
     the contraction axis. With ``policy.kernel`` set, the returned leaf also
     carries the precomputed activation codebook and product LUT and is
     dispatched through the Pallas kernels by models/layers.dense.
+
+    ``tp_role``/``tp_shards`` record the tensor-parallel split the tree is
+    packed for: 'row' additionally pads K so every one of ``tp_shards``
+    shards holds whole packed bytes (both operands) and whole scale groups.
+    ``a_static`` is a calibrated static activation scale (stored on the
+    leaf; None keeps dynamic per-token quantization).
     """
     bits = policy.w_bits
     assert bits is not None
     G = policy.group_size
     if policy.nonuniform and G is not None:
         raise NotImplementedError("group-wise scales with a k-means codebook")
-    wt = _pad_k(w.T.astype(jnp.float32), bits, G)            # (out, in_pad)
+    mult = _k_multiple(policy, tp_shards if tp_role == "row" else 1)
+    wt = _pad_k(w.T.astype(jnp.float32), mult)               # (out, in_pad)
     if policy.nonuniform:
         cb = quant.kmeans_codebook(wt, bits)
         # per-channel scale folded as amax normalisation before codebook fit
@@ -260,37 +300,44 @@ def quantize_weight(w: jax.Array, policy: QuantPolicy) -> QuantizedWeight:
         idx = quant.to_index(q, bits, policy.signed)
         levels = quant.uniform_codebook(bits, policy.signed).levels
     a_levels, plut = _act_tables(policy, levels)
+    a_sc = None
+    if a_static is not None and a_levels is not None:
+        a_sc = jnp.asarray(a_static, jnp.float32)
     return QuantizedWeight(
         packed=_pack_for_scheme(idx, bits, policy.scheme), codebook=levels,
         scales=scales, bits=bits,
         in_features=w.shape[0], out_features=w.shape[1],
         group_size=G, a_bits=policy.a_bits, scheme=policy.scheme,
         kernel=policy.resolved_kernel() if policy.kernel else None,
-        a_levels=a_levels, plut=plut)
+        a_levels=a_levels, plut=plut, a_sc=a_sc, tp=tp_role)
 
 
-def quantize_expert_weight(w: jax.Array, policy: QuantPolicy) -> QuantizedWeight:
+def quantize_expert_weight(w: jax.Array, policy: QuantPolicy, *,
+                           tp_role: Optional[str] = None,
+                           tp_shards: int = 1) -> QuantizedWeight:
     """Offline quantize+pack for stacked expert weights. w: (E, in, out) ->
     packed (E, out, in/f), scales (E, out) per-expert-per-channel or
-    (E, out, K/G) group-wise."""
+    (E, out, K/G) group-wise. A 'lut_gemm' plan keeps the LUT route: the
+    leaf carries the activation codebook + product LUT and the MoE forward
+    runs per-token activation quantization + expert_lut_gemm."""
     bits = policy.w_bits
     assert bits is not None and w.ndim == 3
     G = policy.group_size
-    wt = _pad_k(jnp.swapaxes(w, 1, 2).astype(jnp.float32), bits, G)  # (E, out, in_pad)
+    mult = _k_multiple(policy, tp_shards if tp_role == "row" else 1)
+    wt = _pad_k(jnp.swapaxes(w, 1, 2).astype(jnp.float32), mult)  # (E, out, in_pad)
     scales, sfull = _calibrate(wt, bits, policy.signed, G)
     q = quant.quantize(wt, sfull, bits=bits, signed=policy.signed)
     idx = quant.to_index(q, bits, policy.signed)
     levels = quant.uniform_codebook(bits, policy.signed).levels
-    # experts dispatch through expert_dequant_matmul (weight-only); the
-    # activation-quantized grouped LUT GEMM for experts is deferred.
     kern = policy.resolved_kernel() if policy.kernel else None
-    if kern == "lut_gemm":
-        kern = "dequant_matmul"
+    a_levels, plut = _act_tables(policy, levels)
     return QuantizedWeight(
         packed=_pack_for_scheme(idx, bits, policy.scheme), codebook=levels,
         scales=scales, bits=bits, in_features=w.shape[1],
-        out_features=w.shape[2], group_size=G, a_bits=None,
-        scheme=policy.scheme, kernel=kern)
+        out_features=w.shape[2], group_size=G,
+        a_bits=policy.a_bits if kern == "lut_gemm" else None,
+        scheme=policy.scheme, kernel=kern,
+        a_levels=a_levels, plut=plut, tp=tp_role)
 
 
 def dequant_weight(qw: QuantizedWeight) -> jax.Array:
@@ -387,12 +434,17 @@ def dense_serve(
     if a_bits is None:
         y = kops.dequant_matmul(
             xm, qw.packed, qw.codebook, qw.scales, bits=qw.bits,
-            group_size=G, backend=backend, block=block)
+            group_size=G, backend=backend, block=block, tp=qw.tp)
     else:
-        # Dynamic per-token activation quantization (paper Fig. 7
-        # 'Quantization', at row granularity): each row's scale depends only
-        # on its own activations, so outputs are batch-composition-independent
-        # and prefill+decode stays consistent with the full forward.
+        # Activation quantization scale. Static (calibrated offline,
+        # QuantPolicy.a_scale='static'): one per-tensor scale from the
+        # leaf — no reduction on the hot path, trivially batch-independent.
+        # Dynamic (default; paper Fig. 7 'Quantization', at row
+        # granularity): each row's scale depends only on its own
+        # activations, so outputs are batch-composition-independent and
+        # prefill+decode stays consistent with the full forward.
+        if a_scale is None and qw.a_sc is not None and a_bits == qw.a_bits:
+            a_scale = jnp.reshape(qw.a_sc, (1, 1)).astype(jnp.float32)
         if a_scale is None:
             a_scale, _ = quant.compute_scale_zero_point(
                 xm, a_bits, signed=True, axis=0)                    # (M, 1)
@@ -422,7 +474,8 @@ def dense_serve(
             plut = ProductLUT(table, qw.bits, a_bits)
             y = kops.lut_gemm(ap, qw.packed, plut, scheme=qw.scheme,
                               w_scales=qw.scales if G is not None else None,
-                              group_size=G, backend=backend, block=block)
+                              group_size=G, backend=backend, block=block,
+                              tp=qw.tp)
             y = y * a_scale if G is not None \
                 else y * qw.scales[None, :] * a_scale
     y = y[:n_rows]

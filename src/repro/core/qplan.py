@@ -91,14 +91,17 @@ def make_plan(
     scheme: str = "d",
     nonuniform: bool = False,
     signed: bool = True,
+    a_scale: str = "dynamic",
     keep: tuple = KEEP_BF16,
     rules: tuple = (),
 ) -> QuantPlan:
     """Single-policy plan: keep-list rules first (bf16), then extra ``rules``
-    (ordered, highest priority after the keeps), then a catch-all policy."""
+    (ordered, highest priority after the keeps), then a catch-all policy.
+    ``a_scale='static'`` opts w{b}a{b} layers into calibrated static
+    activation scales (see core/calibrate.py)."""
     default = QuantPolicy(
         w_bits=w_bits, a_bits=a_bits, group_size=group_size, signed=signed,
-        scheme=scheme, nonuniform=nonuniform, kernel="auto")
+        scheme=scheme, nonuniform=nonuniform, kernel="auto", a_scale=a_scale)
     keep_rules = tuple((pattern, None) for pattern in keep)
     return QuantPlan(rules=keep_rules + tuple(rules) + (("*", default),),
                      backend=backend)

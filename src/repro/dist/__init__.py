@@ -17,6 +17,8 @@ from . import collectives, fault, pipeline, sharding  # noqa: E402,F401
 from .fault import FaultConfig, run_resilient  # noqa: E402,F401
 from .sharding import (  # noqa: E402,F401
     PRESETS,
+    TP_ROLES,
+    active_tp,
     constrain_like_params,
     logical_axes_for,
     param_specs,
@@ -24,4 +26,5 @@ from .sharding import (  # noqa: E402,F401
     spec_for,
     tree_specs,
     use_rules,
+    use_tp,
 )

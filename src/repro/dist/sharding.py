@@ -99,12 +99,54 @@ _PREFILL = dict(_SERVE, seq="model", kv_seq=None, seq_sp="model")
 
 _LONG = dict(_SERVE, seq="model", seq_sp="model")
 
+_SERVE_TP = {
+    # Tensor-parallel serving engine (serving/engine.py, mesh over a single
+    # "model" axis). The continuous-batching slot dimension stays replicated
+    # (slots are a host-side scheduling concept, not a device axis). What
+    # shards: every weight matrix (vocab/heads/kv_heads/mlp/experts — the
+    # per-device memory win), the paged KV pool HEAD-wise (kv_heads; block
+    # tables index the block axis, which must stay whole on every device),
+    # and the mlp/vocab activation streams. Planned-quantized layers
+    # additionally run their kernels under explicit shard_map (kernels/ops
+    # via use_tp) — true Megatron col/row compute with a single psum.
+    #
+    # heads_act / kv_heads_act / mlp_act are deliberately None: constraining
+    # those streams miscompiles on the XLA:CPU SPMD emulation the
+    # 8-fake-device tests run on (garbage K written through the paged
+    # gather/scatter path for heads_act; wrong tokens on the gemma3
+    # local/global scan for mlp_act — the same class of emulation bug as
+    # the gpipe stage-axis note in ROADMAP.md), so those activations
+    # replicate until the constraints can be validated on real multi-device
+    # hardware. Token-identity of the TP engine against the single-device
+    # engine is CI-gated for this preset (tests/test_tp_serving.py).
+    "batch": None,
+    "group": None,
+    "seq": None,
+    "seq_sp": None,
+    "embed_act": None,
+    "heads_act": None,
+    "kv_heads_act": None,
+    "kv_seq": None,
+    "mlp_act": None,
+    "vocab_act": "model",
+    "rnn_act": None,
+    "experts_act": None,
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "rnn": None,
+}
+
 PRESETS = {
     "train": _TRAIN,
     "train_dp": _TRAIN_DP,
     "serve": _SERVE,
     "prefill": _PREFILL,
     "long": _LONG,
+    "serve_tp": _SERVE_TP,
 }
 
 
@@ -178,6 +220,34 @@ def use_rules(mesh, rules: dict):
         stack.pop()
 
 
+_TP_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def use_tp(mesh, axis: str = "model"):
+    """Activate the tensor-parallel kernel context for a trace: while active,
+    kernels/ops wraps kernel calls whose QuantizedWeight carries a TP role in
+    ``jax.shard_map`` over ``axis`` (column-parallel: weight sharded along N,
+    no collective; row-parallel: contraction sharded along K, one psum on the
+    partial outputs). No-op for the kernels when inactive — the exact same
+    model code runs single-device. Nestable and thread-local, like
+    ``use_rules``."""
+    stack = getattr(_TP_CTX, "stack", None)
+    if stack is None:
+        stack = _TP_CTX.stack = []
+    stack.append((mesh, axis))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def active_tp():
+    """(mesh, axis) of the innermost ``use_tp`` context, or None."""
+    stack = getattr(_TP_CTX, "stack", None)
+    return stack[-1] if stack else None
+
+
 def shard(x: jax.Array, *logical_axes) -> jax.Array:
     """Sharding constraint by logical axis names; identity when no rules are
     active (single-device runs never pay for the annotation)."""
@@ -239,6 +309,38 @@ _LEAF_AXES = {
 #   adafactor  : {"vr", "vc"} (factored second moment) or {"v"}
 _OPT_SUFFIXES = {"q", "sc", "f", "vr", "vc", "v"}
 
+# Tensor-parallel role of each dense / expert projection under the Megatron
+# split: "col" shards the output (N) dimension (no collective — the next
+# op consumes the shard), "row" shards the contraction (K) dimension and
+# needs one psum on the partial outputs. quantize_tree records the role on
+# QuantizedWeight leaves; kernels/ops dispatches shard_map accordingly.
+TP_ROLES = {
+    "wq": "col", "wk": "col", "wv": "col", "wo": "row",
+    "w_up": "col", "w_gate": "col", "w_down": "row",
+    "lm_head": "col",
+    "we_gate": "col", "we_up": "col", "we_down": "row",
+}
+
+
+def _qw_leaf_axes(name: str, nd_base: int, in_ax, out_ax, lead=()):
+    """Logical axes for one QuantizedWeight child leaf (base rank, i.e. the
+    leaf rank minus any leading scan-stacked layer dims — the caller's
+    generic left-padding restores those as replicated).
+
+    packed is (out, K/f) — the transpose of the dense (in, out) weight — so
+    column-parallel layers shard dim 0 and row-parallel layers shard dim 1
+    (the packed contraction axis). Group-wise scales (out, K/G) follow the
+    same rule; per-channel scales (out,) only carry the output axis. The
+    codebook / activation-codebook / product-LUT / static-activation-scale
+    tables are O(2^bits) and replicate.
+    """
+    if name == "packed":
+        return lead + (out_ax, in_ax)
+    if name == "scales":
+        grouped = nd_base == len(lead) + 2
+        return lead + ((out_ax, in_ax) if grouped else (out_ax,))
+    return ()  # codebook / a_levels / plut / a_sc: tiny tables, replicate
+
 
 def logical_axes_for(path, leaf) -> tuple:
     """Logical axes for a parameter (or shape-aligned optimizer-moment) leaf.
@@ -263,12 +365,19 @@ def logical_axes_for(path, leaf) -> tuple:
     elif name == "w" and parent in _DENSE_W_AXES:
         axes = _DENSE_W_AXES[parent]
     elif parent == "qw" and owner in _DENSE_W_AXES:
-        # packed serving weight: packed (out, in/f), scales (out,)
-        out_axis = _DENSE_W_AXES[owner][1]
-        if name == "packed":
-            axes = (out_axis, None)
-        elif name == "scales":
-            axes = (out_axis,)
+        # packed serving weight (QuantizedWeight under {"qw": ...}). Only the
+        # "blocks" subtree scan-stacks parameters, so the base (unstacked)
+        # rank is recoverable from the path.
+        in_ax, out_ax = _DENSE_W_AXES[owner]
+        nd_base = nd - (1 if "blocks" in names else 0)
+        axes = _qw_leaf_axes(name, nd_base, in_ax, out_ax)
+    elif parent in ("we_gate", "we_up", "we_down"):
+        # packed expert weight: the QuantizedWeight replaces the raw leaf, so
+        # its children live directly under the expert name. Layout is
+        # (E, out, K/f) / (E, out[, K/G]) with the expert axis leading.
+        e_ax, in_ax, out_ax = _LEAF_AXES[parent]
+        nd_base = nd - (1 if "blocks" in names else 0)
+        axes = _qw_leaf_axes(name, nd_base, in_ax, out_ax, lead=(e_ax,))
 
     if axes is None:
         axes = (None,) * nd

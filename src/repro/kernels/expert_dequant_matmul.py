@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import packing
-from .lut_gemm import _expand_scales_tile, _fit, _unpack_natural
+from .lut_gemm import _expand_scales_tile, _fit, _lut_products, _unpack_natural
 
 
 def _expert_kernel(x_ref, w_ref, cb_ref, sc_ref, o_ref, *, bits: int):
@@ -122,3 +122,117 @@ def expert_dequant_matmul_pallas(
         out_shape=jax.ShapeDtypeStruct((E, M, N), jnp.float32),
         interpret=interpret,
     )(x, w_packed, codebook.astype(jnp.float32), scales.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------- #
+# Activation-quantized expert LUT GEMM (w{b}a{b} MoE path)
+# --------------------------------------------------------------------------- #
+
+def _expert_lut_kernel(a_ref, w_ref, lut_ref, o_ref, *, bits: int,
+                       scheme: str, lookup_impl: str):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    prods = _lut_products(a_ref[0], w_ref[0], lut_ref, bits=bits,
+                          scheme=scheme, lookup_impl=lookup_impl)
+    o_ref[0] += prods.sum(axis=-1).astype(jnp.float32)
+
+
+def _expert_lut_grouped_kernel(a_ref, w_ref, lut_ref, sc_ref, o_ref, *,
+                               bits: int, scheme: str, lookup_impl: str,
+                               group_size: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    prods = _lut_products(a_ref[0], w_ref[0], lut_ref, bits=bits,
+                          scheme=scheme, lookup_impl=lookup_impl)
+    bm, bn, bk = prods.shape
+    ng = bk // group_size
+    pg = prods.reshape(bm, bn, ng, group_size).sum(axis=-1)
+    sc = sc_ref[0]                                                # (bn, ng)
+    o_ref[0] += (pg * sc[None, :, :]).sum(axis=-1).astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "scheme", "lookup_impl", "group_size",
+                              "bm", "bn", "bk", "interpret"))
+def expert_lut_gemm_pallas(
+    a_packed: jax.Array,     # (E, M, K/f) uint8 — packed per-expert act codes
+    w_packed: jax.Array,     # (E, N, K/f) uint8
+    lut_table: jax.Array,    # (2^(2*bits),) product LUT (w_bits == a_bits)
+    w_scales: jax.Array | None = None,   # (E, N, K/G) group-wise
+    *,
+    bits: int = 2,
+    scheme: str = "d",
+    lookup_impl: str = "take",
+    group_size: int | None = None,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-expert LUT GEMM: out[e,m,n] = sum_k LUT[(w[e,n,k]<<b) | a[e,m,k]].
+
+    The batched/grouped form of ``lut_gemm_pallas`` — the grid walks
+    (E, M-tiles, N-tiles, K-tiles) like ``expert_dequant_matmul_pallas`` but
+    the tile body is the multiply-free unpack/OR/lookup/accumulate loop.
+    Like ``lut_gemm``, per-channel weight scales stay in the caller's
+    epilogue; group-wise scales fuse into the K loop.
+    """
+    f = packing.PACK_FACTOR[bits]
+    E, M, Kp = a_packed.shape
+    E2, N, Kp2 = w_packed.shape
+    assert E == E2 and Kp == Kp2, (a_packed.shape, w_packed.shape)
+    K = Kp * f
+    grouped = w_scales is not None
+    if grouped:
+        assert group_size is not None and group_size % f == 0 \
+            and K % group_size == 0, (K, group_size, f)
+        assert w_scales.shape == (E, N, K // group_size), (w_scales.shape,)
+
+    bm, bn = _fit(bm, M), _fit(bn, N)
+    unit = group_size if grouped else f
+    u = _fit(max(bk // unit, 1), K // unit)
+    cap = 8 * 1024 * 1024
+    while bm * bn * (u * unit) * 8 > cap and u > 1:
+        u = _fit(max(u // 2, 1), K // unit)
+    while bm * bn * (u * unit) * 8 > cap and (bm > 8 or bn > 8):
+        if bm >= bn and bm > 8:
+            bm = _fit(max(bm // 2, 1), M)
+        else:
+            bn = _fit(max(bn // 2, 1), N)
+    bk = u * unit
+    bkp = bk // f
+
+    grid = (E, M // bm, N // bn, Kp // bkp)
+    in_specs = [
+        pl.BlockSpec((1, bm, bkp), lambda e, i, j, k: (e, i, k)),
+        pl.BlockSpec((1, bn, bkp), lambda e, i, j, k: (e, j, k)),
+        pl.BlockSpec((lut_table.shape[0],), lambda e, i, j, k: (0,)),
+    ]
+    args = [a_packed, w_packed, lut_table.astype(jnp.float32)]
+    if grouped:
+        in_specs.append(pl.BlockSpec((1, bn, bk // group_size),
+                                     lambda e, i, j, k: (e, j, k)))
+        args.append(w_scales.astype(jnp.float32))
+        kernel = functools.partial(
+            _expert_lut_grouped_kernel, bits=bits, scheme=scheme,
+            lookup_impl=lookup_impl, group_size=group_size)
+    else:
+        kernel = functools.partial(
+            _expert_lut_kernel, bits=bits, scheme=scheme,
+            lookup_impl=lookup_impl)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), jnp.float32),
+        interpret=interpret,
+    )(*args)

@@ -129,6 +129,23 @@ def ref_expert_dequant_matmul(
     return out * scales[:, None, :]
 
 
+def ref_expert_lut_gemm(
+    a_packed: jax.Array,     # (E, M, K/fa) packed per-expert activation codes
+    w_packed: jax.Array,     # (E, N, K/fw)
+    lut: ProductLUT,
+    w_scales: jax.Array | None = None,   # (E, N, K/G) group-wise
+    group_size: int | None = None,
+) -> jax.Array:
+    """Grouped per-expert LUT GEMM oracle: ``ref_lut_gemm`` vmapped over the
+    expert axis. out[e, m, n] = sum_k lut[w_idx[e,n,k] << a_bits | a_idx[e,m,k]]
+    (per K-group scaled before accumulation when ``w_scales`` is given)."""
+    if w_scales is None:
+        return jax.vmap(lambda a, w: ref_lut_gemm(a, w, lut))(a_packed, w_packed)
+    return jax.vmap(lambda a, w, s: ref_lut_gemm(
+        a, w, lut, w_scales=s, group_size=group_size))(
+            a_packed, w_packed, w_scales)
+
+
 def ref_kv_cache_attention(
     q: jax.Array,            # (B, KV, G, hd)
     k_packed: jax.Array,     # (B, S, KV, hd/f)

@@ -38,3 +38,14 @@ def make_cpu_mesh(shape: tuple, axes: tuple) -> Mesh:
     """Small mesh over however many (possibly fake) CPU devices exist —
     used by the 8-device sharded integration tests."""
     return _mesh(shape, axes)
+
+
+def make_tp_mesh(tp: int) -> Mesh:
+    """Single-axis ("model",) mesh over ``tp`` local devices — the serving
+    engine's tensor-parallel mesh (serving/engine.py ``mesh=``)."""
+    n = len(jax.devices())
+    if tp > n:
+        raise ValueError(f"--tp {tp} needs {tp} devices, have {n} "
+                         "(set XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N for CPU fakes)")
+    return _mesh((tp,), ("model",))

@@ -45,18 +45,75 @@ from repro.core.qplan import PLANS, get_plan, make_plan
 from repro.kernels import ops as kops
 from repro.models import lm, frontends
 from repro.launch import steps as St
+from repro.launch.mesh import make_tp_mesh
 from repro.serving import Engine, Request
 
 
-def serve_paged(cfg, qparams, args) -> int:
+def validate_args(args, cfg) -> None:
+    """Reject incoherent flag combinations LOUDLY instead of silently
+    auto-disabling features the caller asked for. Raises ValueError with an
+    actionable message (main() surfaces it through argparse.error)."""
+    recurrent = any(t in ("recurrent", "rwkv") for t in cfg.pattern)
+    if args.prefix_cache and not args.paged:
+        raise ValueError(
+            "--prefix-cache requires --paged: the radix cache shares blocks "
+            "of the paged engine's pool; the fixed-batch loop has no blocks "
+            "to share")
+    if args.prefill_batch > 1 and not args.paged:
+        raise ValueError(
+            "--prefill-batch requires --paged: batched prefill chunks are a "
+            "paged-engine feature (the fixed-batch loop already prefills "
+            "every request in one batch)")
+    if args.tp > 1 and not args.paged:
+        raise ValueError(
+            "--tp requires --paged: tensor-parallel serving runs through "
+            "the engine's mesh-parameterized step functions")
+    if args.prefix_cache and recurrent:
+        raise ValueError(
+            f"--prefix-cache is incompatible with recurrent arch "
+            f"'{cfg.name}': per-slot recurrent state has no block boundary "
+            "to share at (attention-only archs support prefix sharing)")
+    if args.prefix_cache and args.prefill == "whole":
+        raise ValueError(
+            "--prefix-cache is incompatible with --prefill whole: "
+            "whole-prompt admission recomputes from scratch and cannot "
+            "consume cached blocks; use --prefill chunked")
+    if args.a_scale == "static" and args.plan is None and args.a_bits is None:
+        raise ValueError(
+            "--a-scale static requires an activation-quantized plan: pass "
+            "--a-bits N (or a --plan with a_bits set) so there is an "
+            "activation scale to calibrate")
+    if args.a_scale == "static" and args.plan == "legacy":
+        raise ValueError(
+            "--a-scale static is incompatible with --plan legacy: the "
+            "legacy dequant-einsum forward has no activation quantization "
+            "to calibrate a scale for")
+    if args.tp < 1:
+        raise ValueError(f"--tp must be >= 1, got {args.tp}")
+    if args.tp > 1:
+        import jax
+        n = len(jax.devices())
+        if args.tp > n:
+            raise ValueError(
+                f"--tp {args.tp} needs {args.tp} devices but only {n} are "
+                "visible (on CPU, set XLA_FLAGS=--xla_force_host_platform_"
+                "device_count=N before starting)")
+
+
+def serve_paged(cfg, qparams, args, mesh=None) -> int:
     """Continuous-batching serve loop over the paged engine."""
     key = jax.random.PRNGKey(args.seed)
     max_len = args.prompt_len + args.gen + args.block_size
     max_len = -(-max_len // args.block_size) * args.block_size
     engine = Engine(cfg, qparams, n_slots=args.batch, max_len=max_len,
                     block_size=args.block_size, max_queue=args.max_queue,
+                    prefill=args.prefill,
                     prefix_cache=args.prefix_cache,
-                    prefill_batch=args.prefill_batch)
+                    prefill_batch=args.prefill_batch, mesh=mesh)
+    if mesh is not None:
+        print(f"  tensor-parallel over {mesh.shape['model']} devices: "
+              f"{engine.per_device_weight_bytes()/1e3:.1f} KB weights "
+              f"per device")
     t0 = time.time()
     first_tok: dict[int, float] = {}
 
@@ -137,23 +194,52 @@ def main():
                          "radix cache (--paged)")
     ap.add_argument("--prefill-batch", type=int, default=1,
                     help="requests fused per prefill chunk step (--paged)")
+    ap.add_argument("--prefill", default="chunked",
+                    choices=("chunked", "whole"),
+                    help="paged-engine admission mode (whole replays the "
+                         "legacy dense batcher's whole-prompt prefill)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: serve over a (tp,)-device "
+                         "'model' mesh (--paged; weights, LUT kernels and "
+                         "the paged KV pool shard over the mesh)")
+    ap.add_argument("--a-scale", default="dynamic",
+                    choices=("dynamic", "static"),
+                    help="w{b}a{b} activation scales: dynamic per-token "
+                         "(default) or static, calibrated offline over "
+                         "--calib-batches sample batches")
+    ap.add_argument("--calib-batches", type=int, default=4,
+                    help="sample batches for --a-scale static calibration")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
+    try:
+        validate_args(args, cfg)
+    except ValueError as e:
+        ap.error(str(e))
     if args.plan == "legacy":
         quant = QuantPolicy(w_bits=args.w_bits, nonuniform=args.nonuniform)
         desc = f"legacy w{args.w_bits} (dequant-einsum)"
     elif args.plan is not None:
         quant = get_plan(args.plan)
+        if args.a_scale == "static":
+            # retarget the preset's activation-quantized policies at static
+            # scales — otherwise the calibration below would run and then
+            # be silently discarded by quantize_tree (plan policies default
+            # to a_scale='dynamic')
+            quant = dataclasses.replace(quant, rules=tuple(
+                (pat, dataclasses.replace(pol, a_scale="static")
+                 if pol is not None and pol.a_bits is not None else pol)
+                for pat, pol in quant.rules))
         desc = f"plan '{args.plan}'"
     else:
         quant = make_plan(args.w_bits, args.a_bits, args.group_size,
-                          nonuniform=args.nonuniform)
+                          nonuniform=args.nonuniform, a_scale=args.a_scale)
         a = f"a{args.a_bits}" if args.a_bits else "a16"
         g = f" g{args.group_size}" if args.group_size else ""
-        desc = f"plan w{args.w_bits}{a}{g}"
+        s = " static-a" if args.a_scale == "static" else ""
+        desc = f"plan w{args.w_bits}{a}{g}{s}"
     cfg = dataclasses.replace(cfg, quant=quant)
 
     key = jax.random.PRNGKey(args.seed)
@@ -161,9 +247,21 @@ def main():
     print(f"[serve] {cfg.name}: packing weights under {desc} "
           f"({'k-means' if args.nonuniform else 'uniform'} codebook)")
     params = lm.init_params(key, cfg, mode="plain")
+
+    act_scales = None
+    if args.a_scale == "static":
+        t0 = time.time()
+        batches = [{"tokens": jax.random.randint(
+            jax.random.fold_in(key, 1000 + i), (B, P), 0, cfg.vocab_size)}
+            for i in range(args.calib_batches)]
+        act_scales = lm.calibrate_act_scales(params, cfg, batches)
+        print(f"  calibrated {len(act_scales)} layer classes over "
+              f"{args.calib_batches} batches in {time.time()-t0:.2f}s")
+
     t0 = time.time()
     kops.reset_dispatch_counts()
-    qparams = jax.jit(lambda p: lm.quantize_tree(p, cfg))(params)
+    qparams = jax.jit(lambda p: lm.quantize_tree(
+        p, cfg, tp=args.tp, act_scales=act_scales))(params)
     qparams = jax.block_until_ready(qparams)
     bf16_bytes = sum(x.size * 2 for x in jax.tree.leaves(params))
     q_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(qparams))
@@ -171,7 +269,8 @@ def main():
           f"-> {q_bytes/1e6:.1f} MB packed ({bf16_bytes/q_bytes:.2f}x)")
 
     if args.paged:
-        return serve_paged(cfg, qparams, args)
+        mesh = make_tp_mesh(args.tp) if args.tp > 1 else None
+        return serve_paged(cfg, qparams, args, mesh=mesh)
 
     kw = {}
     if cfg.is_encdec:

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.core import quant
+from repro.core import calibrate, quant
 from repro.core.qlinear import (QuantPolicy, QuantizedWeight, dense_serve,
                                 dequant_weight)
 from repro.core.qplan import plan_backend
@@ -61,6 +61,7 @@ def dense(p: dict, x: jax.Array, *, tag: str = "", policy,
     the plan's backend; ``qw.kernel`` None keeps the legacy dequant-einsum
     formulation bit-for-bit (the GSPMD-shardable dry-run form).
     """
+    calibrate.observe(tag, x)   # no-op outside a calibration context
     if "qw" in p:  # packed serving leaf
         qw: QuantizedWeight = p["qw"]
         if qw.kernel is not None:  # planned: kernel-backed hot path
@@ -581,16 +582,49 @@ def _expert_w(p: dict, name: str, *, pol, mode: str) -> jax.Array:
 
 def _expert_matmul(qw: QuantizedWeight, x: jax.Array, backend: str) -> jax.Array:
     """Planned expert projection: x (E, M, D_in) -> (E, M, D_out) f32 through
-    the grouped packed-weight kernel (kernels/expert_dequant_matmul). Mirrors
-    the K padding quantize_expert_weight applied."""
+    the grouped packed-weight kernels. Mirrors the K padding
+    quantize_expert_weight applied.
+
+    w{b}a16 plans contract through ``expert_dequant_matmul``. w{b}a{b} plans
+    (leaf kernel 'lut_gemm' with a precomputed product LUT) run the
+    paper-faithful path per expert: dynamic PER-TOKEN activation
+    quantization — each (e, m) row's scale depends only on its own values,
+    keeping outputs independent of the routed batch composition — then
+    ``expert_lut_gemm``. The 'ref' backend keeps the algebraically identical
+    dequant formulation so the SPMD dry-run sees shardable dense HLO."""
     from repro.core import packing
+    from repro.core.lut import ProductLUT
     from repro.kernels import ops as kops
     k_pad = qw.packed.shape[-1] * packing.PACK_FACTOR[qw.bits]
     if k_pad != qw.in_features:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, k_pad - qw.in_features)))
+    if qw.kernel == "lut_gemm" and qw.a_bits is not None and qw.plut is not None:
+        G = qw.group_size
+        a_scale = quant.group_scales(x.astype(jnp.float32),
+                                     qw.a_bits, None)[..., None]  # (E, M, 1)
+        aq = quant.quantize(x, a_scale, bits=qw.a_bits, signed=True)
+        a_idx = quant.to_index(aq, qw.a_bits, True)
+        if kops._resolve(backend) == "ref":
+            a_deq = jnp.take(qw.a_levels, a_idx.astype(jnp.int32))
+            w_deq = jnp.take(qw.codebook,
+                             packing.unpack(qw.packed, qw.bits).astype(jnp.int32))
+            if G is not None:
+                w_deq = w_deq * quant.expand_group_scales(qw.scales, G)
+            y = jnp.einsum("emk,enk->emn", a_deq, w_deq,
+                           preferred_element_type=jnp.float32)
+            return y * a_scale if G is not None \
+                else y * qw.scales[:, None, :] * a_scale
+        ap = packing.pack(a_idx, qw.a_bits)
+        plut = ProductLUT(qw.plut, qw.bits, qw.a_bits)
+        y = kops.expert_lut_gemm(
+            ap, qw.packed, plut, scheme=qw.scheme,
+            w_scales=qw.scales if G is not None else None,
+            group_size=G, backend=backend, tp=qw.tp)
+        return y * a_scale if G is not None \
+            else y * qw.scales[:, None, :] * a_scale
     return kops.expert_dequant_matmul(
         x, qw.packed, qw.codebook, qw.scales, bits=qw.bits,
-        group_size=qw.group_size, backend=backend)
+        group_size=qw.group_size, backend=backend, tp=qw.tp)
 
 
 def moe_apply(p: dict, x: jax.Array, *, cfg, mode: str = "plain") -> jax.Array:

@@ -503,7 +503,8 @@ def chunked_ce_loss(params: dict, cfg, hidden: jax.Array, labels: jax.Array,
 # Serving transformation: offline weight quantize+pack (the paper's step)
 # --------------------------------------------------------------------------- #
 
-def quantize_tree(params, cfg) -> dict:
+def quantize_tree(params, cfg, *, tp: int = 1,
+                  act_scales: Optional[dict] = None) -> dict:
     """Replace plan-covered dense {"w": ...} with {"qw": QuantizedWeight}.
     Expert tensors (we_gate/we_up/we_down) are packed per-expert. LSQ steps
     are dropped (training-only).
@@ -512,20 +513,55 @@ def quantize_tree(params, cfg) -> dict:
     gets the same format and the historical dequant-einsum forward) or a
     qplan.QuantPlan (ordered tag -> policy table: each layer class gets its
     own bits/group-size/kernel, resolved here, offline — the hot path only
-    ever sees the precomputed leaves)."""
+    ever sees the precomputed leaves).
+
+    ``tp`` packs the tree for an N-way tensor-parallel mesh: each leaf is
+    stamped with its Megatron role (dist.sharding.TP_ROLES — 'col' shards
+    the output dim, 'row' the contraction dim) and row-parallel layers get
+    extra K padding so packed bytes AND scale-group boundaries align to the
+    shard split (a group never straddles two devices). Layers whose output
+    dim does not divide ``tp`` stay replicated (role None) — the same
+    fallback-not-error policy as dist.sharding.
+
+    ``act_scales`` (from ``calibrate_act_scales``) supplies per-layer-class
+    activation amax stats; policies with ``a_scale='static'`` fold the
+    calibrated scale into the leaf (``QuantizedWeight.a_sc``) instead of
+    quantizing activations with a per-token dynamic scale."""
+    from repro.core import calibrate
+    from repro.dist.sharding import TP_ROLES
+
     pol = cfg.quant
     if isinstance(pol, qlinear.QuantPolicy) and pol.w_bits is None:
         return params
 
-    def qdense(w, lp):
+    def role_for(name: str, out_dim: int) -> Optional[str]:
+        if tp <= 1:
+            return None
+        role = TP_ROLES.get(name)
+        if role == "col" and out_dim % tp:
+            return None                     # divisibility fallback: replicate
+        return role
+
+    def static_for(tag, lp) -> Optional[float]:
+        if (lp.a_scale != "static" or lp.a_bits is None
+                or lp.resolved_kernel() != "lut_gemm"):
+            return None
+        amax = calibrate.lookup(act_scales, tag)
+        if amax is None:
+            return None                     # uncalibrated layer: dynamic
+        return calibrate.static_scale(amax, lp.a_bits)
+
+    def qdense(w, lp, role, a_static):
         # leading stack dims from scan-over-superblocks -> vmap the packer
-        fn = functools.partial(qlinear.quantize_weight, policy=lp)
+        fn = functools.partial(qlinear.quantize_weight, policy=lp,
+                               tp_role=role, tp_shards=tp, a_static=a_static)
         for _ in range(w.ndim - 2):
             fn = jax.vmap(fn)
         return fn(w)
 
-    def qexpert(w, lp):
-        fn = functools.partial(qlinear.quantize_expert_weight, policy=lp)
+    def qexpert(w, lp, role):
+        fn = functools.partial(qlinear.quantize_expert_weight, policy=lp,
+                               tp_role=role, tp_shards=tp)
         for _ in range(w.ndim - 3):
             fn = jax.vmap(fn)
         return fn(w)
@@ -544,7 +580,7 @@ def quantize_tree(params, cfg) -> dict:
                     lp = pol.policy_for(f"{path}.experts.{k}" if path
                                         else f"experts.{k}")
                     if lp is not None and hasattr(v, "ndim") and v.ndim >= 3:
-                        out[k] = qexpert(v, lp)
+                        out[k] = qexpert(v, lp, role_for(k, v.shape[-1]))
                     else:
                         out[k] = v
                     continue
@@ -552,7 +588,9 @@ def quantize_tree(params, cfg) -> dict:
                 if (isinstance(v, dict) and "w" in v and
                         hasattr(v["w"], "ndim") and v["w"].ndim >= 2 and
                         lp is not None):
-                    q = {"qw": qdense(v["w"], lp)}
+                    q = {"qw": qdense(v["w"], lp,
+                                      role_for(k, v["w"].shape[-1]),
+                                      static_for(tag, lp))}
                     if "b" in v:
                         q["b"] = v["b"]
                     out[k] = q
@@ -564,3 +602,24 @@ def quantize_tree(params, cfg) -> dict:
         return tree
 
     return walk(params)
+
+
+def calibrate_act_scales(params, cfg, batches, *, mode: str = "plain") -> dict:
+    """Offline activation-range calibration pass (static activation scales).
+
+    Runs the bf16 forward over ``batches`` (each a dict with at least
+    "tokens") inside a ``core.calibrate.collect_act_stats`` context and
+    returns the per-layer-class amax dict to hand to ``quantize_tree(...,
+    act_scales=...)``. Stats are keyed by the dense-call tags ("attn.wq",
+    "mlp.w_up", ...), i.e. one range per layer class — the granularity
+    plans are written in."""
+    from repro.core import calibrate
+
+    with calibrate.collect_act_stats() as stats:
+        for batch in batches:
+            h, _ = forward(params, cfg, batch["tokens"], mode=mode,
+                           positions=batch.get("positions"),
+                           audio_embed=batch.get("audio_embed"),
+                           vision_embed=batch.get("vision_embed"))
+            jax.block_until_ready(h)
+    return dict(stats)

@@ -41,6 +41,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.dist import sharding as Sh
 from repro.models import recurrent as R
 
 
@@ -167,6 +168,35 @@ def init_paged_cache(cfg, n_slots: int, n_blocks: int, block_size: int,
                                                   n_blocks, block_size, dtype)
                       for i in range(n_rem)}
     return out
+
+
+def paged_cache_axes(path, leaf) -> tuple:
+    """Logical axes for one paged-cache leaf (tensor-parallel serving).
+
+    Pool K/V leaves (n_blocks, block_size, KV, hd) and their quantization
+    scales shard HEAD-wise over the "kv_heads" logical axis: every device
+    holds its head slice of EVERY physical block, so the host-side BlockPool
+    allocator, block tables, radix prefix-sharing and preemption logic are
+    untouched — a block id means the same thing on all devices. Per-slot
+    recurrent / rwkv state (and anything unknown) replicates; leading
+    superblock-stack dims are handled by spec_for's rank alignment. Heads
+    that do not divide the mesh axis degrade to replication (spec_for's
+    divisibility fallback), never error.
+    """
+    names = Sh._path_names(path)
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    if parent == "attn" and name in ("k", "v"):
+        return (None, None, "kv_heads", None)
+    if parent == "attn" and name in ("k_sc", "v_sc"):
+        return (None, None, "kv_heads")
+    return (None,) * leaf.ndim
+
+
+def paged_cache_specs(caches: dict, mesh, rules: dict):
+    """NamedSharding tree for a paged cache under (mesh, rules) — the
+    head-wise pool sharding the TP engine places its device state with."""
+    return Sh.tree_specs(caches, mesh, rules, paged_cache_axes)
 
 
 def has_per_slot_state(caches: dict) -> bool:

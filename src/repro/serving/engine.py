@@ -63,6 +63,7 @@ scheduler. `prefill="chunked"` is the default and the fast path.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import deque
 from typing import Callable, Optional
@@ -71,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import sharding as Sh
 from repro.models import lm
 from . import cache as C
 from .radix import RadixCache
@@ -150,10 +152,23 @@ class Engine:
                      attention-only archs; silently disabled otherwise)
       sample         logits (n_slots, V) f32 -> next token ids (n_slots,);
                      default greedy argmax
+      mesh           optional jax Mesh with a "model" axis: the engine runs
+                     TENSOR-PARALLEL over it. Parameters are placed sharded
+                     (dist.sharding.param_specs — packed codes/scales along
+                     N for column-parallel layers, along K for row-parallel
+                     ones), the paged KV pool shards head-wise
+                     (cache.paged_cache_specs), and every jit'd step traces
+                     under use_rules + use_tp so activations follow the
+                     'serve_tp' preset and planned kernels run shard_map'd
+                     (kernels/ops). None (default): single-device, byte-for-
+                     byte the pre-TP engine.
+      rules          preset name (or rules dict) used with ``mesh``
 
     All device state lives in `self.caches` (the paged tree) and flows
     through the jit'd step functions with donated buffers; everything else
-    is host-side Python bookkeeping.
+    is host-side Python bookkeeping. Host-side scheduling (admission,
+    preemption, radix sharing, block accounting) is mesh-agnostic: a block
+    id addresses the same (head-sharded) physical block on every device.
     """
 
     def __init__(self, cfg, params, *, n_slots: int, max_len: int,
@@ -161,7 +176,8 @@ class Engine:
                  chunk_size: Optional[int] = None, max_queue: int = 64,
                  prefill: str = "chunked", prefill_batch: int = 1,
                  prefix_cache: bool = False,
-                 sample: Optional[Callable] = None):
+                 sample: Optional[Callable] = None,
+                 mesh=None, rules="serve_tp"):
         if cfg.is_encdec:
             raise NotImplementedError("engine: encoder-decoder serving")
         if cfg.mrope_sections or cfg.n_vision_tokens:
@@ -175,6 +191,15 @@ class Engine:
                 chunk_size -= block_size
         assert chunk_size % block_size == 0 and max_len % chunk_size == 0
         assert prefill in ("chunked", "whole")
+
+        self.mesh = mesh
+        self.rules = Sh.PRESETS[rules] if isinstance(rules, str) else rules
+        if mesh is not None:
+            assert "model" in mesh.shape, mesh
+            # place parameters against the mesh ONCE (offline): per-device
+            # weight bytes drop to ~1/N for every dividing dim
+            params = jax.device_put(
+                params, Sh.param_specs(params, mesh, self.rules))
 
         self.cfg = cfg
         self.params = params
@@ -191,6 +216,11 @@ class Engine:
 
         self.caches = C.init_paged_cache(cfg, n_slots, self.n_blocks,
                                          block_size)
+        self._cache_specs = None
+        if mesh is not None:
+            self._cache_specs = C.paged_cache_specs(self.caches, mesh,
+                                                    self.rules)
+            self.caches = jax.device_put(self.caches, self._cache_specs)
         self.pool = C.BlockPool(self.n_blocks)
         self._has_state = C.has_per_slot_state(self.caches)
         # batched prefill pads with inert rows — recurrent state must see
@@ -228,26 +258,50 @@ class Engine:
 
     # ---------------- jit'd step functions ----------------
 
+    @contextlib.contextmanager
+    def _mesh_ctx(self):
+        """Trace context for the jit'd steps: on a mesh, activations follow
+        the rules preset (GSPMD) and planned kernels run shard_map'd
+        (use_tp); single-device traces are untouched."""
+        if self.mesh is None:
+            yield
+        else:
+            with Sh.use_rules(self.mesh, self.rules), \
+                    Sh.use_tp(self.mesh, "model"):
+                yield
+
+    def _constrain_caches(self, tree):
+        """Pin the updated cache tree to the head-wise pool shardings so the
+        steady-state jit loop re-feeds identically-sharded (donatable)
+        buffers — no resharding and no second compile between steps."""
+        if self._cache_specs is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            tree, self._cache_specs)
+
     def _decode_fn(self, caches, tables, tokens, pos, active):
         """One token for every slot. tokens (n_slots, 1) int32, pos
         (n_slots,) int32, tables (n_slots, nb_max) int32, active (n_slots,)
         bool. Returns (new caches, (n_slots, V) f32 last-token logits)."""
-        h, new = lm.forward(self.params, self.cfg, tokens, caches=caches,
-                            pos=pos, block_tables=tables)
-        # inactive / prefilling slots keep their per-slot recurrent state
-        new = C.select_slots(caches, new, active)
-        logits = lm.logits_fn(self.params, self.cfg, h)[:, -1]
-        return new, logits
+        with self._mesh_ctx():
+            h, new = lm.forward(self.params, self.cfg, tokens, caches=caches,
+                                pos=pos, block_tables=tables)
+            # inactive / prefilling slots keep their per-slot recurrent state
+            new = C.select_slots(caches, new, active)
+            logits = lm.logits_fn(self.params, self.cfg, h)[:, -1]
+            return self._constrain_caches(new), logits
 
     def _prefill_fn(self, caches, table_row, tokens, start, slot_ix):
         """One prompt chunk for one request. tokens (1, chunk) int32 (pad
         rows zero), start scalar int32 (first row index), slot_ix scalar
         int32 (per-slot recurrent state row). Pad-row K/V falls into the
         null block; per-slot state is sliced/merged around the forward."""
-        sliced = C.slot_slice(caches, slot_ix)
-        _, new = lm.forward(self.params, self.cfg, tokens, caches=sliced,
-                            pos=start[None], block_tables=table_row[None])
-        return C.slot_merge(caches, new, slot_ix)
+        with self._mesh_ctx():
+            sliced = C.slot_slice(caches, slot_ix)
+            _, new = lm.forward(self.params, self.cfg, tokens, caches=sliced,
+                                pos=start[None], block_tables=table_row[None])
+            return self._constrain_caches(C.slot_merge(caches, new, slot_ix))
 
     def _prefill_batched_fn(self, caches, tables, tokens, starts):
         """Fixed-shape multi-request chunk. tokens (prefill_batch, chunk)
@@ -255,16 +309,20 @@ class Engine:
         int32. Pad rows carry an all-null table (writes land in the null
         block, outputs discarded). Only valid for archs without per-slot
         state, so the returned tree is the updated pool wholesale."""
-        _, new = lm.forward(self.params, self.cfg, tokens, caches=caches,
-                            pos=starts, block_tables=tables)
-        return new
+        with self._mesh_ctx():
+            _, new = lm.forward(self.params, self.cfg, tokens, caches=caches,
+                                pos=starts, block_tables=tables)
+            return self._constrain_caches(new)
 
     def _prefill_whole_fn(self, caches, table_row, prompt, slot_ix):
         # legacy-equivalent admission: one full-prompt forward (same math,
         # same float path as the dense batcher), rows scattered into blocks
-        _, pf = lm.forward(self.params, self.cfg, prompt, collect_cache=True)
-        return C.write_prompt_rows(caches, pf, table_row, slot_ix,
-                                   self.block_size, self.cfg.kv_cache_dtype)
+        with self._mesh_ctx():
+            _, pf = lm.forward(self.params, self.cfg, prompt,
+                               collect_cache=True)
+            return self._constrain_caches(
+                C.write_prompt_rows(caches, pf, table_row, slot_ix,
+                                    self.block_size, self.cfg.kv_cache_dtype))
 
     # ---------------- admission / preemption ----------------
 
@@ -627,6 +685,21 @@ class Engine:
                              if self.radix is not None else None),
             "n_compiles": self.n_compiles(),
         }
+
+    def per_device_weight_bytes(self) -> int:
+        """Parameter bytes resident on ONE device (the first mesh device).
+        With a TP mesh this is ~1/N of the replicated footprint for every
+        dividing dim — the memory half of the tensor-parallel contract."""
+        dev = (self.mesh.devices.flat[0] if self.mesh is not None
+               else jax.devices()[0])
+        total = 0
+        for x in jax.tree.leaves(self.params):
+            if not hasattr(x, "addressable_shards"):
+                continue
+            for s in x.addressable_shards:
+                if s.device == dev:
+                    total += s.data.size * s.data.dtype.itemsize
+        return total
 
     def n_compiles(self) -> Optional[int]:
         """Total jit cache entries across the engine's step functions (the

@@ -1,0 +1,112 @@
+"""Hypothesis property tests for BlockPool refcount invariants.
+
+The radix prefix cache, preemption, and TP sharing all lean on the pool's
+ownership protocol: whatever interleaving of alloc / ref / free / (radix-
+style) share-and-release happens, the pool must never double-free, leak a
+block, or hand out the null block. A shadow model (plain dict refcounts)
+runs alongside and the invariants are checked after every operation.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving.cache import NULL_BLOCK, BlockPool  # noqa: E402
+
+settings.register_profile("ci", max_examples=60, deadline=None)
+settings.load_profile("ci")
+
+
+# op encoding: ("alloc", n) | ("ref", pick) | ("free", pick) | ("free_all", pick)
+_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("alloc"), st.integers(0, 6)),
+        st.tuples(st.just("ref"), st.integers(0, 10 ** 6)),
+        st.tuples(st.just("free"), st.integers(0, 10 ** 6)),
+        st.tuples(st.just("free_all"), st.integers(0, 10 ** 6)),
+    ),
+    max_size=60,
+)
+
+
+def _check_invariants(pool: BlockPool, model: dict):
+    n = pool.n_blocks
+    # null block is never owned and never in the free list
+    assert pool.refcount(NULL_BLOCK) == 0
+    assert NULL_BLOCK not in pool._free
+    # shadow model agrees exactly
+    for b in range(1, n):
+        assert pool.refcount(b) == model.get(b, 0), (b, model)
+    # free list holds exactly the refcount-0 allocatable blocks (no leak,
+    # no premature reuse)
+    free = set(pool._free)
+    live = {b for b, r in model.items() if r > 0}
+    assert free.isdisjoint(live)
+    assert free | live == set(range(1, n)), (free, live)
+    # conservation: every block is either free or owned
+    assert len(free) + len(live) == n - 1
+
+
+@given(n_blocks=st.integers(2, 12), ops=_OPS)
+def test_blockpool_refcount_invariants(n_blocks, ops):
+    pool = BlockPool(n_blocks)
+    model: dict[int, int] = {}
+    held: list[list[int]] = []      # granted allocations (tables / radix refs)
+
+    for op, arg in ops:
+        if op == "alloc":
+            got = pool.alloc(arg)
+            can = sum(1 for b in range(1, n_blocks) if model.get(b, 0) == 0)
+            if arg > can:
+                assert got is None          # all-or-nothing: pool unchanged
+            else:
+                assert got is not None and len(got) == arg
+                assert NULL_BLOCK not in got
+                assert all(model.get(b, 0) == 0 for b in got)
+                for b in got:
+                    model[b] = 1
+                if got:
+                    held.append(list(got))
+        elif op == "ref" and held:
+            ids = held[arg % len(held)]
+            pool.ref(ids)                    # prefix-sharing attach
+            for b in ids:
+                model[b] += 1
+            held.append(list(ids))
+        elif op == "free" and held:
+            ids = held.pop(arg % len(held))
+            pool.free(ids)
+            for b in ids:
+                model[b] -= 1
+        elif op == "free_all" and held:
+            # preemption / request-finish: drop one whole ownership set
+            ids = held.pop(arg % len(held))
+            pool.free(ids)
+            for b in ids:
+                model[b] -= 1
+        _check_invariants(pool, model)
+
+    # drain every remaining owner: the pool must return to fully-free with
+    # no block lost and no double-free fired along the way
+    for ids in held:
+        pool.free(ids)
+    assert pool.n_free == n_blocks - 1
+
+
+@given(n_blocks=st.integers(2, 8), seq=st.integers(0, 10 ** 6))
+def test_blockpool_double_free_asserts(n_blocks, seq):
+    pool = BlockPool(n_blocks)
+    got = pool.alloc(1)
+    if got is None:
+        return
+    pool.free(got)
+    with pytest.raises(AssertionError):
+        pool.free(got)                      # ownership accounting corrupt
+
+
+def test_null_block_is_never_granted_exhaustively():
+    pool = BlockPool(9)
+    got = pool.alloc(8)
+    assert got is not None and NULL_BLOCK not in got
+    assert pool.alloc(1) is None

@@ -1,0 +1,89 @@
+"""launch/serve.py flag validation: incoherent combinations are rejected
+with actionable messages instead of silently auto-disabling features."""
+
+import argparse
+
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.launch.serve import validate_args
+
+
+def _args(**kw):
+    base = dict(paged=False, prefix_cache=False, prefill_batch=1,
+                prefill="chunked", tp=1, a_scale="dynamic", a_bits=None,
+                plan=None)
+    base.update(kw)
+    return argparse.Namespace(**base)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    return reduce_for_smoke(get_config("qwen1.5-0.5b"))
+
+
+@pytest.fixture(scope="module")
+def recurrent():
+    return reduce_for_smoke(get_config("recurrentgemma-9b"))
+
+
+def test_valid_combinations_pass(qwen):
+    validate_args(_args(), qwen)
+    validate_args(_args(paged=True, prefix_cache=True, prefill_batch=4),
+                  qwen)
+    validate_args(_args(paged=True, prefill="whole"), qwen)
+    validate_args(_args(paged=True, a_scale="static", a_bits=2), qwen)
+
+
+def test_prefix_cache_requires_paged(qwen):
+    with pytest.raises(ValueError, match="--prefix-cache requires --paged"):
+        validate_args(_args(prefix_cache=True), qwen)
+
+
+def test_prefill_batch_requires_paged(qwen):
+    with pytest.raises(ValueError, match="--prefill-batch requires --paged"):
+        validate_args(_args(prefill_batch=4), qwen)
+
+
+def test_tp_requires_paged(qwen):
+    with pytest.raises(ValueError, match="--tp requires --paged"):
+        validate_args(_args(tp=8), qwen)
+
+
+def test_prefix_cache_rejects_recurrent_arch(recurrent):
+    with pytest.raises(ValueError,
+                       match="incompatible with recurrent arch"):
+        validate_args(_args(paged=True, prefix_cache=True), recurrent)
+
+
+def test_prefix_cache_rejects_whole_prefill(qwen):
+    with pytest.raises(ValueError,
+                       match="incompatible with --prefill whole"):
+        validate_args(_args(paged=True, prefix_cache=True, prefill="whole"),
+                      qwen)
+
+
+def test_static_a_scale_requires_a_bits(qwen):
+    with pytest.raises(ValueError,
+                       match="--a-scale static requires"):
+        validate_args(_args(paged=True, a_scale="static"), qwen)
+    # a named plan or explicit --a-bits both satisfy it
+    validate_args(_args(paged=True, a_scale="static", plan="w2a2"), qwen)
+
+
+def test_static_a_scale_rejects_legacy_plan(qwen):
+    with pytest.raises(ValueError,
+                       match="incompatible with --plan legacy"):
+        validate_args(_args(paged=True, a_scale="static", plan="legacy"),
+                      qwen)
+
+
+def test_tp_must_be_positive(qwen):
+    with pytest.raises(ValueError, match="--tp must be >= 1"):
+        validate_args(_args(paged=True, tp=0), qwen)
+
+
+def test_tp_rejects_more_shards_than_devices(qwen):
+    # the test process sees exactly one CPU device (conftest)
+    with pytest.raises(ValueError, match="devices"):
+        validate_args(_args(paged=True, tp=8), qwen)
