@@ -1,0 +1,109 @@
+"""Decode-shape kernel benchmark: does LUT-GEMM actually WIN?
+
+ROADMAP item 1: `BENCH_smoke.json` shows the product-LUT formulation merely
+tying dequant-then-GEMM. This benchmark times the three dense kernel routes
+of the registry at the shapes that matter for serving — decode GEMVs
+(M in {1, 4}) over the qwen1.5-0.5b projection sizes — and emits
+``BENCH_kernels.json`` with the headline ratio CI gates on:
+``bitsliced_vs_dequant`` (> 1 means the T-MAC bit-sliced route is faster).
+
+Routes (all jit'd 'ref' formulations — the XLA:CPU forms a user of this
+container actually runs; every fn is AOT-compiled before timing):
+
+  dequant_matmul       codebook-dequantize the packed weights, f32 matmul
+  lut_gemm             product-LUT gather (paper's original formulation)
+  lut_gemm_bitsliced   per-token subset-sum LUT + one gather per bit-plane
+                       (T-MAC): b gathers replace K MACs per output
+
+The bit-sliced route wins at decode because its LUT build is O(M*K/g*2^g)
+— trivial at M<=4 — after which each of the b*N*K/g gathers amortizes g=4
+multiply-adds, while dequant still pays the full K-length f32 FMA per
+output AND the dequantized weight materialization.
+"""
+
+import json
+import os
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import lut, packing, quant
+from repro.kernels import ref
+
+from .common import timeit
+
+_M = (1, 4)                       # decode: single token / small slot batch
+_BITS = (2, 4)
+
+
+def _proj_shapes():
+    """(K, N) pairs of the qwen1.5-0.5b MLP projections (d_model=1024,
+    d_ff=2816): up/gate, down, and the square attention projection."""
+    cfg = get_config("qwen1.5-0.5b")
+    d, f = cfg.d_model, cfg.d_ff
+    return [(d, d), (d, f), (f, d)]
+
+
+def _aot(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def _one(m: int, k: int, n: int, bits: int) -> dict:
+    rng = np.random.default_rng(0)
+    a_f32 = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    a_i8 = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    w_idx = jnp.asarray(rng.integers(0, 2 ** bits, (n, k)), jnp.uint8)
+    cb = quant.uniform_codebook(bits, True)
+    scales = jnp.asarray(np.abs(rng.standard_normal((n,))) + 0.05,
+                         jnp.float32)
+
+    wp = packing.pack(w_idx, bits)
+    planes = packing.pack_bitplanes_signed(w_idx, bits)
+    a_idx = jnp.asarray(rng.integers(0, 2 ** bits, (m, k)), jnp.uint8)
+    ap = packing.pack(a_idx, bits)
+    plut = lut.product_lut(cb, cb)
+
+    dq = _aot(lambda a, w: ref.ref_dequant_matmul(
+        a, w, cb.levels, scales, bits), a_f32, wp)
+    lg = _aot(lambda a, w: ref.ref_lut_gemm(a, w, plut), ap, wp)
+    bs = _aot(lambda a, w: ref.ref_lut_gemm_bitsliced(a, w, bits=bits),
+              a_i8, planes)
+
+    t_dq = timeit(dq, a_f32, wp)
+    t_lg = timeit(lg, ap, wp)
+    t_bs = timeit(bs, a_i8, planes)
+    return {
+        "m": m, "k": k, "n": n, "bits": bits,
+        "dequant_matmul_s": t_dq,
+        "lut_gemm_s": t_lg,
+        "lut_gemm_bitsliced_s": t_bs,
+        "bitsliced_vs_dequant": round(t_dq / t_bs, 3),
+        "lut_vs_dequant": round(t_dq / t_lg, 3),
+    }
+
+
+def run(json_out: str = "BENCH_kernels.json") -> dict:
+    t0 = time.time()
+    rows = [_one(m, k, n, bits)
+            for (k, n) in _proj_shapes() for m in _M for bits in _BITS]
+    result = {
+        "benchmark": "kernels_decode",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "total_s": round(time.time() - t0, 2),
+        "results": rows,
+    }
+    out_dir = os.path.dirname(json_out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(json_out, "w") as fh:
+        json.dump(result, fh, indent=1)
+    worst = min(r["bitsliced_vs_dequant"] for r in rows if r["bits"] == 2)
+    print(f"[kernels] {len(rows)} rows in {result['total_s']}s; "
+          f"worst w2 bitsliced_vs_dequant = {worst}x -> {json_out}")
+    return result

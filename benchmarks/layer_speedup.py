@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
 from repro.core import packing, quant
-from repro.kernels import ops
+from repro.kernels import registry
 
 from .common import LAYERS, emit, geomean, timeit
 
@@ -53,7 +53,8 @@ def _measured_ratio(M, N, K):
     sc = jnp.ones((K,), jnp.float32)
 
     def lut_gemm(a, w):
-        return ops.dequant_matmul(a, w, cb, sc, bits=2, backend="ref")
+        return registry.dispatch("dequant_matmul", a, w, cb, sc, bits=2,
+                                 backend="ref")
 
     t_int8 = timeit(jax.jit(int8_gemm), a8, w8)
     t_lut = timeit(jax.jit(lut_gemm), a16, wp)

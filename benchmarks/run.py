@@ -30,11 +30,16 @@ def main(argv=None) -> int:
                     help="JSON result path for --smoke (CI artifact)")
     ap.add_argument("--serving-json-out", default="BENCH_serving.json",
                     help="JSON result path for the serving smoke benchmark")
+    ap.add_argument("--kernels-json-out", default="BENCH_kernels.json",
+                    help="JSON result path for the decode-shape kernel "
+                         "benchmark (CI gates the w2 bitsliced-vs-dequant "
+                         "ratio from it)")
     args = ap.parse_args(argv)
 
     if args.smoke:
-        from . import serving, smoke
+        from . import kernels, serving, smoke
         smoke.run(args.json_out)
+        kernels.run(args.kernels_json_out)
         serving.run(args.serving_json_out)
         print("smoke benchmark complete")
         return 0

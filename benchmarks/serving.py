@@ -58,7 +58,7 @@ import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.core import qplan
-from repro.kernels import ops as kops
+from repro.kernels import registry as kops
 from repro.models import lm
 from repro.serving import ContinuousBatcher, Engine, Request
 
@@ -245,7 +245,7 @@ import dataclasses, json, time
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_config, reduce_for_smoke
 from repro.core import qplan
-from repro.kernels import ops as kops
+from repro.kernels import registry as kops
 from repro.launch.mesh import make_tp_mesh
 from repro.models import lm
 from repro.serving import Engine, Request

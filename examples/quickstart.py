@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lut, packing, quant
-from repro.kernels import ops
+from repro.kernels import registry
 
 key = jax.random.PRNGKey(0)
 M, N, K, BITS = 64, 128, 256, 2
@@ -38,9 +38,11 @@ cb = quant.uniform_codebook(BITS, signed=True)
 table = lut.fused_lut(cb, cb, w_scale, a_scale)
 print(f"LUT: {table.n_entries} entries, {table.nbytes} bytes")
 
-# 4. GEMM by table lookup (Pallas kernel, interpret mode on CPU)
-out = ops.lut_gemm(a_packed, w_packed, table, backend="pallas_interpret",
-                   block=(64, 128, 256))
+# 4. GEMM by table lookup (Pallas kernel, interpret mode on CPU), through
+#    the KernelOp registry — the one dispatch surface every caller uses
+out = registry.dispatch("lut_gemm", a_packed, w_packed, table.table, None,
+                        w_bits=table.w_bits, a_bits=table.a_bits,
+                        backend="pallas_interpret", block=(64, 128, 256))
 
 # 5. the oracle: dequantize and matmul — must match exactly
 a_deq = quant.dequantize(quant.from_index(a_idx, BITS), a_scale)

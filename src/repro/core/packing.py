@@ -158,6 +158,85 @@ def unpack_paired(packed: jax.Array, bits: int) -> jax.Array:
 
 
 # --------------------------------------------------------------------------- #
+# Bit-sliced planes (T-MAC decomposition) — scheme 'bs'
+# --------------------------------------------------------------------------- #
+#
+# A b-bit signed weight is decomposed into b one-bit planes via two's
+# complement:  w = sum_{j<b-1} 2^j * t_j  -  2^(b-1) * t_{b-1},  where t_j are
+# the bits of (idx XOR 2^(b-1)) and idx is the unsigned storage code
+# (idx = w + 2^(b-1), see quant.to_index). Each plane groups BITPLANE_GROUP
+# consecutive K positions into one byte-sized *pattern* that directly indexes
+# a 2^g-entry per-token LUT of activation subset-sums — the lookup replaces
+# g multiply-accumulates per plane (T-MAC / LUT-16 with g=4). Storage cost is
+# bits * K/g bytes per output channel: identical to the natural packing for
+# (bits=2, g=4) and for (bits=4, g=4).
+
+BITPLANE_GROUP = 4  # K codes per pattern byte; LUT has 2^g entries
+
+
+def bitplane_packed_len(k: int, group: int = BITPLANE_GROUP) -> int:
+    assert k % group == 0, f"K={k} not divisible by plane group {group}"
+    return k // group
+
+
+def pack_bitplanes(idx: jax.Array, bits: int,
+                   group: int = BITPLANE_GROUP) -> jax.Array:
+    """(..., N, K) uint8 codes -> (..., bits, N, K/group) uint8 patterns.
+
+    Plane j's byte g holds bit j of codes [g*group, (g+1)*group): pattern
+    bit i = bit j of code g*group+i. The plane axis is inserted at -3 so
+    stacked (vmapped) leaves keep planes adjacent to the (N, K/g) matrix.
+    """
+    assert group <= 8, group
+    *lead, n, k = idx.shape
+    assert k % group == 0, (k, group)
+    g = idx.reshape(*lead, n, k // group, group).astype(jnp.uint8)
+    planes = []
+    for b in range(bits):
+        bit = (g >> b) & jnp.uint8(1)
+        planes.append(reduce(jnp.bitwise_or,
+                             [bit[..., j] << j for j in range(group)]))
+    return jnp.stack(planes, axis=-3)
+
+
+def unpack_bitplanes(planes: jax.Array, bits: int,
+                     group: int = BITPLANE_GROUP) -> jax.Array:
+    """Inverse of pack_bitplanes: (..., bits, N, K/g) -> (..., N, K) codes."""
+    *lead, nplanes, n, kg = planes.shape
+    assert nplanes == bits, (planes.shape, bits)
+    pat = jnp.moveaxis(planes, -3, 0)                   # (bits, ..., N, K/g)
+    slots = []
+    for j in range(group):
+        code = jnp.zeros(pat.shape[1:], jnp.uint8)
+        for b in range(bits):
+            code = code | (((pat[b] >> j) & jnp.uint8(1)) << b)
+        slots.append(code)
+    out = jnp.stack(slots, axis=-1)                     # (..., N, K/g, g)
+    return out.reshape(*lead, n, kg * group)
+
+
+def pack_bitplanes_signed(idx: jax.Array, bits: int,
+                          group: int = BITPLANE_GROUP) -> jax.Array:
+    """Pack the two's-complement planes of the SIGNED value idx - 2^(b-1):
+    XOR-ing the top bit makes the plane coefficients bitplane_coeffs(bits),
+    so no per-row correction term is needed in the kernel."""
+    sign = jnp.uint8(1 << (bits - 1))
+    return pack_bitplanes(idx.astype(jnp.uint8) ^ sign, bits, group)
+
+
+def unpack_bitplanes_signed(planes: jax.Array, bits: int,
+                            group: int = BITPLANE_GROUP) -> jax.Array:
+    """Inverse of pack_bitplanes_signed: recovers the unsigned storage idx."""
+    sign = jnp.uint8(1 << (bits - 1))
+    return unpack_bitplanes(planes, bits, group) ^ sign
+
+
+def bitplane_coeffs(bits: int) -> tuple[int, ...]:
+    """Per-plane signed coefficients: (1, 2, ..., 2^(b-2), -2^(b-1))."""
+    return tuple(1 << j for j in range(bits - 1)) + (-(1 << (bits - 1)),)
+
+
+# --------------------------------------------------------------------------- #
 # int32 carrier (wide-register analogue; used for HBM-friendly layouts)
 # --------------------------------------------------------------------------- #
 

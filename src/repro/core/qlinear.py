@@ -41,8 +41,8 @@ import jax
 import jax.numpy as jnp
 
 from . import packing, quant
-from .lut import ProductLUT, product_lut
-from repro.kernels import ops as kops
+from .lut import product_lut
+from repro.kernels import registry as kreg
 
 
 # --------------------------------------------------------------------------- #
@@ -111,7 +111,9 @@ class QuantPolicy:
     # layer classes to keep full precision (matched against tag components)
     skip: tuple = ("router", "embed", "norm")
     group_size: Optional[int] = None   # K-group size for scales (None: per-channel)
-    kernel: Optional[str] = None       # None | 'auto' | 'dequant_matmul' | 'lut_gemm'
+    # None | 'auto' | any kernels/registry op name ('dequant_matmul',
+    # 'lut_gemm', 'lut_gemm_bitsliced', ...)
+    kernel: Optional[str] = None
     a_scale: str = "dynamic"           # 'dynamic' | 'static' (calibrated)
 
     def applies(self, tag: str) -> bool:
@@ -145,7 +147,10 @@ class QuantizedWeight:
 
     packed   : (out, in/f) uint8 — packed codes along K (scheme in ``scheme``;
                schemes 'c'/'d' are byte-identical to 'a' — the index-ready
-               trick lives in the unpack masks, see core/packing.py)
+               trick lives in the unpack masks, see core/packing.py). The
+               bit-sliced route stores (bits, out, in/g) two's-complement
+               plane patterns instead (scheme 'bs', packing.pack_bitplanes_
+               signed)
     codebook : (2^bits,) f32 — *unscaled* levels (uniform ints or k-means)
     scales   : (out,) f32 per-output-channel, or (out, K/G) group-wise when
                ``group_size`` is set (K the padded contraction axis)
@@ -162,6 +167,11 @@ class QuantizedWeight:
                codes + scales shard along out/N), 'row' (shard along the
                packed contraction axis, outputs psum'd) or None (replicate).
                Only honoured when a dist.sharding.use_tp context is active.
+    tiles    : autotuned Pallas blocks, a static tuple of (m, bm, bn, bk)
+               entries keyed by token-row bucket (kernels/autotune, stamped
+               at quantize_tree time — NEVER under jit). Aux data: hashable,
+               survives checkpoints via the manifest meta (autotune.
+               tile_meta / apply_tile_meta). Empty -> kernel defaults.
     """
     packed: jax.Array
     codebook: jax.Array
@@ -177,6 +187,7 @@ class QuantizedWeight:
     plut: Optional[jax.Array] = None
     a_sc: Optional[jax.Array] = None
     tp: Optional[str] = None
+    tiles: tuple = ()
 
     def tree_flatten_with_keys(self):
         return (
@@ -187,18 +198,31 @@ class QuantizedWeight:
             (jax.tree_util.GetAttrKey("plut"), self.plut),
             (jax.tree_util.GetAttrKey("a_sc"), self.a_sc),
         ), (self.bits, self.in_features, self.out_features, self.group_size,
-            self.a_bits, self.scheme, self.kernel, self.tp)
+            self.a_bits, self.scheme, self.kernel, self.tp, self.tiles)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         packed, codebook, scales, a_levels, plut, a_sc = children
-        bits, in_f, out_f, group_size, a_bits, scheme, kernel, tp = aux
+        bits, in_f, out_f, group_size, a_bits, scheme, kernel, tp, tiles = aux
         return cls(packed, codebook, scales, bits, in_f, out_f, group_size,
-                   a_bits, scheme, kernel, a_levels, plut, a_sc, tp)
+                   a_bits, scheme, kernel, a_levels, plut, a_sc, tp, tiles)
 
     @property
     def nbytes_packed(self) -> int:
         return self.packed.size * self.packed.dtype.itemsize
+
+    @property
+    def k_padded(self) -> int:
+        """Padded contraction length recoverable from the packed layout."""
+        if self.scheme == "bs":
+            return self.packed.shape[-1] * packing.BITPLANE_GROUP
+        return self.packed.shape[-1] * packing.PACK_FACTOR[self.bits]
+
+    def unpacked_idx(self) -> jax.Array:
+        """(..., out, in_pad) unsigned storage codes for any scheme."""
+        if self.scheme == "bs":
+            return packing.unpack_bitplanes_signed(self.packed, self.bits)
+        return packing.unpack(self.packed, self.bits)
 
 
 jax.tree_util.register_pytree_with_keys(
@@ -216,8 +240,13 @@ def _k_multiple(policy: QuantPolicy, tp_shards: int = 1) -> int:
     import math
     m = policy.group_size if policy.group_size is not None \
         else packing.PACK_FACTOR[policy.w_bits]
-    if policy.a_bits is not None and policy.resolved_kernel() == "lut_gemm":
+    kern = policy.resolved_kernel()
+    if policy.a_bits is not None and kern == "lut_gemm":
         m = math.lcm(m, packing.PACK_FACTOR[policy.a_bits])
+    if kern == "lut_gemm_bitsliced":
+        # plane patterns group BITPLANE_GROUP codes per byte; activations
+        # stay unpacked int8 codes, so that is the only extra constraint
+        m = math.lcm(m, packing.BITPLANE_GROUP)
     return m * max(tp_shards, 1)
 
 
@@ -256,10 +285,15 @@ def _calibrate(wt: jax.Array, bits: int, signed: bool,
 
 def _act_tables(policy: QuantPolicy, w_levels: jax.Array):
     """Precompute the activation codebook + product LUT once, offline, for
-    plans that run the paper-faithful w{b}a{b} kernel."""
-    if policy.a_bits is None or policy.resolved_kernel() != "lut_gemm":
+    plans that run the paper-faithful w{b}a{b} kernel. The bit-sliced route
+    keeps the codebook (the dry-run's dequant formulation gathers it) but
+    has no product LUT — its LUT is built from the activations in-kernel."""
+    kern = policy.resolved_kernel()
+    if policy.a_bits is None or kern not in ("lut_gemm", "lut_gemm_bitsliced"):
         return None, None
     a_levels = quant.uniform_codebook(policy.a_bits, True).levels
+    if kern == "lut_gemm_bitsliced":
+        return a_levels, None
     plut = product_lut(w_levels, a_levels).table
     return a_levels, plut
 
@@ -303,12 +337,21 @@ def quantize_weight(w: jax.Array, policy: QuantPolicy, *,
     a_sc = None
     if a_static is not None and a_levels is not None:
         a_sc = jnp.asarray(a_static, jnp.float32)
+    kern = policy.resolved_kernel() if policy.kernel else None
+    if kern == "lut_gemm_bitsliced":
+        # the plane decomposition IS the codebook: code value = idx - 2^(b-1)
+        assert policy.signed and not policy.nonuniform \
+            and policy.a_bits is not None, \
+            "bit-sliced route needs signed uniform w{b}a{b} quantization"
+        packed, scheme = packing.pack_bitplanes_signed(idx, bits), "bs"
+    else:
+        packed, scheme = _pack_for_scheme(idx, bits, policy.scheme), policy.scheme
     return QuantizedWeight(
-        packed=_pack_for_scheme(idx, bits, policy.scheme), codebook=levels,
+        packed=packed, codebook=levels,
         scales=scales, bits=bits,
         in_features=w.shape[0], out_features=w.shape[1],
-        group_size=G, a_bits=policy.a_bits, scheme=policy.scheme,
-        kernel=policy.resolved_kernel() if policy.kernel else None,
+        group_size=G, a_bits=policy.a_bits, scheme=scheme,
+        kernel=kern,
         a_levels=a_levels, plut=plut, a_sc=a_sc, tp=tp_role)
 
 
@@ -345,8 +388,9 @@ def dequant_weight(qw: QuantizedWeight) -> jax.Array:
     returned in (in, out) / (E, in, out) orientation for einsum use. This is
     the GSPMD-shardable formulation the dry-run lowers; the Pallas kernels
     fuse the same steps tile-wise in VMEM. (Valid for every packing scheme:
-    'c'/'d' store the same bytes as 'a'.)"""
-    idx = packing.unpack(qw.packed, qw.bits).astype(jnp.int32)   # (..., out, in_pad)
+    'c'/'d' store the same bytes as 'a'; 'bs' reassembles codes from the
+    two's-complement bit planes.)"""
+    idx = qw.unpacked_idx().astype(jnp.int32)                    # (..., out, in_pad)
     w = jnp.take(qw.codebook, idx)
     if qw.group_size is not None:
         w = w * quant.expand_group_scales(qw.scales, qw.group_size)
@@ -394,6 +438,22 @@ def dense_apply(params: dict, x: jax.Array, *, policy: QuantPolicy = BF16_POLICY
     return y
 
 
+def tile_for(qw: QuantizedWeight, m: int) -> tuple[int, int, int] | None:
+    """Look up an autotuned Pallas block for a token-row count ``m``.
+
+    Static trace-time Python over the leaf's aux ``tiles`` tuple: exact
+    bucket first, else the smallest tuned bucket >= m, else the largest.
+    A miss (no tiles stamped) returns None -> kernel default blocks. No
+    tuning ever happens here — tiles are stamped offline by quantize_tree.
+    """
+    if not qw.tiles:
+        return None
+    above = [t for t in qw.tiles if t[0] >= m]
+    best = min(above, key=lambda t: t[0]) if above \
+        else max(qw.tiles, key=lambda t: t[0])
+    return tuple(best[1:4])
+
+
 def dense_serve(
     qw: QuantizedWeight,
     x: jax.Array,
@@ -407,19 +467,22 @@ def dense_serve(
     """Serving forward with packed weights. x: (..., in) -> (..., out).
 
     a_bits None  -> w{b}a16 path (codebook dequant + MXU matmul), unless the
-                    leaf's plan kernel is 'lut_gemm' (then qw.a_bits is used).
+                    leaf's plan kernel is an a-quantizing route ('lut_gemm' /
+                    'lut_gemm_bitsliced' — then qw.a_bits is used).
     a_bits set   -> paper-faithful w{b}a{b}: dynamic activation quant, LUT GEMM.
 
     The activation codebook and product LUT come from the leaf when they
     were precomputed at quantize time (planned trees); only legacy ad-hoc
-    calls construct them here.
+    calls construct them here. All kernel calls go through the KernelOp
+    registry; ``block`` None falls back to the leaf's autotuned tile for
+    this M bucket (tile_for), then to kernel defaults.
     """
-    if a_bits is None and qw.kernel == "lut_gemm":
+    if a_bits is None and qw.kernel in ("lut_gemm", "lut_gemm_bitsliced"):
         a_bits = qw.a_bits
     lead = x.shape[:-1]
     xm = x.reshape(-1, qw.in_features)
     # weights are K-padded to a pack-factor multiple; mirror it on activations
-    k_pad = qw.packed.shape[-1] * packing.PACK_FACTOR[qw.bits]
+    k_pad = qw.k_padded
     if k_pad != qw.in_features:
         xm = jnp.pad(xm, ((0, 0), (0, k_pad - qw.in_features)))
     # pad LARGE awkward token counts to a multiple of 8: the kernels pick
@@ -430,11 +493,14 @@ def dense_serve(
     n_rows = xm.shape[0]
     if n_rows > 8 and n_rows % 8:
         xm = jnp.pad(xm, ((0, (-n_rows) % 8), (0, 0)))
+    if block is None:
+        block = tile_for(qw, xm.shape[0])
     G = qw.group_size
     if a_bits is None:
-        y = kops.dequant_matmul(
-            xm, qw.packed, qw.codebook, qw.scales, bits=qw.bits,
-            group_size=G, backend=backend, block=block, tp=qw.tp)
+        y = kreg.dispatch(
+            "dequant_matmul", xm, qw.packed, qw.codebook, qw.scales,
+            bits=qw.bits, group_size=G, backend=backend, block=block,
+            tp=qw.tp)
     else:
         # Activation quantization scale. Static (calibrated offline,
         # QuantPolicy.a_scale='static'): one per-tensor scale from the
@@ -454,15 +520,28 @@ def dense_serve(
             a_levels = qw.a_levels
         else:
             a_levels = quant.uniform_codebook(a_bits, True).levels
-        if kops._resolve(backend) == "ref":
-            # Shardable dequant formulation — exactly equal to the LUT GEMM.
+        if kreg.resolve_backend(backend) == "ref":
+            # Shardable dequant formulation — exactly equal to the LUT GEMM
+            # (and to the bit-sliced integer path: both sum the same exact
+            # integer products, merely scaled differently in the epilogue).
             a_deq = jnp.take(a_levels, a_idx.astype(jnp.int32))
             w_deq = jnp.take(qw.codebook,
-                             packing.unpack(qw.packed, qw.bits).astype(jnp.int32))
+                             qw.unpacked_idx().astype(jnp.int32))
             if G is not None:
                 w_deq = w_deq * quant.expand_group_scales(qw.scales, G)
             y = jax.lax.dot_general(a_deq, w_deq, (((1,), (1,)), ((), ())),
                                     preferred_element_type=jnp.float32)
+            y = y * a_scale if G is not None \
+                else y * qw.scales[None, :] * a_scale
+        elif qw.kernel == "lut_gemm_bitsliced":
+            # T-MAC route: the LUT is built from the activation CODES inside
+            # the kernel; weights are two's-complement bit planes. aq holds
+            # the signed code values directly (int8 carrier).
+            y = kreg.dispatch(
+                "lut_gemm_bitsliced", aq.astype(jnp.int8), qw.packed,
+                qw.scales if G is not None else None,
+                w_bits=qw.bits, a_bits=a_bits, group_size=G,
+                backend=backend, block=block, tp=qw.tp)
             y = y * a_scale if G is not None \
                 else y * qw.scales[None, :] * a_scale
         else:
@@ -471,11 +550,11 @@ def dense_serve(
                 table = qw.plut
             else:
                 table = product_lut(qw.codebook, a_levels).table
-            plut = ProductLUT(table, qw.bits, a_bits)
-            y = kops.lut_gemm(ap, qw.packed, plut, scheme=qw.scheme,
-                              w_scales=qw.scales if G is not None else None,
-                              group_size=G, backend=backend, block=block,
-                              tp=qw.tp)
+            y = kreg.dispatch(
+                "lut_gemm", ap, qw.packed, table,
+                qw.scales if G is not None else None,
+                w_bits=qw.bits, a_bits=a_bits, scheme=qw.scheme,
+                group_size=G, backend=backend, block=block, tp=qw.tp)
             y = y * a_scale if G is not None \
                 else y * qw.scales[None, :] * a_scale
     y = y[:n_rows]

@@ -47,9 +47,14 @@ class QuantPlan:
     A ``None`` policy pins the matched layer class to bf16 (the mixed-
     precision skip). ``backend`` is the kernel backend every planned layer
     dispatches with ('auto' | 'ref' | 'pallas_interpret' | 'pallas').
+    ``tune`` lists token-row counts (M buckets) to autotune Pallas tile
+    sizes for at quantize_tree time (kernels/autotune); the winning blocks
+    are stamped on each packed leaf's ``tiles`` aux. Empty -> no tuning,
+    kernel default blocks.
     """
     rules: tuple = ()
     backend: str = "auto"
+    tune: tuple = ()
 
     def policy_for(self, tag: str) -> Optional[QuantPolicy]:
         for pattern, pol in self.rules:
@@ -92,19 +97,23 @@ def make_plan(
     nonuniform: bool = False,
     signed: bool = True,
     a_scale: str = "dynamic",
+    kernel: str = "auto",
     keep: tuple = KEEP_BF16,
     rules: tuple = (),
+    tune: tuple = (),
 ) -> QuantPlan:
     """Single-policy plan: keep-list rules first (bf16), then extra ``rules``
     (ordered, highest priority after the keeps), then a catch-all policy.
     ``a_scale='static'`` opts w{b}a{b} layers into calibrated static
-    activation scales (see core/calibrate.py)."""
+    activation scales (see core/calibrate.py). ``kernel`` picks the route
+    ('auto' | any kernels/registry op name, e.g. 'lut_gemm_bitsliced');
+    ``tune`` lists M buckets to autotune tiles for (see QuantPlan)."""
     default = QuantPolicy(
         w_bits=w_bits, a_bits=a_bits, group_size=group_size, signed=signed,
-        scheme=scheme, nonuniform=nonuniform, kernel="auto", a_scale=a_scale)
+        scheme=scheme, nonuniform=nonuniform, kernel=kernel, a_scale=a_scale)
     keep_rules = tuple((pattern, None) for pattern in keep)
     return QuantPlan(rules=keep_rules + tuple(rules) + (("*", default),),
-                     backend=backend)
+                     backend=backend, tune=tuple(tune))
 
 
 def _mixed_plan() -> QuantPlan:
@@ -125,6 +134,14 @@ PLANS = {
     "w4a16": make_plan(4),
     "w4a8": make_plan(4, 8),
     "mixed_attn4_mlp2": _mixed_plan(),
+    # T-MAC style bit-sliced routes: int8 activations, bit-plane packed
+    # weights, int16-accumulating lut_gemm_bitsliced kernel with a decode
+    # (M<=4) GEMV specialization. ``tune`` pre-tunes the decode and a
+    # prefill-ish M bucket at quantize time.
+    "w2a8_bs": make_plan(2, 8, kernel="lut_gemm_bitsliced", tune=(1, 4)),
+    "w2a8_bs_g64": make_plan(2, 8, group_size=64,
+                             kernel="lut_gemm_bitsliced", tune=(1, 4)),
+    "w4a8_bs": make_plan(4, 8, kernel="lut_gemm_bitsliced", tune=(1, 4)),
 }
 
 

@@ -329,7 +329,10 @@ def _qw_leaf_axes(name: str, nd_base: int, in_ax, out_ax, lead=()):
 
     packed is (out, K/f) — the transpose of the dense (in, out) weight — so
     column-parallel layers shard dim 0 and row-parallel layers shard dim 1
-    (the packed contraction axis). Group-wise scales (out, K/G) follow the
+    (the packed contraction axis). Bit-plane packed leaves (scheme 'bs':
+    (bits, out, K/g)) reuse the same trailing-two-axes rule — the caller's
+    generic left-padding replicates the extra leading plane axis, exactly
+    like a scan-stack dim. Group-wise scales (out, K/G) follow the
     same rule; per-channel scales (out,) only carry the output axis. The
     codebook / activation-codebook / product-LUT / static-activation-scale
     tables are O(2^bits) and replicate.

@@ -1,5 +1,10 @@
-"""Pallas TPU kernels for the DeepGEMM hot loops + pure-jnp oracles."""
-from . import ops, ref  # noqa: F401
+"""Pallas TPU kernels for the DeepGEMM hot loops + pure-jnp oracles.
+
+``registry`` is the dispatch surface (KernelOp declarations + ``dispatch``);
+``ops`` holds the deprecated PR 4/5 wrapper shims.
+"""
+from . import ops, ref, registry  # noqa: F401
 from .lut_gemm import lut_gemm_pallas  # noqa: F401
+from .lut_gemm_bitsliced import lut_gemm_bitsliced_pallas  # noqa: F401
 from .lut_dequant_matmul import dequant_matmul_pallas  # noqa: F401
 from .paged_attention import paged_attention_pallas  # noqa: F401

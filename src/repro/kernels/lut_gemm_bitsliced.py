@@ -1,0 +1,219 @@
+"""Bit-sliced LUT GEMM as a Pallas TPU kernel (T-MAC decomposition).
+
+Where the paper's LUT-16 kernel (lut_gemm.py) precomputes a *product* LUT
+over (w_level, a_level) pairs offline, the bit-sliced variant builds a tiny
+LUT from the *activations themselves* at run time and slices the weights
+into one-bit planes:
+
+  VMEM:  one (bm x bk) int8 activation-code tile, the (bits x bn x bk/g)
+         weight plane-pattern tile, one (bm x bn) f32 accumulator
+  VPU:   LUT build — g doubling steps turn the activation tile into a
+         (bm, bk/g, 2^g) table of group subset sums (int16); one gather per
+         plane replaces g multiply-accumulates (pshufb in T-MAC's AVX2
+         kernels, a vector gather here); plane partials combine with the
+         two's-complement coefficients (1, ..., -2^(b-1)).
+
+Accumulation is int16 inside a tile wherever the worst-case magnitude
+bound (bk * 2^(a_bits-1), or group_size * 2^(a_bits-1) for the fused
+group-scale path) provably fits, and widens to f32 only in the epilogue —
+the T-MAC trick that keeps the inner loop in 16-bit lanes.
+
+Decode shapes get their own tiling: for M <= 4 (the serving hot loop is
+batched decode, not M=64 GEMM) the kernel drops the M grid axis entirely,
+holds all M rows in one block, and walks a 2D (N, K) grid with wider N
+tiles — the GEMV specialization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import packing
+
+GEMV_ROWS = 4  # M <= GEMV_ROWS routes to the decode (GEMV) tiling
+
+
+def _group_lut(a_tile: jax.Array, group: int) -> jax.Array:
+    """(bm, bk) int8 codes -> (bm, bk/g, 2^g) int16 subset-sum LUT.
+
+    Iterative doubling: after step j the last axis holds all subset sums of
+    the first j+1 codes in each group, so lut[..., p] = sum_j bit_j(p)*a_j.
+    g shift-adds total — cheaper than the 2^g naive fill.
+    """
+    bm, bk = a_tile.shape
+    g = a_tile.reshape(bm, bk // group, group).astype(jnp.int16)
+    lut = jnp.zeros((bm, bk // group, 1), jnp.int16)
+    for j in range(group):
+        lut = jnp.concatenate([lut, lut + g[..., j:j + 1]], axis=-1)
+    return lut
+
+
+def _plane_lookup(lut: jax.Array, pat: jax.Array, lookup_impl: str) -> jax.Array:
+    """Gather each weight pattern's subset sum: (bm, bk/g, 2^g) LUT x
+    (bn, bk/g) patterns -> (bm, bn, bk/g). 'take' is the vector-gather port
+    of pshufb; 'onehot' routes the lookup through the MXU (f32)."""
+    bm, bkg, entries = lut.shape
+    if lookup_impl == "onehot":
+        oh = jax.nn.one_hot(pat.astype(jnp.int32), entries, dtype=jnp.float32)
+        return jnp.einsum("ngp,mgp->mng", oh, lut.astype(jnp.float32))
+    lutf = lut.reshape(bm, bkg * entries)
+    offs = jax.lax.broadcasted_iota(jnp.int32, pat.shape, 1) * entries
+    return jnp.take(lutf, pat.astype(jnp.int32) + offs, axis=1)
+
+
+def _plane_partials(a, planes, *, bits, group, a_bits, lookup_impl,
+                    part_len):
+    """Shared tile body: build the LUT, look up every plane, reduce each
+    ``part_len``-pattern run, and combine planes with the two's-complement
+    coefficients. Returns (bm, bn, bk/g/part_len) — f32-exact integers
+    ('take') or f32 ('onehot')."""
+    bm, bk = a.shape
+    _, bn, bkg = planes.shape
+    lut = _group_lut(a, group)
+    # int16 stays safe while the largest partial |sum| fits 15 bits.
+    amax = 1 << max(a_bits - 1, 0)
+    acc_dtype = (jnp.int16 if part_len * group * amax < 2 ** 15
+                 else jnp.int32)
+    acc = None
+    for b, coef in enumerate(packing.bitplane_coeffs(bits)):
+        s = _plane_lookup(lut, planes[b], lookup_impl)   # (bm, bn, bkg)
+        if s.dtype == jnp.float32:                        # onehot path
+            part = s.reshape(bm, bn, bkg // part_len, part_len).sum(-1)
+            acc = part * coef if acc is None else acc + part * coef
+        else:
+            part = s.reshape(bm, bn, bkg // part_len, part_len) \
+                    .sum(-1, dtype=acc_dtype).astype(jnp.int32)
+            acc = part * coef if acc is None else acc + part * coef
+    return acc
+
+
+def _bs_kernel(a_ref, w_ref, o_ref, *, bits, group, a_bits, lookup_impl,
+               k_axis):
+    k = pl.program_id(k_axis)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bkg = w_ref.shape[-1]
+    acc = _plane_partials(a_ref[...], w_ref[...], bits=bits, group=group,
+                          a_bits=a_bits, lookup_impl=lookup_impl,
+                          part_len=bkg)                   # (bm, bn, 1)
+    o_ref[...] += acc[..., 0].astype(jnp.float32)
+
+
+def _bs_grouped_kernel(a_ref, w_ref, sc_ref, o_ref, *, bits, group, a_bits,
+                       lookup_impl, group_size, k_axis):
+    """Fused group-scale epilogue: each scale group's int16 partial is
+    widened and scaled before accumulation (the weight planes carry no
+    scale — this is the only float multiply in the loop)."""
+    k = pl.program_id(k_axis)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    gg = group_size // group                              # patterns / group
+    acc = _plane_partials(a_ref[...], w_ref[...], bits=bits, group=group,
+                          a_bits=a_bits, lookup_impl=lookup_impl,
+                          part_len=gg)                    # (bm, bn, ng)
+    sc = sc_ref[...]                                      # (bn, ng)
+    o_ref[...] += (acc.astype(jnp.float32) * sc[None, :, :]).sum(-1)
+
+
+def _fit(target: int, n: int) -> int:
+    b = max(1, min(target, n))
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "a_bits", "group", "group_size", "lookup_impl",
+                     "bm", "bn", "bk", "interpret"),
+)
+def lut_gemm_bitsliced_pallas(
+    a_codes: jax.Array,      # (M, K) int8 signed activation codes
+    w_planes: jax.Array,     # (bits, N, K/g) uint8 plane patterns
+    w_scales: jax.Array | None = None,   # (N, K/G) group-wise weight scales
+    *,
+    bits: int = 2,
+    a_bits: int = 8,
+    group: int = packing.BITPLANE_GROUP,
+    group_size: int | None = None,
+    lookup_impl: str = "take",
+    bm: int = 8,
+    bn: int = 256,
+    bk: int = 512,           # in CODES; K-step per grid slot
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked bit-sliced LUT GEMM. out[m,n] = sum_k w[n,k] * a_codes[m,k]
+    with w the SIGNED weight code (plane-decomposed), f32-exact integers;
+    group-wise ``w_scales`` fuse into the K loop when given. M <= GEMV_ROWS
+    takes the GEMV tiling (full-M block, 2D grid)."""
+    assert bits in (1, 2, 3, 4), bits
+    M, K = a_codes.shape
+    nplanes, N, Kg = w_planes.shape
+    assert nplanes == bits and Kg * group == K, (a_codes.shape, w_planes.shape)
+    grouped = w_scales is not None
+    if grouped:
+        assert group_size is not None and group_size % group == 0 \
+            and K % group_size == 0, (K, group_size, group)
+
+    gemv = M <= GEMV_ROWS
+    bm = M if gemv else _fit(bm, M)
+    bn = _fit(bn, N)
+    unit = group_size if grouped else group
+    u = _fit(max(bk // unit, 1), K // unit)
+    cap = 8 * 1024 * 1024
+    # VMEM working set ~ the (bm, bn, bk/g) int32 gather tile + the LUT.
+    tile_bytes = lambda uu: bm * bn * (uu * unit // group) * 8  # noqa: E731
+    while tile_bytes(u) > cap and u > 1:
+        u = _fit(max(u // 2, 1), K // unit)
+    while tile_bytes(u) > cap and bn > 8:
+        bn = _fit(max(bn // 2, 1), N)
+    bk = u * unit
+    bkg = bk // group
+
+    if gemv:
+        grid = (N // bn, K // bk)
+        k_axis = 1
+        a_spec = pl.BlockSpec((bm, bk), lambda j, k: (0, k))
+        w_spec = pl.BlockSpec((bits, bn, bkg), lambda j, k: (0, j, k))
+        sc_spec = pl.BlockSpec((bn, bk // (group_size or 1)),
+                               lambda j, k: (j, k))
+        o_spec = pl.BlockSpec((bm, bn), lambda j, k: (0, j))
+    else:
+        grid = (M // bm, N // bn, K // bk)
+        k_axis = 2
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+        w_spec = pl.BlockSpec((bits, bn, bkg), lambda i, j, k: (0, j, k))
+        sc_spec = pl.BlockSpec((bn, bk // (group_size or 1)),
+                               lambda i, j, k: (j, k))
+        o_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+
+    if grouped:
+        kernel = functools.partial(
+            _bs_grouped_kernel, bits=bits, group=group, a_bits=a_bits,
+            lookup_impl=lookup_impl, group_size=group_size, k_axis=k_axis)
+        in_specs = [a_spec, w_spec, sc_spec]
+        args = [a_codes, w_planes, w_scales.astype(jnp.float32)]
+    else:
+        kernel = functools.partial(
+            _bs_kernel, bits=bits, group=group, a_bits=a_bits,
+            lookup_impl=lookup_impl, k_axis=k_axis)
+        in_specs = [a_spec, w_spec]
+        args = [a_codes, w_planes]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(*args)

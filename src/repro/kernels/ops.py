@@ -1,373 +1,112 @@
-"""Public jit'd wrappers for the DeepGEMM kernels with backend dispatch.
+"""DEPRECATED wrapper module — superseded by ``repro.kernels.registry``.
 
-Backends:
-  'ref'               pure-jnp oracle (XLA-optimized; used inside the 512-way
-                      SPMD dry-run so GSPMD sees plain HLO it can shard)
-  'pallas_interpret'  Pallas kernel executed by the interpreter on CPU —
-                      correctness path for this container
-  'pallas'            real Pallas lowering (TPU target)
-  'auto'              pallas on TPU, pallas_interpret on CPU
+PR 6 replaced the five hand-written wrappers that lived here (each
+re-implementing backend resolve, TP shard-map wrapping, and dispatch
+counting) with the declarative ``KernelOp`` registry. Every function below
+is a thin shim that emits ``DeprecationWarning`` and forwards to
+``registry.dispatch`` with its old signature intact; the dispatch-count API
+re-exports point at the registry's single counter.
 
-Dispatch counters: every wrapper bumps ``DISPATCH_COUNTS`` at trace time
-(wrappers run Python once per jit trace), so a test — or the CI serving
-gate — can assert that a planned model actually reached ``lut_gemm`` /
-``dequant_matmul`` instead of silently falling back to full dequantization.
+New call sites should use::
 
-Tensor parallelism: a Pallas kernel is an opaque call to GSPMD, so the
-matmul-shaped ops (``lut_gemm`` / ``dequant_matmul`` / the expert variants)
-accept a ``tp`` role and, when a ``dist.sharding.use_tp`` context is active,
-run the kernel under ``jax.shard_map`` over the context's mesh axis:
-
-  'col'  weight sharded along the output (N) dimension, activations
-         replicated — each device computes its own output columns, no
-         collective (the Megatron column-parallel half).
-  'row'  BOTH operands sharded along the contraction (K) dimension — each
-         device accumulates a partial output over its K slice and ONE psum
-         combines them (the row-parallel half). Per-channel / per-token
-         scale epilogues commute with the psum; group-wise scales are
-         shard-local because quantize_tree aligns group boundaries to the
-         shard split.
-
-Shapes that do not divide the mesh axis fall back to the unsharded call
-(the same replicate-never-error policy as dist.sharding.spec_for).
+    from repro.kernels import registry as kr
+    kr.dispatch("lut_gemm", a_packed, w_packed, lut.table, w_scales,
+                w_bits=..., a_bits=..., backend=..., tp=...)
 """
 
 from __future__ import annotations
 
-from collections import Counter
+import warnings
 
 import jax
-from jax.sharding import PartitionSpec as P
 
 from repro.core.lut import ProductLUT
-from repro.dist import sharding as dsh
-from . import ref as _ref
-from .lut_gemm import lut_gemm_pallas
-from .lut_dequant_matmul import dequant_matmul_pallas
-from .expert_dequant_matmul import (expert_dequant_matmul_pallas,
-                                    expert_lut_gemm_pallas)
-from .kv_cache_attention import kv_cache_attention_pallas
-from .paged_attention import paged_attention_pallas
+from . import registry as _reg
+from .registry import (DISPATCH_COUNTS, dispatch_counts,   # noqa: F401
+                       reset_dispatch_counts)
 
-DISPATCH_COUNTS: Counter = Counter()
+__all__ = [
+    "DISPATCH_COUNTS", "dispatch_counts", "reset_dispatch_counts",
+    "lut_gemm", "dequant_matmul", "lut65k_gemm", "expert_dequant_matmul",
+    "expert_lut_gemm", "kv_cache_attention", "paged_attention",
+]
 
-
-def reset_dispatch_counts() -> None:
-    DISPATCH_COUNTS.clear()
-
-
-def dispatch_counts() -> dict:
-    """Snapshot of per-op (and per-op:backend) trace-time dispatch counts."""
-    return dict(DISPATCH_COUNTS)
+# legacy private helpers some call sites imported
+_resolve = _reg.resolve_backend
+_tp_active = _reg._tp_active
+_count = _reg._count
 
 
-def _count(op: str, backend: str) -> None:
-    DISPATCH_COUNTS[op] += 1
-    DISPATCH_COUNTS[f"{op}:{backend}"] += 1
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"repro.kernels.ops.{name} is deprecated; use "
+        f"repro.kernels.registry.dispatch({name!r}, ...) instead",
+        DeprecationWarning, stacklevel=3)
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def lut_gemm(a_packed, w_packed, lut: ProductLUT, *, scheme="d",
+             lookup_impl="take", w_scales=None, group_size=None,
+             backend="auto", block=None, tp=None) -> jax.Array:
+    """Deprecated shim for ``registry.dispatch('lut_gemm', ...)``."""
+    _warn("lut_gemm")
+    return _reg.dispatch(
+        "lut_gemm", a_packed, w_packed, lut.table, w_scales,
+        w_bits=lut.w_bits, a_bits=lut.a_bits, scheme=scheme,
+        lookup_impl=lookup_impl, group_size=group_size,
+        backend=backend, block=block, tp=tp)
 
 
-def _resolve(backend: str) -> str:
-    if backend != "auto":
-        return backend
-    return "pallas" if _on_tpu() else "pallas_interpret"
+def dequant_matmul(a, w_packed, codebook, scales, *, bits, group_size=None,
+                   backend="auto", block=None, tp=None) -> jax.Array:
+    """Deprecated shim for ``registry.dispatch('dequant_matmul', ...)``."""
+    _warn("dequant_matmul")
+    return _reg.dispatch(
+        "dequant_matmul", a, w_packed, codebook, scales, bits=bits,
+        group_size=group_size, backend=backend, block=block, tp=tp)
 
 
-def _tp_active(tp: str | None):
-    """(mesh, axis, n_shards) when a TP role should be honoured, else None."""
-    if tp not in ("col", "row"):
-        return None
-    ctx = dsh.active_tp()
-    if ctx is None:
-        return None
-    mesh, ax = ctx
-    if ax not in mesh.shape or mesh.shape[ax] <= 1:
-        return None
-    return mesh, ax, mesh.shape[ax]
+def lut65k_gemm(a_packed, w_packed, table) -> jax.Array:
+    """Deprecated shim for ``registry.dispatch('lut65k_gemm', ...)``."""
+    _warn("lut65k_gemm")
+    return _reg.dispatch("lut65k_gemm", a_packed, w_packed, table,
+                         backend="ref")
 
 
-def _tp_shard_map(fn, mesh, in_specs, out_specs):
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_rep=False)
+def expert_dequant_matmul(x, w_packed, codebook, scales, *, bits,
+                          group_size=None, backend="auto", block=None,
+                          tp=None) -> jax.Array:
+    """Deprecated shim for ``registry.dispatch('expert_dequant_matmul', ...)``."""
+    _warn("expert_dequant_matmul")
+    return _reg.dispatch(
+        "expert_dequant_matmul", x, w_packed, codebook, scales, bits=bits,
+        group_size=group_size, backend=backend, block=block, tp=tp)
 
 
-def lut_gemm(
-    a_packed: jax.Array,
-    w_packed: jax.Array,
-    lut: ProductLUT,
-    *,
-    scheme: str = "d",
-    lookup_impl: str = "take",
-    w_scales: jax.Array | None = None,
-    group_size: int | None = None,
-    backend: str = "auto",
-    block: tuple[int, int, int] | None = None,
-    tp: str | None = None,
-) -> jax.Array:
-    """Paper-faithful LUT GEMM: out[m,n] = sum_k LUT[(w[n,k]<<b)|a[m,k]].
-    ``w_scales`` (N, K/G) + ``group_size`` enable the fused group-scale
-    epilogue (per-K-group partial sums scaled before accumulation).
-    ``tp`` ('col' | 'row') runs the kernel under shard_map when a
-    dist.sharding.use_tp context is active (see module docstring)."""
-    b = _resolve(backend)
-    _count("lut_gemm", b)
-    kw = {}
-    if block is not None:
-        kw = dict(bm=block[0], bn=block[1], bk=block[2])
-
-    def compute(ap, wp, table, sc):
-        if b == "ref":
-            return _ref.ref_lut_gemm(
-                ap, wp, ProductLUT(table, lut.w_bits, lut.a_bits),
-                w_scales=sc, group_size=group_size)
-        return lut_gemm_pallas(
-            ap, wp, table, sc,
-            bits=lut.w_bits, scheme=scheme, lookup_impl=lookup_impl,
-            group_size=group_size,
-            interpret=(b == "pallas_interpret"), **kw)
-
-    ctx = _tp_active(tp)
-    if ctx is not None:
-        mesh, ax, n = ctx
-        N, Kp = w_packed.shape
-        ok = (N % n == 0 if tp == "col"
-              else Kp % n == 0 and a_packed.shape[-1] % n == 0)
-        if group_size is not None and w_scales is not None:
-            ok = ok and (w_scales.shape[-1] % n == 0 or tp == "col")
-        if ok:
-            if w_scales is None:
-                fn = lambda ap, wp, t: compute(ap, wp, t, None)  # noqa: E731
-                args = (a_packed, w_packed, lut.table)
-                col_in = (P(), P(ax), P())
-                row_in = (P(None, ax), P(None, ax), P())
-            else:
-                fn = compute
-                args = (a_packed, w_packed, lut.table, w_scales)
-                col_in = (P(), P(ax), P(), P(ax))
-                row_in = (P(None, ax), P(None, ax), P(), P(None, ax))
-            if tp == "col":
-                return _tp_shard_map(fn, mesh, col_in, P(None, ax))(*args)
-            psum = lambda *a: jax.lax.psum(fn(*a), ax)           # noqa: E731
-            return _tp_shard_map(psum, mesh, row_in, P())(*args)
-    return compute(a_packed, w_packed, lut.table, w_scales)
+def expert_lut_gemm(a_packed, w_packed, lut: ProductLUT, *, scheme="d",
+                    lookup_impl="take", w_scales=None, group_size=None,
+                    backend="auto", block=None, tp=None) -> jax.Array:
+    """Deprecated shim for ``registry.dispatch('expert_lut_gemm', ...)``."""
+    _warn("expert_lut_gemm")
+    return _reg.dispatch(
+        "expert_lut_gemm", a_packed, w_packed, lut.table, w_scales,
+        w_bits=lut.w_bits, a_bits=lut.a_bits, scheme=scheme,
+        lookup_impl=lookup_impl, group_size=group_size,
+        backend=backend, block=block, tp=tp)
 
 
-def dequant_matmul(
-    a: jax.Array,
-    w_packed: jax.Array,
-    codebook: jax.Array,
-    scales: jax.Array,
-    *,
-    bits: int,
-    group_size: int | None = None,
-    backend: str = "auto",
-    block: tuple[int, int, int] | None = None,
-    tp: str | None = None,
-) -> jax.Array:
-    """TPU-native packed-weight matmul: (a @ dequant(w).T) * scales.
-    ``group_size`` selects the group-wise scale formulation (scales (N, K/G)).
-    ``tp`` ('col' | 'row') runs the kernel under shard_map when a
-    dist.sharding.use_tp context is active (see module docstring)."""
-    b = _resolve(backend)
-    _count("dequant_matmul", b)
-    kw = {}
-    if block is not None:
-        kw = dict(bm=block[0], bn=block[1], bk=block[2])
-
-    def compute(am, wp, cb, sc):
-        if b == "ref":
-            return _ref.ref_dequant_matmul(am, wp, cb, sc, bits,
-                                           group_size=group_size)
-        return dequant_matmul_pallas(
-            am, wp, cb, sc, bits=bits, group_size=group_size,
-            interpret=(b == "pallas_interpret"), **kw)
-
-    ctx = _tp_active(tp)
-    if ctx is not None:
-        mesh, ax, n = ctx
-        N, Kp = w_packed.shape
-        grouped = group_size is not None
-        if tp == "col":
-            ok = N % n == 0
-            in_specs = (P(), P(ax), P(),
-                        P(ax, None) if grouped else P(ax))
-            if ok:
-                return _tp_shard_map(compute, mesh, in_specs,
-                                     P(None, ax))(a, w_packed, codebook, scales)
-        else:
-            ok = Kp % n == 0 and a.shape[-1] % n == 0 \
-                and (not grouped or scales.shape[-1] % n == 0)
-            if ok:
-                # per-channel scales are applied per output column inside the
-                # kernel epilogue — that commutes with the psum over partials
-                in_specs = (P(None, ax), P(None, ax), P(),
-                            P(None, ax) if grouped else P())
-                psum = lambda *x: jax.lax.psum(compute(*x), ax)  # noqa: E731
-                return _tp_shard_map(psum, mesh, in_specs,
-                                     P())(a, w_packed, codebook, scales)
-    return compute(a, w_packed, codebook, scales)
+def kv_cache_attention(q, k_packed, k_sc, v_packed, v_sc, lengths, *,
+                       bits=4, backend="auto", bs=512) -> jax.Array:
+    """Deprecated shim for ``registry.dispatch('kv_cache_attention', ...)``."""
+    _warn("kv_cache_attention")
+    return _reg.dispatch(
+        "kv_cache_attention", q, k_packed, k_sc, v_packed, v_sc, lengths,
+        bits=bits, bs=bs, backend=backend)
 
 
-def lut65k_gemm(a_packed: jax.Array, w_packed: jax.Array, table: jax.Array) -> jax.Array:
-    """LUT-65k — reference path only (no TPU lowering by design, DESIGN.md §7)."""
-    return _ref.ref_lut65k_gemm(a_packed, w_packed, table)
-
-
-def expert_dequant_matmul(
-    x: jax.Array,
-    w_packed: jax.Array,
-    codebook: jax.Array,
-    scales: jax.Array,
-    *,
-    bits: int,
-    group_size: int | None = None,
-    backend: str = "auto",
-    block: tuple[int, int, int] | None = None,
-    tp: str | None = None,
-) -> jax.Array:
-    """Grouped per-expert packed matmul (MoE serving hot-spot). ``tp``
-    shards every expert's projection Megatron-style (the expert axis stays
-    whole on each device; 'col' splits N, 'row' splits K + one psum)."""
-    b = _resolve(backend)
-    _count("expert_dequant_matmul", b)
-    kw = {}
-    if block is not None:
-        kw = dict(bm=block[0], bn=block[1], bk=block[2])
-
-    def compute(xe, wp, cb, sc):
-        if b == "ref":
-            return _ref.ref_expert_dequant_matmul(xe, wp, cb, sc, bits,
-                                                  group_size=group_size)
-        return expert_dequant_matmul_pallas(
-            xe, wp, cb, sc, bits=bits, group_size=group_size,
-            interpret=(b == "pallas_interpret"), **kw)
-
-    ctx = _tp_active(tp)
-    if ctx is not None:
-        mesh, ax, n = ctx
-        _, N, Kp = w_packed.shape
-        grouped = group_size is not None
-        if tp == "col" and N % n == 0:
-            in_specs = (P(), P(None, ax), P(),
-                        P(None, ax, None) if grouped else P(None, ax))
-            return _tp_shard_map(compute, mesh, in_specs,
-                                 P(None, None, ax))(x, w_packed, codebook,
-                                                    scales)
-        if tp == "row" and Kp % n == 0 and x.shape[-1] % n == 0 \
-                and (not grouped or scales.shape[-1] % n == 0):
-            in_specs = (P(None, None, ax), P(None, None, ax), P(),
-                        P(None, None, ax) if grouped else P())
-            psum = lambda *a: jax.lax.psum(compute(*a), ax)      # noqa: E731
-            return _tp_shard_map(psum, mesh, in_specs,
-                                 P())(x, w_packed, codebook, scales)
-    return compute(x, w_packed, codebook, scales)
-
-
-def expert_lut_gemm(
-    a_packed: jax.Array,
-    w_packed: jax.Array,
-    lut: ProductLUT,
-    *,
-    scheme: str = "d",
-    lookup_impl: str = "take",
-    w_scales: jax.Array | None = None,
-    group_size: int | None = None,
-    backend: str = "auto",
-    block: tuple[int, int, int] | None = None,
-    tp: str | None = None,
-) -> jax.Array:
-    """Activation-quantized per-expert LUT GEMM (the paper-faithful w{b}a{b}
-    path for MoE): out[e,m,n] = sum_k LUT[(w[e,n,k]<<b) | a[e,m,k]].
-    Per-channel weight scales stay in the caller's epilogue (they commute
-    with the row-parallel psum); group-wise scales fuse into the K loop."""
-    b = _resolve(backend)
-    _count("expert_lut_gemm", b)
-    kw = {}
-    if block is not None:
-        kw = dict(bm=block[0], bn=block[1], bk=block[2])
-
-    def compute(ap, wp, table, sc):
-        if b == "ref":
-            return _ref.ref_expert_lut_gemm(
-                ap, wp, ProductLUT(table, lut.w_bits, lut.a_bits),
-                w_scales=sc, group_size=group_size)
-        return expert_lut_gemm_pallas(
-            ap, wp, table, sc,
-            bits=lut.w_bits, scheme=scheme, lookup_impl=lookup_impl,
-            group_size=group_size,
-            interpret=(b == "pallas_interpret"), **kw)
-
-    ctx = _tp_active(tp)
-    if ctx is not None:
-        mesh, ax, n = ctx
-        _, N, Kp = w_packed.shape
-        ok = (N % n == 0 if tp == "col"
-              else Kp % n == 0 and a_packed.shape[-1] % n == 0
-              and (w_scales is None or w_scales.shape[-1] % n == 0))
-        if ok:
-            if w_scales is None:
-                fn = lambda ap, wp, t: compute(ap, wp, t, None)  # noqa: E731
-                args = (a_packed, w_packed, lut.table)
-                col_in = (P(), P(None, ax), P())
-                row_in = (P(None, None, ax), P(None, None, ax), P())
-            else:
-                fn = compute
-                args = (a_packed, w_packed, lut.table, w_scales)
-                col_in = (P(), P(None, ax), P(), P(None, ax, None))
-                row_in = (P(None, None, ax), P(None, None, ax), P(),
-                          P(None, None, ax))
-            if tp == "col":
-                return _tp_shard_map(fn, mesh, col_in,
-                                     P(None, None, ax))(*args)
-            psum = lambda *a: jax.lax.psum(fn(*a), ax)           # noqa: E731
-            return _tp_shard_map(psum, mesh, row_in, P())(*args)
-    return compute(a_packed, w_packed, lut.table, w_scales)
-
-
-def kv_cache_attention(
-    q: jax.Array,
-    k_packed: jax.Array,
-    k_sc: jax.Array,
-    v_packed: jax.Array,
-    v_sc: jax.Array,
-    lengths: jax.Array,
-    *,
-    bits: int = 4,
-    backend: str = "auto",
-    bs: int = 512,
-) -> jax.Array:
-    """Decode attention over an int8/int4-packed KV cache (fused dequant)."""
-    b = _resolve(backend)
-    if b == "ref":
-        return _ref.ref_kv_cache_attention(q, k_packed, k_sc, v_packed, v_sc,
-                                           lengths, bits)
-    return kv_cache_attention_pallas(
-        q, k_packed, k_sc, v_packed, v_sc, lengths,
-        bits=bits, bs=bs, interpret=(b == "pallas_interpret"))
-
-
-def paged_attention(
-    q: jax.Array,
-    k_pool: jax.Array,
-    k_sc: jax.Array,
-    v_pool: jax.Array,
-    v_sc: jax.Array,
-    block_tables: jax.Array,
-    lengths: jax.Array,
-    *,
-    bits: int = 4,
-    backend: str = "auto",
-) -> jax.Array:
-    """Decode attention over a paged (block-pooled) packed KV cache: K/V
-    blocks are gathered through per-sequence block tables (serving engine
-    layout, serving/cache.py) with dequant fused in-kernel."""
-    b = _resolve(backend)
-    if b == "ref":
-        return _ref.ref_paged_attention(q, k_pool, k_sc, v_pool, v_sc,
-                                        block_tables, lengths, bits)
-    return paged_attention_pallas(
-        q, k_pool, k_sc, v_pool, v_sc, block_tables, lengths,
-        bits=bits, interpret=(b == "pallas_interpret"))
+def paged_attention(q, k_pool, k_sc, v_pool, v_sc, block_tables, lengths, *,
+                    bits=4, backend="auto") -> jax.Array:
+    """Deprecated shim for ``registry.dispatch('paged_attention', ...)``."""
+    _warn("paged_attention")
+    return _reg.dispatch(
+        "paged_attention", q, k_pool, k_sc, v_pool, v_sc, block_tables,
+        lengths, bits=bits, backend=backend)

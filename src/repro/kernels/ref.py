@@ -100,6 +100,63 @@ def ref_dequant_matmul(
     return out * scales[None, :]
 
 
+def _bitplane_pattern_matrix(group: int) -> jax.Array:
+    """(group, 2^group) int16 with P[j, p] = bit j of pattern p — the matrix
+    that turns a group of activation codes into its 2^g subset-sum LUT."""
+    p = jnp.arange(2 ** group)
+    return jnp.stack([(p >> j) & 1 for j in range(group)]).astype(jnp.int16)
+
+
+def ref_lut_gemm_bitsliced(
+    a_codes: jax.Array,      # (M, K) int8 SIGNED activation codes
+    w_planes: jax.Array,     # (bits, N, K/g) uint8 two's-complement planes
+    w_scales: jax.Array | None = None,   # (N, K/G) group-wise weight scales
+    *,
+    bits: int,
+    group: int = packing.BITPLANE_GROUP,
+    group_size: int | None = None,
+) -> jax.Array:
+    """Bit-sliced LUT GEMM oracle (T-MAC decomposition, PAPERS.md).
+
+    The per-token LUT holds subset sums of ``group`` consecutive activation
+    codes: lut[m, kg, p] = sum_j bit_j(p) * a[m, kg*g+j] (int16). Each weight
+    plane's byte pattern indexes it directly; plane partials combine with the
+    two's-complement coefficients (1, ..., -2^(b-1)), so
+
+        out[m, n] = sum_k (idx[n,k] - 2^(b-1)) * a_codes[m, k]
+
+    exactly, in integer arithmetic (exact in f32: |out| < 2^24 for the
+    supported widths). With ``w_scales``/``group_size`` each scale-group's
+    integer partial is scaled before accumulation, matching the fused
+    epilogue of the grouped Pallas kernels.
+    """
+    M, K = a_codes.shape
+    nplanes, N, G = w_planes.shape
+    assert nplanes == bits and G * group == K, (w_planes.shape, a_codes.shape)
+    pat = _bitplane_pattern_matrix(group)
+    lut = jnp.einsum("mgj,jp->mgp",
+                     a_codes.reshape(M, G, group).astype(jnp.int16), pat)
+    lutf = lut.reshape(M, G * (2 ** group))
+    offs = (jnp.arange(G) * (2 ** group))[None, :]
+    if group_size is not None:
+        assert group_size % group == 0 and K % group_size == 0, \
+            (K, group_size, group)
+        gg = group_size // group           # patterns per scale group
+    acc = None
+    for b, coef in enumerate(packing.bitplane_coeffs(bits)):
+        flat = w_planes[b].astype(jnp.int32) + offs            # (N, G)
+        s = jnp.take(lutf, flat, axis=1)                       # (M, N, G) int16
+        if group_size is None:
+            part = s.sum(-1, dtype=jnp.int32)                  # (M, N)
+        else:
+            part = s.reshape(M, N, G // gg, gg).sum(-1, dtype=jnp.int32)
+        acc = part * coef if acc is None else acc + part * coef
+    if group_size is None:
+        return acc.astype(jnp.float32)
+    return (acc.astype(jnp.float32)
+            * w_scales[None, :, :].astype(jnp.float32)).sum(-1)
+
+
 def ref_quantize_pack_act(
     x: jax.Array, scale: jax.Array, bits: int, signed: bool = True
 ) -> jax.Array:

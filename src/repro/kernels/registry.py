@@ -1,0 +1,436 @@
+"""KernelOp registry — the single dispatch surface for DeepGEMM kernels.
+
+PR 4/5 grew five hand-written wrappers in kernels/ops.py, each re-implementing
+the same three concerns: backend resolution, tensor-parallel shard_map
+wrapping, and trace-time dispatch counting. This module replaces them with a
+declarative registry: an op states ONCE
+
+  ref         the pure-jnp oracle (XLA-optimized; also what the 512-way SPMD
+              dry-run traces so GSPMD sees shardable HLO)
+  pallas      the Pallas lowering (kwargs: ``interpret`` plus optional
+              ``bm``/``bn``/``bk`` tile overrides)
+  tp_rule     how to shard it: (role, ax, n_shards, arrays, static) ->
+              (in_specs, out_spec, reduce) or None to fall back unsharded —
+              'col' shards the output dim with no collective, 'row' shards
+              the contraction dim with one psum (reduce=True)
+  tile_space  candidate (bm, bn, bk) blocks for the offline autotuner
+
+and every caller goes through ``dispatch(name, *arrays, ...)``. Optional
+operands (e.g. group-wise scales) are passed positionally as ``None``; the
+dispatcher filters them out of the shard_map arity and reinserts the slots
+before calling the impl.
+
+Backends (same contract as the old wrappers):
+  'ref' | 'pallas_interpret' | 'pallas' | 'auto' (pallas on TPU else
+  interpret). Every dispatch bumps ``DISPATCH_COUNTS`` at trace time with
+  ``name`` and ``name:backend`` keys, so tests and the CI serving gate can
+  assert a planned model actually reached its kernel route.
+
+QuantPlan's ``kernel`` route field resolves to a registry name — registering
+a new KernelOp is all it takes to give a plan a new route (the bit-sliced
+'lut_gemm_bitsliced' op enters exactly this way).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Any, Callable
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.lut import ProductLUT
+from repro.dist import sharding as dsh
+from . import ref as _ref
+from .lut_gemm import lut_gemm_pallas
+from .lut_gemm_bitsliced import lut_gemm_bitsliced_pallas
+from .lut_dequant_matmul import dequant_matmul_pallas
+from .expert_dequant_matmul import (expert_dequant_matmul_pallas,
+                                    expert_lut_gemm_pallas)
+from .kv_cache_attention import kv_cache_attention_pallas
+from .paged_attention import paged_attention_pallas
+
+DISPATCH_COUNTS: Counter = Counter()
+
+
+def reset_dispatch_counts() -> None:
+    DISPATCH_COUNTS.clear()
+
+
+def dispatch_counts() -> dict:
+    """Snapshot of per-op (and per-op:backend) trace-time dispatch counts."""
+    return dict(DISPATCH_COUNTS)
+
+
+def _count(op: str, backend: str) -> None:
+    DISPATCH_COUNTS[op] += 1
+    DISPATCH_COUNTS[f"{op}:{backend}"] += 1
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(backend: str) -> str:
+    if backend != "auto":
+        return backend
+    return "pallas" if _on_tpu() else "pallas_interpret"
+
+
+def _tp_active(tp: str | None):
+    """(mesh, axis, n_shards) when a TP role should be honoured, else None."""
+    if tp not in ("col", "row"):
+        return None
+    ctx = dsh.active_tp()
+    if ctx is None:
+        return None
+    mesh, ax = ctx
+    if ax not in mesh.shape or mesh.shape[ax] <= 1:
+        return None
+    return mesh, ax, mesh.shape[ax]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelOp:
+    """One kernel's complete dispatch contract (see module docstring)."""
+    name: str
+    ref: Callable[..., jax.Array]
+    pallas: Callable[..., jax.Array] | None = None
+    tp_rule: Callable[..., tuple | None] | None = None
+    tile_space: Callable[..., list[tuple[int, int, int]]] | None = None
+    doc: str = ""
+
+
+_REGISTRY: dict[str, KernelOp] = {}
+
+
+def register(op: KernelOp) -> KernelOp:
+    assert op.name not in _REGISTRY, f"duplicate kernel op {op.name!r}"
+    _REGISTRY[op.name] = op
+    return op
+
+
+def get(name: str) -> KernelOp:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel op {name!r}; registered: {op_names()}") from None
+
+
+def op_names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def dispatch(
+    name: str,
+    *arrays: jax.Array | None,
+    backend: str = "auto",
+    block: tuple[int, int, int] | None = None,
+    tp: str | None = None,
+    **static: Any,
+) -> jax.Array:
+    """Run a registered kernel op: resolve the backend, count the dispatch,
+    and honour the op's TP rule when a dist.sharding.use_tp context is
+    active. ``None`` operands mark optional slots (filtered from shard_map).
+    ``block`` overrides the Pallas (bm, bn, bk) tile — ignored by 'ref'."""
+    op = get(name)
+    b = resolve_backend(backend)
+    _count(op.name, b)
+    blk = {}
+    if block is not None and b != "ref" and op.pallas is not None:
+        blk = dict(bm=block[0], bn=block[1], bk=block[2])
+    none_mask = tuple(x is None for x in arrays)
+    present = tuple(x for x in arrays if x is not None)
+
+    def compute(*xs):
+        it = iter(xs)
+        full = tuple(None if m else next(it) for m in none_mask)
+        if b == "ref" or op.pallas is None:
+            return op.ref(*full, **static)
+        return op.pallas(*full, interpret=(b == "pallas_interpret"),
+                         **blk, **static)
+
+    ctx = _tp_active(tp)
+    if ctx is not None and op.tp_rule is not None:
+        mesh, ax, n = ctx
+        rule = op.tp_rule(tp, ax, n, arrays, static)
+        if rule is not None:
+            in_specs, out_spec, reduce_out = rule
+            in_specs = tuple(s for s, m in zip(in_specs, none_mask) if not m)
+            fn = compute
+            if reduce_out:
+                fn = lambda *xs: jax.lax.psum(compute(*xs), ax)  # noqa: E731
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_spec,
+                                 check_rep=False)(*present)
+    return compute(*present)
+
+
+# --------------------------------------------------------------------------- #
+# TP rules (ported verbatim from the PR 4/5 wrappers; specs cover the FULL
+# positional arity — None-slot specs are dropped by the dispatcher)
+# --------------------------------------------------------------------------- #
+
+def _lut_gemm_tp(role, ax, n, arrays, static):
+    a_packed, w_packed, _table, sc = arrays
+    N, Kp = w_packed.shape
+    ok = (N % n == 0 if role == "col"
+          else Kp % n == 0 and a_packed.shape[-1] % n == 0)
+    if static.get("group_size") is not None and sc is not None:
+        ok = ok and (sc.shape[-1] % n == 0 or role == "col")
+    if not ok:
+        return None
+    if role == "col":
+        return (P(), P(ax), P(), P(ax)), P(None, ax), False
+    return (P(None, ax), P(None, ax), P(), P(None, ax)), P(), True
+
+
+def _dequant_matmul_tp(role, ax, n, arrays, static):
+    a, w_packed, _cb, scales = arrays
+    N, Kp = w_packed.shape
+    grouped = static.get("group_size") is not None
+    if role == "col":
+        if N % n != 0:
+            return None
+        return ((P(), P(ax), P(), P(ax, None) if grouped else P(ax)),
+                P(None, ax), False)
+    ok = Kp % n == 0 and a.shape[-1] % n == 0 \
+        and (not grouped or scales.shape[-1] % n == 0)
+    if not ok:
+        return None
+    # per-channel scales are applied per output column inside the kernel
+    # epilogue — that commutes with the psum over partials
+    return ((P(None, ax), P(None, ax), P(), P(None, ax) if grouped else P()),
+            P(), True)
+
+
+def _expert_dequant_matmul_tp(role, ax, n, arrays, static):
+    x, w_packed, _cb, scales = arrays
+    _, N, Kp = w_packed.shape
+    grouped = static.get("group_size") is not None
+    if role == "col":
+        if N % n != 0:
+            return None
+        return ((P(), P(None, ax), P(),
+                 P(None, ax, None) if grouped else P(None, ax)),
+                P(None, None, ax), False)
+    ok = Kp % n == 0 and x.shape[-1] % n == 0 \
+        and (not grouped or scales.shape[-1] % n == 0)
+    if not ok:
+        return None
+    return ((P(None, None, ax), P(None, None, ax), P(),
+             P(None, None, ax) if grouped else P()), P(), True)
+
+
+def _expert_lut_gemm_tp(role, ax, n, arrays, static):
+    a_packed, w_packed, _table, sc = arrays
+    _, N, Kp = w_packed.shape
+    ok = (N % n == 0 if role == "col"
+          else Kp % n == 0 and a_packed.shape[-1] % n == 0
+          and (sc is None or sc.shape[-1] % n == 0))
+    if not ok:
+        return None
+    if role == "col":
+        return ((P(), P(None, ax), P(), P(None, ax, None)),
+                P(None, None, ax), False)
+    return ((P(None, None, ax), P(None, None, ax), P(), P(None, None, ax)),
+            P(), True)
+
+
+def _bitsliced_tp(role, ax, n, arrays, static):
+    a_codes, w_planes, sc = arrays
+    _bits, N, Kg = w_planes.shape
+    if role == "col":
+        if N % n != 0:
+            return None
+        return ((P(), P(None, ax, None),
+                 P(ax, None) if sc is not None else P()),
+                P(None, ax), False)
+    # row: K split at pattern granularity keeps plane bytes whole; scale
+    # groups stay shard-local when the scale axis divides too.
+    ok = Kg % n == 0 and a_codes.shape[-1] % n == 0 \
+        and (sc is None or sc.shape[-1] % n == 0)
+    if not ok:
+        return None
+    return ((P(None, ax), P(None, None, ax),
+             P(None, ax) if sc is not None else P()), P(), True)
+
+
+# --------------------------------------------------------------------------- #
+# Tile spaces — candidate Pallas blocks for the offline autotuner
+# --------------------------------------------------------------------------- #
+
+def _matmul_tile_space(m, k, n, static):
+    if m <= 4:  # decode / GEMV shapes: trade M tiling for wider N and deep K
+        return [(m, 128, 512), (m, 256, 512), (m, 256, 1024),
+                (m, 512, 512), (m, 512, 256)]
+    return [(128, 128, 512), (128, 256, 512), (64, 256, 512),
+            (64, 128, 1024), (32, 256, 256)]
+
+
+# --------------------------------------------------------------------------- #
+# Impl adapters: registry positional arity -> each kernel's own signature
+# --------------------------------------------------------------------------- #
+
+def _lut_gemm_ref(ap, wp, table, sc, *, w_bits, a_bits, scheme="d",
+                  lookup_impl="take", group_size=None):
+    del scheme, lookup_impl
+    return _ref.ref_lut_gemm(ap, wp, ProductLUT(table, w_bits, a_bits),
+                             w_scales=sc, group_size=group_size)
+
+
+def _lut_gemm_pl(ap, wp, table, sc, *, w_bits, a_bits, scheme="d",
+                 lookup_impl="take", group_size=None, interpret=False, **blk):
+    del a_bits
+    return lut_gemm_pallas(ap, wp, table, sc, bits=w_bits, scheme=scheme,
+                           lookup_impl=lookup_impl, group_size=group_size,
+                           interpret=interpret, **blk)
+
+
+def _dequant_matmul_ref(a, wp, cb, sc, *, bits, group_size=None):
+    return _ref.ref_dequant_matmul(a, wp, cb, sc, bits,
+                                   group_size=group_size)
+
+
+def _dequant_matmul_pl(a, wp, cb, sc, *, bits, group_size=None,
+                       interpret=False, **blk):
+    return dequant_matmul_pallas(a, wp, cb, sc, bits=bits,
+                                 group_size=group_size, interpret=interpret,
+                                 **blk)
+
+
+def _bitsliced_ref(a_codes, planes, sc, *, w_bits, a_bits=8, group=None,
+                   group_size=None, lookup_impl="take"):
+    del a_bits, lookup_impl
+    from repro.core import packing
+    return _ref.ref_lut_gemm_bitsliced(
+        a_codes, planes, sc, bits=w_bits,
+        group=group or packing.BITPLANE_GROUP, group_size=group_size)
+
+
+def _bitsliced_pl(a_codes, planes, sc, *, w_bits, a_bits=8, group=None,
+                  group_size=None, lookup_impl="take", interpret=False,
+                  **blk):
+    from repro.core import packing
+    return lut_gemm_bitsliced_pallas(
+        a_codes, planes, sc, bits=w_bits, a_bits=a_bits,
+        group=group or packing.BITPLANE_GROUP, group_size=group_size,
+        lookup_impl=lookup_impl, interpret=interpret, **blk)
+
+
+def _expert_dequant_ref(x, wp, cb, sc, *, bits, group_size=None):
+    return _ref.ref_expert_dequant_matmul(x, wp, cb, sc, bits,
+                                          group_size=group_size)
+
+
+def _expert_dequant_pl(x, wp, cb, sc, *, bits, group_size=None,
+                       interpret=False, **blk):
+    return expert_dequant_matmul_pallas(x, wp, cb, sc, bits=bits,
+                                        group_size=group_size,
+                                        interpret=interpret, **blk)
+
+
+def _expert_lut_ref(ap, wp, table, sc, *, w_bits, a_bits, scheme="d",
+                    lookup_impl="take", group_size=None):
+    del scheme, lookup_impl
+    return _ref.ref_expert_lut_gemm(ap, wp,
+                                    ProductLUT(table, w_bits, a_bits),
+                                    w_scales=sc, group_size=group_size)
+
+
+def _expert_lut_pl(ap, wp, table, sc, *, w_bits, a_bits, scheme="d",
+                   lookup_impl="take", group_size=None, interpret=False,
+                   **blk):
+    del a_bits
+    return expert_lut_gemm_pallas(ap, wp, table, sc, bits=w_bits,
+                                  scheme=scheme, lookup_impl=lookup_impl,
+                                  group_size=group_size, interpret=interpret,
+                                  **blk)
+
+
+def _lut65k_ref(ap, wp, table):
+    return _ref.ref_lut65k_gemm(ap, wp, table)
+
+
+def _kv_attn_ref(q, kp, k_sc, vp, v_sc, lengths, *, bits=4, bs=512):
+    del bs
+    return _ref.ref_kv_cache_attention(q, kp, k_sc, vp, v_sc, lengths, bits)
+
+
+def _kv_attn_pl(q, kp, k_sc, vp, v_sc, lengths, *, bits=4, bs=512,
+                interpret=False):
+    return kv_cache_attention_pallas(q, kp, k_sc, vp, v_sc, lengths,
+                                     bits=bits, bs=bs, interpret=interpret)
+
+
+def _paged_attn_ref(q, kp, k_sc, vp, v_sc, bt, lengths, *, bits=4):
+    return _ref.ref_paged_attention(q, kp, k_sc, vp, v_sc, bt, lengths, bits)
+
+
+def _paged_attn_pl(q, kp, k_sc, vp, v_sc, bt, lengths, *, bits=4,
+                   interpret=False):
+    return paged_attention_pallas(q, kp, k_sc, vp, v_sc, bt, lengths,
+                                  bits=bits, interpret=interpret)
+
+
+# --------------------------------------------------------------------------- #
+# The registry
+# --------------------------------------------------------------------------- #
+
+register(KernelOp(
+    name="lut_gemm",
+    ref=_lut_gemm_ref, pallas=_lut_gemm_pl, tp_rule=_lut_gemm_tp,
+    tile_space=_matmul_tile_space,
+    doc="Paper-faithful product-LUT GEMM: "
+        "out[m,n] = sum_k LUT[(w[n,k]<<b)|a[m,k]]. "
+        "arrays: (a_packed, w_packed, lut_table, w_scales|None)"))
+
+register(KernelOp(
+    name="lut_gemm_bitsliced",
+    ref=_bitsliced_ref, pallas=_bitsliced_pl, tp_rule=_bitsliced_tp,
+    tile_space=_matmul_tile_space,
+    doc="T-MAC bit-sliced LUT GEMM: per-token subset-sum LUT, one gather "
+        "per weight plane, int16 tile accumulate, GEMV tiling for M<=4. "
+        "arrays: (a_codes, w_planes, w_scales|None)"))
+
+register(KernelOp(
+    name="dequant_matmul",
+    ref=_dequant_matmul_ref, pallas=_dequant_matmul_pl,
+    tp_rule=_dequant_matmul_tp, tile_space=_matmul_tile_space,
+    doc="TPU-native packed-weight matmul: (a @ dequant(w).T) * scales. "
+        "arrays: (a, w_packed, codebook, scales)"))
+
+register(KernelOp(
+    name="expert_dequant_matmul",
+    ref=_expert_dequant_ref, pallas=_expert_dequant_pl,
+    tp_rule=_expert_dequant_matmul_tp, tile_space=_matmul_tile_space,
+    doc="Grouped per-expert packed matmul (MoE serving hot-spot). "
+        "arrays: (x, w_packed, codebook, scales)"))
+
+register(KernelOp(
+    name="expert_lut_gemm",
+    ref=_expert_lut_ref, pallas=_expert_lut_pl, tp_rule=_expert_lut_gemm_tp,
+    tile_space=_matmul_tile_space,
+    doc="Activation-quantized per-expert LUT GEMM (paper-faithful w{b}a{b} "
+        "MoE path). arrays: (a_packed, w_packed, lut_table, w_scales|None)"))
+
+register(KernelOp(
+    name="lut65k_gemm",
+    ref=_lut65k_ref, pallas=None,
+    doc="LUT-65k — reference path only (no TPU lowering by design, "
+        "DESIGN.md §7). arrays: (a_packed, w_packed, table)"))
+
+register(KernelOp(
+    name="kv_cache_attention",
+    ref=_kv_attn_ref, pallas=_kv_attn_pl,
+    doc="Decode attention over an int8/int4-packed KV cache (fused "
+        "dequant). arrays: (q, k_packed, k_sc, v_packed, v_sc, lengths)"))
+
+register(KernelOp(
+    name="paged_attention",
+    ref=_paged_attn_ref, pallas=_paged_attn_pl,
+    doc="Decode attention over a paged packed KV-cache pool via per-"
+        "sequence block tables. arrays: (q, k_pool, k_sc, v_pool, v_sc, "
+        "block_tables, lengths)"))

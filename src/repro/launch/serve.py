@@ -42,7 +42,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, reduce_for_smoke
 from repro.core.qlinear import QuantPolicy
 from repro.core.qplan import PLANS, get_plan, make_plan
-from repro.kernels import ops as kops
+from repro.kernels import registry as kops
 from repro.models import lm, frontends
 from repro.launch import steps as St
 from repro.launch.mesh import make_tp_mesh

@@ -56,10 +56,11 @@ def dense(p: dict, x: jax.Array, *, tag: str = "", policy,
     """x: (..., in) -> (..., out).
 
     Packed serving leaves ({"qw": QuantizedWeight}) dispatch on the leaf's
-    plan: ``qw.kernel`` set routes through kernels/ops (dequant_matmul for
-    w{b}a16, lut_gemm with dynamic activation quantization for w{b}a{b}) on
-    the plan's backend; ``qw.kernel`` None keeps the legacy dequant-einsum
-    formulation bit-for-bit (the GSPMD-shardable dry-run form).
+    plan: ``qw.kernel`` set routes through the kernels/registry KernelOp
+    table (dequant_matmul for w{b}a16, lut_gemm or lut_gemm_bitsliced with
+    dynamic activation quantization for w{b}a{b}) on the plan's backend;
+    ``qw.kernel`` None keeps the legacy dequant-einsum formulation
+    bit-for-bit (the GSPMD-shardable dry-run form).
     """
     calibrate.observe(tag, x)   # no-op outside a calibration context
     if "qw" in p:  # packed serving leaf
@@ -591,10 +592,10 @@ def _expert_matmul(qw: QuantizedWeight, x: jax.Array, backend: str) -> jax.Array
     quantization — each (e, m) row's scale depends only on its own values,
     keeping outputs independent of the routed batch composition — then
     ``expert_lut_gemm``. The 'ref' backend keeps the algebraically identical
-    dequant formulation so the SPMD dry-run sees shardable dense HLO."""
+    dequant formulation so the SPMD dry-run sees shardable dense HLO. All
+    kernel calls go through the kernels/registry dispatch surface."""
     from repro.core import packing
-    from repro.core.lut import ProductLUT
-    from repro.kernels import ops as kops
+    from repro.kernels import registry as kreg
     k_pad = qw.packed.shape[-1] * packing.PACK_FACTOR[qw.bits]
     if k_pad != qw.in_features:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, k_pad - qw.in_features)))
@@ -604,7 +605,7 @@ def _expert_matmul(qw: QuantizedWeight, x: jax.Array, backend: str) -> jax.Array
                                      qw.a_bits, None)[..., None]  # (E, M, 1)
         aq = quant.quantize(x, a_scale, bits=qw.a_bits, signed=True)
         a_idx = quant.to_index(aq, qw.a_bits, True)
-        if kops._resolve(backend) == "ref":
+        if kreg.resolve_backend(backend) == "ref":
             a_deq = jnp.take(qw.a_levels, a_idx.astype(jnp.int32))
             w_deq = jnp.take(qw.codebook,
                              packing.unpack(qw.packed, qw.bits).astype(jnp.int32))
@@ -615,16 +616,16 @@ def _expert_matmul(qw: QuantizedWeight, x: jax.Array, backend: str) -> jax.Array
             return y * a_scale if G is not None \
                 else y * qw.scales[:, None, :] * a_scale
         ap = packing.pack(a_idx, qw.a_bits)
-        plut = ProductLUT(qw.plut, qw.bits, qw.a_bits)
-        y = kops.expert_lut_gemm(
-            ap, qw.packed, plut, scheme=qw.scheme,
-            w_scales=qw.scales if G is not None else None,
+        y = kreg.dispatch(
+            "expert_lut_gemm", ap, qw.packed, qw.plut,
+            qw.scales if G is not None else None,
+            w_bits=qw.bits, a_bits=qw.a_bits, scheme=qw.scheme,
             group_size=G, backend=backend, tp=qw.tp)
         return y * a_scale if G is not None \
             else y * qw.scales[:, None, :] * a_scale
-    return kops.expert_dequant_matmul(
-        x, qw.packed, qw.codebook, qw.scales, bits=qw.bits,
-        group_size=qw.group_size, backend=backend, tp=qw.tp)
+    return kreg.dispatch(
+        "expert_dequant_matmul", x, qw.packed, qw.codebook, qw.scales,
+        bits=qw.bits, group_size=qw.group_size, backend=backend, tp=qw.tp)
 
 
 def moe_apply(p: dict, x: jax.Array, *, cfg, mode: str = "plain") -> jax.Array:

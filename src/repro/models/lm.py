@@ -504,7 +504,8 @@ def chunked_ce_loss(params: dict, cfg, hidden: jax.Array, labels: jax.Array,
 # --------------------------------------------------------------------------- #
 
 def quantize_tree(params, cfg, *, tp: int = 1,
-                  act_scales: Optional[dict] = None) -> dict:
+                  act_scales: Optional[dict] = None,
+                  tune_cache: Optional[dict] = None) -> dict:
     """Replace plan-covered dense {"w": ...} with {"qw": QuantizedWeight}.
     Expert tensors (we_gate/we_up/we_down) are packed per-expert. LSQ steps
     are dropped (training-only).
@@ -526,13 +527,34 @@ def quantize_tree(params, cfg, *, tp: int = 1,
     ``act_scales`` (from ``calibrate_act_scales``) supplies per-layer-class
     activation amax stats; policies with ``a_scale='static'`` fold the
     calibrated scale into the leaf (``QuantizedWeight.a_sc``) instead of
-    quantizing activations with a per-token dynamic scale."""
-    from repro.core import calibrate
+    quantizing activations with a per-token dynamic scale.
+
+    When the plan's ``tune`` field lists M buckets, the Pallas tile
+    autotuner (kernels/autotune) runs here — offline, per distinct
+    (kernel, M, K, N, bits, G) problem — and the winning blocks are stamped
+    on each leaf's ``tiles`` aux for ``dense_serve`` to look up at trace
+    time. ``tune_cache`` shares/persists the measurement memo across calls
+    (kept small: repeated layer shapes tune once)."""
+    from repro.core import calibrate, qplan
     from repro.dist.sharding import TP_ROLES
+    from repro.kernels import autotune
 
     pol = cfg.quant
     if isinstance(pol, qlinear.QuantPolicy) and pol.w_bits is None:
         return params
+
+    tune_ms = tuple(getattr(pol, "tune", ()) or ())
+    tune_backend = qplan.plan_backend(pol)
+    tile_cache = tune_cache if tune_cache is not None else {}
+
+    def stamp_tiles(qw, lp):
+        if not tune_ms or qw.kernel not in autotune.TUNABLE_OPS:
+            return qw
+        tiles = autotune.tune_leaf_tiles(
+            qw.kernel, qw.k_padded, qw.out_features, bits=qw.bits,
+            a_bits=lp.a_bits, group_size=qw.group_size, m_buckets=tune_ms,
+            backend=tune_backend, cache=tile_cache)
+        return dataclasses.replace(qw, tiles=tiles) if tiles else qw
 
     def role_for(name: str, out_dim: int) -> Optional[str]:
         if tp <= 1:
@@ -557,7 +579,7 @@ def quantize_tree(params, cfg, *, tp: int = 1,
                                tp_role=role, tp_shards=tp, a_static=a_static)
         for _ in range(w.ndim - 2):
             fn = jax.vmap(fn)
-        return fn(w)
+        return stamp_tiles(fn(w), lp)
 
     def qexpert(w, lp, role):
         fn = functools.partial(qlinear.quantize_expert_weight, policy=lp,

@@ -1,0 +1,146 @@
+"""Offline tile autotuner: quantize-time tuning stamps ``tiles`` aux on
+packed leaves, tiles round-trip through the checkpoint manifest meta, and
+the jit'd forward NEVER tunes — a cache miss silently falls back to the
+kernel's default blocks (patch-raise guarantee, like the PR 4 LUT one)."""
+
+import dataclasses
+from unittest import mock
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import qlinear, qplan
+from repro.core.qlinear import QuantizedWeight
+from repro.kernels import autotune, registry
+from repro.models import lm
+
+
+def _planned(plan):
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    cfg = dataclasses.replace(cfg, quant=plan)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg, mode="plain")
+    return cfg, params
+
+
+def _qw_leaves(tree):
+    return [l for l in jax.tree.leaves(
+                tree, is_leaf=lambda x: isinstance(x, QuantizedWeight))
+            if isinstance(l, QuantizedWeight)]
+
+
+def test_tune_returns_candidate_and_memoises():
+    cache = {}
+    blk = autotune.tune("lut_gemm_bitsliced", 1, 256, 128, bits=2, a_bits=8,
+                        backend="pallas_interpret", cache=cache, iters=1)
+    op_space = [tuple(b) for b in registry.get("lut_gemm_bitsliced")
+                .tile_space(1, 256, 128, {})]
+    assert blk in op_space
+    key = next(iter(cache))
+    assert cache[key] == blk
+    with mock.patch.object(autotune, "_time_once",
+                           side_effect=AssertionError("re-measured")):
+        assert autotune.tune("lut_gemm_bitsliced", 1, 256, 128, bits=2,
+                             a_bits=8, backend="pallas_interpret",
+                             cache=cache) == blk
+
+
+def test_tune_ref_backend_returns_none():
+    """'ref' has no Pallas blocks to pick — tuning is a recorded no-op."""
+    cache = {}
+    assert autotune.tune("dequant_matmul", 4, 128, 64, bits=2,
+                         backend="ref", cache=cache) is None
+    assert list(cache.values()) == [None]
+
+
+def test_quantize_tree_stamps_tiles():
+    plan = dataclasses.replace(qplan.get_plan("w2a8_bs"),
+                               backend="pallas_interpret", tune=(1,))
+    cfg, params = _planned(plan)
+    cache = {}
+    qp = lm.quantize_tree(params, cfg, tune_cache=cache)
+    leaves = _qw_leaves(qp)
+    assert leaves and all(l.kernel == "lut_gemm_bitsliced" for l in leaves)
+    assert all(l.tiles for l in leaves), "tuning did not stamp tiles"
+    for l in leaves:
+        for t in l.tiles:
+            assert len(t) == 4 and t[0] == 1          # (m, bm, bn, bk)
+    # repeated layer shapes share measurements through the cache
+    assert len(cache) <= len(leaves)
+    # trace-time lookup: exact bucket, else smallest >= m, else largest
+    l0 = leaves[0]
+    assert qlinear.tile_for(l0, 1) == tuple(l0.tiles[0][1:])
+    assert qlinear.tile_for(l0, 999) == tuple(l0.tiles[-1][1:])
+    assert qlinear.tile_for(dataclasses.replace(l0, tiles=()), 1) is None
+
+
+def test_tiles_survive_checkpoint_roundtrip(tmp_path):
+    plan = dataclasses.replace(qplan.get_plan("w2a8_bs"),
+                               backend="pallas_interpret", tune=(1,))
+    cfg, params = _planned(plan)
+    qp = lm.quantize_tree(params, cfg, tune_cache={})
+    meta = autotune.tile_meta(qp)
+    assert meta, "no tiles collected"
+    store.save_checkpoint(str(tmp_path), 0, qp, meta={"tiles": meta})
+
+    # restore through a TILE-FREE template (aux never lives in the npz
+    # payload) and re-stamp from the manifest meta
+    template = autotune.apply_tile_meta(qp, {})
+    template = jax.tree_util.tree_map(
+        lambda x: x,
+        jax.tree_util.tree_map_with_path(
+            lambda p, l: dataclasses.replace(l, tiles=())
+            if isinstance(l, QuantizedWeight) else l,
+            template, is_leaf=lambda x: isinstance(x, QuantizedWeight)))
+    assert not autotune.tile_meta(template)
+    tree, step, rmeta = store.restore_checkpoint(str(tmp_path), template)
+    restored = autotune.apply_tile_meta(tree, rmeta["tiles"])
+    want = {tuple(l.tiles) for l in _qw_leaves(qp)}
+    got = {tuple(l.tiles) for l in _qw_leaves(restored)}
+    assert got == want and all(got)
+    # restored packed bytes identical too (sanity: payload round-trip)
+    a, b = _qw_leaves(qp)[0], _qw_leaves(restored)[0]
+    np.testing.assert_array_equal(np.asarray(a.packed), np.asarray(b.packed))
+
+
+def test_forward_never_tunes_and_miss_falls_back(monkeypatch):
+    """The tuner must be quantize-time only: with autotune.tune patched to
+    raise, a planned forward (leaves WITHOUT tiles — every lookup misses)
+    still traces and runs on default blocks."""
+    plan = dataclasses.replace(qplan.get_plan("w2a8_bs"),
+                               backend="pallas_interpret", tune=())
+    cfg, params = _planned(plan)
+    qp = lm.quantize_tree(params, cfg)              # tune=() -> no tiles
+    assert not autotune.tile_meta(qp)
+    monkeypatch.setattr(autotune, "tune",
+                        mock.Mock(side_effect=AssertionError(
+                            "autotuner ran under jit")))
+    monkeypatch.setattr(autotune, "tune_leaf_tiles",
+                        mock.Mock(side_effect=AssertionError(
+                            "autotuner ran under jit")))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 4), 0,
+                                cfg.vocab_size)
+    h, _ = jax.jit(lambda p, t: lm.forward(p, cfg, t))(qp, tokens)
+    assert np.isfinite(np.asarray(h, np.float32)).all()
+
+
+def test_tuned_and_default_blocks_agree_numerically():
+    plan = dataclasses.replace(qplan.get_plan("w2a8_bs"),
+                               backend="pallas_interpret")
+    cfg, params = _planned(plan)
+    base = dataclasses.replace(plan, tune=())
+    qp0 = lm.quantize_tree(params, dataclasses.replace(cfg, quant=base))
+    qp1 = lm.quantize_tree(params,
+                           dataclasses.replace(
+                               cfg, quant=dataclasses.replace(plan,
+                                                              tune=(1,))),
+                           tune_cache={})
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (1, 4), 0,
+                                cfg.vocab_size)
+    h0, _ = lm.forward(qp0, cfg, tokens)
+    h1, _ = lm.forward(qp1, cfg, tokens)
+    np.testing.assert_allclose(np.asarray(h0, np.float32),
+                               np.asarray(h1, np.float32),
+                               rtol=1e-4, atol=1e-4)

@@ -15,7 +15,7 @@ from repro.configs import get_config, reduce_for_smoke
 from repro.core import packing, qplan, quant
 from repro.core.lut import product_lut
 from repro.core.qlinear import QuantPolicy, QuantizedWeight, quantize_expert_weight
-from repro.kernels import ops as kops
+from repro.kernels import registry as kops
 from repro.kernels import ref as R
 from repro.models import lm
 
@@ -48,9 +48,9 @@ def test_expert_lut_pallas_matches_oracle_grouped_and_not():
     for w_scales, group in ((None, None), (sc, G)):
         want = R.ref_expert_lut_gemm(ap, wp, lut, w_scales=w_scales,
                                      group_size=group)
-        got = kops.expert_lut_gemm(ap, wp, lut, w_scales=w_scales,
-                                   group_size=group,
-                                   backend="pallas_interpret")
+        got = kops.dispatch("expert_lut_gemm", ap, wp, lut.table,
+                            w_scales, w_bits=lut.w_bits, a_bits=lut.a_bits,
+                            group_size=group, backend="pallas_interpret")
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=1e-5)
 

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import lut, packing, quant
-from repro.kernels import ops, ref
+from repro.kernels import registry, ref
 
 RNG = np.random.default_rng(42)
 
@@ -36,8 +36,10 @@ def test_lut_gemm_matches_ref(bits, shape):
     cb = quant.uniform_codebook(bits, signed=True)
     plut = lut.product_lut(cb, cb)
     want = ref.ref_lut_gemm(ap, wp, plut)
-    got = ops.lut_gemm(ap, wp, plut, backend="pallas_interpret",
-                       block=(min(8, M), min(16, N), min(64, K)))
+    got = registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                            w_bits=plut.w_bits, a_bits=plut.a_bits,
+                            backend="pallas_interpret",
+                            block=(min(8, M), min(16, N), min(64, K)))
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
 
 
@@ -48,8 +50,10 @@ def test_lut_gemm_schemes_agree(scheme):
     cb = quant.uniform_codebook(bits, signed=True)
     plut = lut.product_lut(cb, cb)
     want = ref.ref_lut_gemm(ap, wp, plut)
-    got = ops.lut_gemm(ap, wp, plut, scheme=scheme,
-                       backend="pallas_interpret", block=(8, 16, 64))
+    got = registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                            w_bits=plut.w_bits, a_bits=plut.a_bits,
+                            scheme=scheme, backend="pallas_interpret",
+                            block=(8, 16, 64))
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
 
 
@@ -59,10 +63,14 @@ def test_lut_gemm_onehot_lookup_impl():
     ap, wp = _pack_pair(M, N, K, bits)
     cb = quant.uniform_codebook(bits, signed=True)
     plut = lut.product_lut(cb, cb)
-    take = ops.lut_gemm(ap, wp, plut, lookup_impl="take",
-                        backend="pallas_interpret", block=(8, 16, 64))
-    oneh = ops.lut_gemm(ap, wp, plut, lookup_impl="onehot",
-                        backend="pallas_interpret", block=(8, 16, 64))
+    take = registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                             w_bits=plut.w_bits, a_bits=plut.a_bits,
+                             lookup_impl="take", backend="pallas_interpret",
+                             block=(8, 16, 64))
+    oneh = registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                             w_bits=plut.w_bits, a_bits=plut.a_bits,
+                             lookup_impl="onehot", backend="pallas_interpret",
+                             block=(8, 16, 64))
     np.testing.assert_allclose(np.asarray(take), np.asarray(oneh), atol=1e-4)
 
 
@@ -74,8 +82,9 @@ def test_lut_gemm_nonuniform_float_entries():
     al = jnp.asarray([-0.9, -0.1, 0.3, 1.1], jnp.float32)
     plut = lut.product_lut(wl, al)
     want = ref.ref_dequant_gemm(ap, wp, wl, al, bits, bits)
-    got = ops.lut_gemm(ap, wp, plut, backend="pallas_interpret",
-                       block=(8, 8, 32))
+    got = registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                            w_bits=plut.w_bits, a_bits=plut.a_bits,
+                            backend="pallas_interpret", block=(8, 8, 32))
     np.testing.assert_allclose(np.asarray(want), np.asarray(got),
                                rtol=1e-4, atol=1e-5)
 
@@ -92,9 +101,10 @@ def test_lut_gemm_grouped_scales_match_ref(scheme, group):
     sc = jnp.asarray(np.abs(rng.normal(size=(N, K // group))) + 0.05,
                      jnp.float32)
     want = ref.ref_lut_gemm(ap, wp, plut, w_scales=sc, group_size=group)
-    got = ops.lut_gemm(ap, wp, plut, scheme=scheme, w_scales=sc,
-                       group_size=group, backend="pallas_interpret",
-                       block=(8, 16, 64))
+    got = registry.dispatch("lut_gemm", ap, wp, plut.table, sc,
+                            w_bits=plut.w_bits, a_bits=plut.a_bits,
+                            scheme=scheme, group_size=group,
+                            backend="pallas_interpret", block=(8, 16, 64))
     np.testing.assert_allclose(np.asarray(want), np.asarray(got),
                                rtol=1e-5, atol=1e-5)
 
@@ -107,9 +117,11 @@ def test_lut_gemm_grouped_equals_scaled_dequant():
     ap, wp = _pack_pair(M, N, K, bits, rng)
     cb = quant.uniform_codebook(bits, signed=True)
     sc = jnp.asarray(np.abs(rng.normal(size=(N, K // G))) + 0.05, jnp.float32)
-    got = ops.lut_gemm(ap, wp, lut.product_lut(cb, cb), w_scales=sc,
-                       group_size=G, backend="pallas_interpret",
-                       block=(4, 8, 64))
+    plut = lut.product_lut(cb, cb)
+    got = registry.dispatch("lut_gemm", ap, wp, plut.table, sc,
+                            w_bits=plut.w_bits, a_bits=plut.a_bits,
+                            group_size=G, backend="pallas_interpret",
+                            block=(4, 8, 64))
     a_deq = jnp.take(cb.levels, packing.unpack(ap, bits).astype(jnp.int32))
     w_deq = jnp.take(cb.levels, packing.unpack(wp, bits).astype(jnp.int32))
     w_deq = w_deq * jnp.repeat(sc, G, axis=-1)
@@ -125,7 +137,7 @@ def test_lut65k_matches_lut16():
     plut = lut.product_lut(cb, cb)
     want = ref.ref_lut_gemm(ap, wp, plut)
     t65 = lut.lut65k(cb, cb)
-    got = ops.lut65k_gemm(ap, wp, t65)
+    got = registry.dispatch("lut65k_gemm", ap, wp, t65, backend="ref")
     np.testing.assert_allclose(np.asarray(want), np.asarray(got), atol=1e-4)
 
 
@@ -156,7 +168,7 @@ def test_dequant_matmul_matches_ref(bits, dtype, shape):
     scales = jnp.asarray(np.abs(RNG.normal(size=(N,))) + 0.05, jnp.float32)
     want = ref.ref_dequant_matmul(a.astype(jnp.float32), wp, cb.levels,
                                   scales, bits)
-    got = ops.dequant_matmul(a, wp, cb.levels, scales, bits=bits,
+    got = registry.dispatch("dequant_matmul", a, wp, cb.levels, scales, bits=bits,
                              backend="pallas_interpret",
                              block=(min(8, M), 16, min(64, K)))
     np.testing.assert_allclose(np.asarray(want), np.asarray(got),
@@ -177,7 +189,7 @@ def test_dequant_matmul_grouped_scales_match_ref(bits, group):
                      jnp.float32)
     want = ref.ref_dequant_matmul(a, wp, cb.levels, sc, bits,
                                   group_size=group)
-    got = ops.dequant_matmul(a, wp, cb.levels, sc, bits=bits,
+    got = registry.dispatch("dequant_matmul", a, wp, cb.levels, sc, bits=bits,
                              group_size=group, backend="pallas_interpret",
                              block=(8, 16, 64))
     np.testing.assert_allclose(np.asarray(want), np.asarray(got),
@@ -194,7 +206,7 @@ def test_dequant_matmul_nondivisible_blocks_fit():
     cb = quant.uniform_codebook(bits, signed=True)
     sc = jnp.ones((N,), jnp.float32)
     want = ref.ref_dequant_matmul(a, wp, cb.levels, sc, bits)
-    got = ops.dequant_matmul(a, wp, cb.levels, sc, bits=bits,
+    got = registry.dispatch("dequant_matmul", a, wp, cb.levels, sc, bits=bits,
                              backend="pallas_interpret")
     np.testing.assert_allclose(np.asarray(want), np.asarray(got), rtol=1e-4)
 
@@ -207,7 +219,7 @@ def test_dequant_matmul_grid_accumulation():
     cb = quant.uniform_codebook(bits, signed=True)
     sc = jnp.ones((N,), jnp.float32)
     want = ref.ref_dequant_matmul(a, wp, cb.levels, sc, bits)
-    got = ops.dequant_matmul(a, wp, cb.levels, sc, bits=bits,
+    got = registry.dispatch("dequant_matmul", a, wp, cb.levels, sc, bits=bits,
                              backend="pallas_interpret", block=(8, 8, 128))
     np.testing.assert_allclose(np.asarray(want), np.asarray(got), rtol=1e-4)
 
@@ -226,7 +238,7 @@ def test_expert_dequant_matmul_matches_ref(bits, shape):
     cb = quant.uniform_codebook(bits, signed=True)
     sc = jnp.asarray(np.abs(RNG.normal(size=(E, N))) + 0.05, jnp.float32)
     want = ref.ref_expert_dequant_matmul(x, wp, cb.levels, sc, bits)
-    got = ops.expert_dequant_matmul(x, wp, cb.levels, sc, bits=bits,
+    got = registry.dispatch("expert_dequant_matmul", x, wp, cb.levels, sc, bits=bits,
                                     backend="pallas_interpret",
                                     block=(min(8, M), min(16, N), min(64, K)))
     np.testing.assert_allclose(np.asarray(want), np.asarray(got),
@@ -243,7 +255,7 @@ def test_expert_dequant_matmul_grouped_scales_match_ref():
                      jnp.float32)
     want = ref.ref_expert_dequant_matmul(x, wp, cb.levels, sc, bits,
                                          group_size=G)
-    got = ops.expert_dequant_matmul(x, wp, cb.levels, sc, bits=bits,
+    got = registry.dispatch("expert_dequant_matmul", x, wp, cb.levels, sc, bits=bits,
                                     group_size=G,
                                     backend="pallas_interpret",
                                     block=(8, 16, 64))
@@ -258,7 +270,7 @@ def test_expert_dequant_matmul_nonuniform_codebook():
     cb = jnp.asarray([-1.7, -0.4, 0.3, 1.2], jnp.float32)   # k-means-style
     sc = jnp.ones((E, N), jnp.float32)
     want = ref.ref_expert_dequant_matmul(x, wp, cb, sc, bits)
-    got = ops.expert_dequant_matmul(x, wp, cb, sc, bits=bits,
+    got = registry.dispatch("expert_dequant_matmul", x, wp, cb, sc, bits=bits,
                                     backend="pallas_interpret",
                                     block=(8, 16, 64))
     np.testing.assert_allclose(np.asarray(want), np.asarray(got), rtol=1e-4)
@@ -282,7 +294,7 @@ def test_kv_cache_attention_matches_ref(bits, gqa):
     vp, vsc = qf(v)
     lengths = jnp.asarray([S, S // 2], jnp.int32)
     want = ref.ref_kv_cache_attention(q, kp, ksc, vp, vsc, lengths, bits)
-    got = ops.kv_cache_attention(q, kp, ksc, vp, vsc, lengths, bits=bits,
+    got = registry.dispatch("kv_cache_attention", q, kp, ksc, vp, vsc, lengths, bits=bits,
                                  backend="pallas_interpret", bs=16)
     np.testing.assert_allclose(np.asarray(want), np.asarray(got),
                                rtol=2e-4, atol=2e-4)
@@ -315,7 +327,87 @@ def test_paged_attention_matches_ref(bits, gqa):
         at += used
     tables, lengths = jnp.asarray(tables), jnp.asarray(lengths)
     want = ref.ref_paged_attention(q, kp, ksc, vp, vsc, tables, lengths, bits)
-    got = ops.paged_attention(q, kp, ksc, vp, vsc, tables, lengths,
+    got = registry.dispatch("paged_attention", q, kp, ksc, vp, vsc, tables, lengths,
                               bits=bits, backend="pallas_interpret")
     np.testing.assert_allclose(np.asarray(want), np.asarray(got),
                                rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+# lut_gemm_bitsliced (T-MAC bit-plane route: per-token subset-sum LUT,
+# int16 tile accumulate, GEMV specialization for decode M<=4)
+# --------------------------------------------------------------------------- #
+
+def _bitsliced_case(M, N, K, bits, rng, a_bits=8):
+    lo = -(1 << (a_bits - 1)) + 1
+    a = jnp.asarray(rng.integers(lo, -lo + 1, (M, K)), jnp.int8)
+    idx = _codes((N, K), bits, rng)
+    planes = packing.pack_bitplanes_signed(idx, bits)
+    # int oracle: signed weight codes q = idx - 2^(b-1)
+    q = np.asarray(idx, np.int64) - (1 << (bits - 1))
+    want = jnp.asarray(np.asarray(a, np.int64) @ q.T, jnp.float32)
+    return a, planes, want
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4])
+def test_bitsliced_ref_matches_int_oracle(bits):
+    """The plane decomposition re-sums the exact integer products: the ref
+    oracle must equal the int64 matmul of signed codes bit-for-bit."""
+    rng = np.random.default_rng(20)
+    a, planes, want = _bitsliced_case(8, 16, 64, bits, rng)
+    got = ref.ref_lut_gemm_bitsliced(a, planes, bits=bits)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_bitplane_pack_roundtrip():
+    rng = np.random.default_rng(21)
+    for bits in (1, 2, 3, 4):
+        idx = _codes((8, 32), bits, rng)
+        back = packing.unpack_bitplanes(packing.pack_bitplanes(idx, bits),
+                                        bits)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(back))
+        backs = packing.unpack_bitplanes_signed(
+            packing.pack_bitplanes_signed(idx, bits), bits)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(backs))
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4])
+@pytest.mark.parametrize("M", [1, 4, 8])
+def test_bitsliced_pallas_matches_ref(bits, M):
+    """Pallas (GEMV grid for M<=4, 3D grid above) vs ref, exact: ungrouped
+    outputs are integer sums representable in f32."""
+    rng = np.random.default_rng(22)
+    a, planes, want = _bitsliced_case(M, 16, 128, bits, rng)
+    got = registry.dispatch("lut_gemm_bitsliced", a, planes, None,
+                            w_bits=bits, backend="pallas_interpret",
+                            block=(min(8, M), 16, 64))   # 2 K-grid steps
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("group", [16, 32])
+def test_bitsliced_grouped_scales_match_ref(group):
+    """Fused group-scale epilogue vs the grouped oracle. Grouped paths
+    differ from the oracle only by f32 summation order -> scaled atol."""
+    M, N, K, bits = 4, 16, 128, 2
+    rng = np.random.default_rng(23)
+    a, planes, _ = _bitsliced_case(M, N, K, bits, rng)
+    sc = jnp.asarray(np.abs(rng.normal(size=(N, K // group))) + 0.05,
+                     jnp.float32)
+    want = ref.ref_lut_gemm_bitsliced(a, planes, sc, bits=bits,
+                                      group_size=group)
+    got = registry.dispatch("lut_gemm_bitsliced", a, planes, sc,
+                            w_bits=bits, group_size=group,
+                            backend="pallas_interpret", block=(4, 16, 64))
+    np.testing.assert_allclose(
+        np.asarray(want), np.asarray(got), rtol=1e-4,
+        atol=float(np.abs(np.asarray(want)).max()) * 1e-5)
+
+
+def test_bitsliced_onehot_lookup_impl():
+    """MXU-routed plane lookup (one_hot @ lut) == gather lookup."""
+    rng = np.random.default_rng(24)
+    a, planes, want = _bitsliced_case(4, 16, 64, 2, rng)
+    oneh = registry.dispatch("lut_gemm_bitsliced", a, planes, None,
+                             w_bits=2, lookup_impl="onehot",
+                             backend="pallas_interpret", block=(4, 16, 64))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(oneh))

@@ -1,0 +1,141 @@
+"""KernelOp registry: the unified dispatch surface (backend resolution,
+trace-time counting, block overrides, optional-operand handling) and the
+deprecation shims the old kernels/ops wrappers left behind."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut, packing, quant
+from repro.kernels import ops, ref, registry
+
+RNG = np.random.default_rng(0)
+
+
+def _lut_case(M=4, N=8, K=32, bits=2):
+    a_idx = jnp.asarray(RNG.integers(0, 2 ** bits, (M, K)), jnp.uint8)
+    w_idx = jnp.asarray(RNG.integers(0, 2 ** bits, (N, K)), jnp.uint8)
+    cb = quant.uniform_codebook(bits, signed=True)
+    return (packing.pack(a_idx, bits), packing.pack(w_idx, bits),
+            lut.product_lut(cb, cb))
+
+
+def test_registry_lists_all_ops():
+    names = registry.op_names()
+    for expected in ("lut_gemm", "lut_gemm_bitsliced", "dequant_matmul",
+                     "expert_dequant_matmul", "expert_lut_gemm",
+                     "lut65k_gemm", "kv_cache_attention", "paged_attention"):
+        assert expected in names, names
+    # every op declares a ref oracle; docs state the positional arity
+    for n in names:
+        op = registry.get(n)
+        assert callable(op.ref) and "arrays:" in op.doc
+
+
+def test_unknown_op_raises_with_listing():
+    with pytest.raises(KeyError, match="lut_gemm"):
+        registry.dispatch("no_such_kernel")
+
+
+def test_dispatch_counts_name_and_backend():
+    ap, wp, plut = _lut_case()
+    registry.reset_dispatch_counts()
+    registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                      w_bits=plut.w_bits, a_bits=plut.a_bits, backend="ref")
+    c = registry.dispatch_counts()
+    assert c.get("lut_gemm") == 1 and c.get("lut_gemm:ref") == 1, c
+    registry.reset_dispatch_counts()
+    assert registry.dispatch_counts() == {}
+
+
+def test_ref_and_pallas_backends_agree():
+    ap, wp, plut = _lut_case()
+    r = registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                          w_bits=plut.w_bits, a_bits=plut.a_bits,
+                          backend="ref")
+    p = registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                          w_bits=plut.w_bits, a_bits=plut.a_bits,
+                          backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+
+
+def test_block_override_changes_grid_not_result():
+    ap, wp, plut = _lut_case(M=8, N=16, K=128)
+    want = ref.ref_lut_gemm(ap, wp, plut)
+    for block in [(8, 16, 64), (4, 8, 32), (2, 16, 128)]:
+        got = registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                                w_bits=plut.w_bits, a_bits=plut.a_bits,
+                                backend="pallas_interpret", block=block)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_none_operand_slots_are_reinserted():
+    """Optional operands (group scales) pass positionally as None and the
+    impl still sees its full arity — grouped vs ungrouped both dispatch."""
+    ap, wp, plut = _lut_case(M=4, N=8, K=32)
+    sc = jnp.asarray(RNG.random((8, 32 // 8)) + 0.05, jnp.float32)
+    got = registry.dispatch("lut_gemm", ap, wp, plut.table, sc,
+                            w_bits=plut.w_bits, a_bits=plut.a_bits,
+                            group_size=8, backend="pallas_interpret")
+    want = ref.ref_lut_gemm(ap, wp, plut, w_scales=sc, group_size=8)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), atol=1e-5)
+
+
+def test_tile_space_declared_for_matmul_ops():
+    for n in ("lut_gemm", "lut_gemm_bitsliced", "dequant_matmul"):
+        space = registry.get(n).tile_space(1, 1024, 1024, {})
+        assert space and all(len(b) == 3 for b in space)
+        assert all(b[0] == 1 for b in space)    # GEMV candidates keep bm=M
+
+
+def test_duplicate_registration_rejected():
+    op = registry.get("lut_gemm")
+    with pytest.raises(AssertionError, match="duplicate"):
+        registry.register(op)
+
+
+# --------------------------------------------------------------------------- #
+# Deprecation shims: old wrappers still work but warn, and route through
+# the registry (counters bump)
+# --------------------------------------------------------------------------- #
+
+def test_ops_shims_warn_and_match_registry():
+    ap, wp, plut = _lut_case()
+    registry.reset_dispatch_counts()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = ops.lut_gemm(ap, wp, plut, backend="pallas_interpret")
+    assert any(issubclass(w.category, DeprecationWarning) and
+               "lut_gemm" in str(w.message) for w in rec), \
+        [str(w.message) for w in rec]
+    assert registry.dispatch_counts().get("lut_gemm", 0) == 1
+    new = registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                            w_bits=plut.w_bits, a_bits=plut.a_bits,
+                            backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_dequant_matmul_shim_warns():
+    bits = 2
+    a = jnp.asarray(RNG.normal(size=(4, 32)), jnp.float32)
+    wp = packing.pack(
+        jnp.asarray(RNG.integers(0, 4, (8, 32)), jnp.uint8), bits)
+    cb = quant.uniform_codebook(bits, signed=True)
+    sc = jnp.ones((8,), jnp.float32)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = ops.dequant_matmul(a, wp, cb.levels, sc, bits=bits,
+                                 backend="ref")
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+    want = ref.ref_dequant_matmul(a, wp, cb.levels, sc, bits)
+    np.testing.assert_allclose(np.asarray(old), np.asarray(want), atol=1e-6)
+
+
+def test_ops_reexports_counters():
+    """Call sites that only imported the counters keep working unchanged."""
+    assert ops.DISPATCH_COUNTS is registry.DISPATCH_COUNTS
+    assert ops.dispatch_counts is registry.dispatch_counts
+    assert ops.reset_dispatch_counts is registry.reset_dispatch_counts

@@ -101,7 +101,7 @@ def test_tp_quantized_engine_deterministic():
     leaves carry their TP roles."""
     run_in_subprocess("""
         from repro.core.qlinear import QuantizedWeight
-        from repro.kernels import ops as kops
+        from repro.kernels import registry as kops
         cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
         qcfg = dataclasses.replace(cfg, quant=qplan.get_plan("w2a2"))
         params = lm.init_params(jax.random.PRNGKey(0), cfg, mode="plain")
@@ -127,7 +127,7 @@ def test_tp_sharded_kernels_match_unsharded():
         from repro.core import packing, quant
         from repro.core.lut import product_lut
         from repro.dist import sharding as Sh
-        from repro.kernels import ops as kops
+        from repro.kernels import registry as kops
         from repro.launch.mesh import make_cpu_mesh
         mesh = make_cpu_mesh((8,), ("model",))
         rng = np.random.default_rng(0)
@@ -141,24 +141,26 @@ def test_tp_sharded_kernels_match_unsharded():
         ea = jnp.asarray(rng.integers(0, 4, (E, M, K)), jnp.uint8)
         ew = jnp.asarray(rng.integers(0, 4, (E, N, K)), jnp.uint8)
         eap, ewp = packing.pack(ea, b), packing.pack(ew, b)
-        base = kops.lut_gemm(ap, wp, lut, w_scales=sc, group_size=G,
+        base = kops.dispatch("lut_gemm", ap, wp, lut.table, sc,
+                             w_bits=b, a_bits=b, group_size=G,
                              backend="pallas_interpret")
-        ebase = kops.expert_lut_gemm(eap, ewp, lut,
-                                     backend="pallas_interpret")
+        ebase = kops.dispatch("expert_lut_gemm", eap, ewp, lut.table, None,
+                              w_bits=b, a_bits=b,
+                              backend="pallas_interpret")
         for role, tol in (("col", 0.0), ("row", 1e-4)):
             def f(ap, wp, sc):
                 with Sh.use_tp(mesh):
-                    return kops.lut_gemm(ap, wp, lut, w_scales=sc,
-                                         group_size=G,
+                    return kops.dispatch("lut_gemm", ap, wp, lut.table, sc,
+                                         w_bits=b, a_bits=b, group_size=G,
                                          backend="pallas_interpret", tp=role)
             got = jax.jit(f)(ap, wp, sc)
             np.testing.assert_allclose(np.asarray(got), np.asarray(base),
                                        atol=max(tol, 1e-12))
             def g(eap, ewp):
                 with Sh.use_tp(mesh):
-                    return kops.expert_lut_gemm(eap, ewp, lut,
-                                                backend="pallas_interpret",
-                                                tp=role)
+                    return kops.dispatch("expert_lut_gemm", eap, ewp,
+                                         lut.table, None, w_bits=b, a_bits=b,
+                                         backend="pallas_interpret", tp=role)
             egot = jax.jit(g)(eap, ewp)
             np.testing.assert_allclose(np.asarray(egot), np.asarray(ebase),
                                        atol=max(tol, 1e-12))
@@ -174,7 +176,7 @@ def test_tp_nondividing_shapes_fall_back():
         from repro.core.lut import product_lut
         from repro.core.qlinear import QuantPolicy, quantize_weight
         from repro.dist import sharding as Sh
-        from repro.kernels import ops as kops
+        from repro.kernels import registry as kops
         from repro.launch.mesh import make_cpu_mesh
         mesh = make_cpu_mesh((8,), ("model",))
         rng = np.random.default_rng(0)
@@ -184,10 +186,12 @@ def test_tp_nondividing_shapes_fall_back():
         a_idx = jnp.asarray(rng.integers(0, 4, (4, 12)), jnp.uint8)
         w_idx = jnp.asarray(rng.integers(0, 4, (6, 12)), jnp.uint8)   # N=6 !% 8
         ap, wp = packing.pack(a_idx, b), packing.pack(w_idx, b)
-        base = kops.lut_gemm(ap, wp, lut, backend="pallas_interpret")
+        base = kops.dispatch("lut_gemm", ap, wp, lut.table, None,
+                             w_bits=b, a_bits=b, backend="pallas_interpret")
         def f(ap, wp):
             with Sh.use_tp(mesh):
-                return kops.lut_gemm(ap, wp, lut,
+                return kops.dispatch("lut_gemm", ap, wp, lut.table, None,
+                                     w_bits=b, a_bits=b,
                                      backend="pallas_interpret", tp="col")
         np.testing.assert_array_equal(np.asarray(jax.jit(f)(ap, wp)),
                                       np.asarray(base))
