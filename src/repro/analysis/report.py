@@ -1,7 +1,16 @@
-"""Roofline report generator: reads results/dryrun/*.json and emits the
-EXPERIMENTS.md §Roofline markdown table + per-cell one-liners.
+"""Report generators for dry-run rooflines and serving traces.
 
-Usage: PYTHONPATH=src python -m repro.analysis.report [--dir results/dryrun]
+Two subcommands:
+
+  roofline   (default) reads results/dryrun/*.json and emits the
+             EXPERIMENTS.md §Roofline markdown table + per-cell one-liners
+  trace      reads a serving trace written by ``--trace-out`` (Chrome-trace
+             JSON or JSONL, docs/observability.md) and renders the latency
+             percentiles, step-phase breakdown, and per-request table
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis.report [--dir results/dryrun]
+  PYTHONPATH=src python -m repro.analysis.report trace trace.json
 """
 
 from __future__ import annotations
@@ -10,6 +19,7 @@ import argparse
 import glob
 import json
 import os
+import sys
 
 
 def fmt_s(x: float) -> str:
@@ -73,11 +83,108 @@ def one_liners(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
-def main():
+# --------------------------------------------------------------------------- #
+# serving-trace report (docs/observability.md)
+# --------------------------------------------------------------------------- #
+
+def load_trace(path: str) -> dict:
+    """Normalize either trace format to {latency, phases, requests}.
+
+    Chrome-trace JSON carries the derived summaries under the extra
+    top-level ``repro`` key (Perfetto ignores it); JSONL carries a ``meta``
+    line plus one ``request`` record per traced request."""
+    with open(path) as fh:
+        if path.endswith(".jsonl"):
+            latency, phases, requests = {}, {}, []
+            for line in fh:
+                rec = json.loads(line)
+                if rec.get("type") == "meta":
+                    latency = rec.get("latency", {})
+                    phases = rec.get("phases", {})
+                elif rec.get("type") == "request":
+                    requests.append(rec)
+            return {"latency": latency, "phases": phases,
+                    "requests": requests}
+        doc = json.load(fh)
+    repro = doc.get("repro")
+    if repro is None:
+        raise SystemExit(
+            f"{path}: no 'repro' summary key — not a trace written by this "
+            "repo's Tracer (see docs/observability.md)")
+    return repro
+
+
+def _ms(x) -> str:
+    return "—" if x is None else f"{1e3 * x:.1f}"
+
+
+def trace_report(doc: dict) -> str:
+    reqs = doc.get("requests", [])
+    lat = doc.get("latency", {})
+    ph = doc.get("phases", {})
+    done = sum(1 for r in reqs if not r.get("rejected"))
+    npre = sum(r.get("n_preempted", 0) for r in reqs)
+    ntok = sum(r.get("n_tokens", 0) for r in reqs)
+    out = [f"# Serving trace: {len(reqs)} requests "
+           f"({done} accepted, {len(reqs) - done} rejected), "
+           f"{ntok} tokens, {npre} preemptions",
+           "",
+           "## Latency percentiles (ms)",
+           "",
+           "| stat | count | mean | p50 | p95 | p99 | max |",
+           "|---|---|---|---|---|---|---|"]
+    for stat in ("queue_s", "ttft_s", "tpot_s", "itl_s", "e2e_s"):
+        s = lat.get(stat)
+        if not s:
+            continue
+        out.append(f"| {stat[:-2]} | {s['count']} | {_ms(s['mean'])} | "
+                   f"{_ms(s['p50'])} | {_ms(s['p95'])} | {_ms(s['p99'])} | "
+                   f"{_ms(s['max'])} |")
+    if ph:
+        out += ["", f"## Step phases ({ph.get('n_steps', 0)} engine steps, "
+                    f"{ph.get('wall_s', 0):.3f}s wall)",
+                "",
+                "| phase | total s | mean ms/step |",
+                "|---|---|---|"]
+        means = ph.get("per_step_mean_s", {})
+        for k, v in sorted(ph.get("total_s", {}).items()):
+            out.append(f"| {k} | {v:.4f} | {_ms(means.get(k))} |")
+    if reqs:
+        out += ["", "## Requests", "",
+                "| uid | prompt | shared | tokens | preempts | "
+                "queue ms | ttft ms | tpot ms | e2e ms |",
+                "|---|---|---|---|---|---|---|---|---|"]
+        for r in reqs:
+            if r.get("rejected"):
+                out.append(f"| {r['uid']} | {r['prompt_len']} | — | — | — | "
+                           "rejected | | | |")
+                continue
+            out.append(
+                f"| {r['uid']} | {r['prompt_len']} | "
+                f"{r.get('shared_tokens', 0)} | {r.get('n_tokens', 0)} | "
+                f"{r.get('n_preempted', 0)} | {_ms(r.get('queue_s'))} | "
+                f"{_ms(r.get('ttft_s'))} | {_ms(r.get('tpot_s'))} | "
+                f"{_ms(r.get('e2e_s'))} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0].startswith("-"):
+        argv.insert(0, "roofline")   # legacy CLI: roofline was the only mode
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dir", default="results/dryrun")
-    ap.add_argument("--multi-pod", action="store_true")
-    args = ap.parse_args()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ap_roof = sub.add_parser("roofline", help="dry-run roofline table")
+    ap_roof.add_argument("--dir", default="results/dryrun")
+    ap_roof.add_argument("--multi-pod", action="store_true")
+    ap_trace = sub.add_parser("trace", help="serving-trace report")
+    ap_trace.add_argument("file", help="trace.json / trace.jsonl from "
+                                       "serve --trace-out or the serving "
+                                       "benchmark")
+    args = ap.parse_args(argv)
+    if args.cmd == "trace":
+        print(trace_report(load_trace(args.file)))
+        return
     rows = load(args.dir, args.multi_pod)
     print(table(rows))
     print()

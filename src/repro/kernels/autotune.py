@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import packing
+from repro.obs import metrics as obs_metrics
 from . import registry
 
 # ops the tuner can synthesize operands for (the dense serving routes)
@@ -93,8 +94,8 @@ def tune(
     """Search the op's tile space for one problem; returns the fastest
     (bm, bn, bk) or None when blocks are irrelevant ('ref' backend / no
     Pallas impl / no tile space). Memoised through ``cache`` so repeated
-    layer shapes tune once. Dispatch counters are snapshot-restored — the
-    tuner's probe traces never leak into serving gates."""
+    layer shapes tune once. Probe traces run under an isolated metrics
+    scope — the tuner's dispatches never leak into serving gates."""
     key = (op_name, int(m), int(k), int(n), int(bits),
            int(group_size or 0))
     if cache is not None and key in cache:
@@ -105,8 +106,7 @@ def tune(
     if b != "ref" and op.pallas is not None and op.tile_space is not None:
         args, static = _synth_args(op_name, m, k, n, bits=bits,
                                    a_bits=a_bits, group_size=group_size)
-        saved = dict(registry.DISPATCH_COUNTS)
-        try:
+        with obs_metrics.scoped(isolate=True):
             best_t = None
             for blk in op.tile_space(m, k, n, static):
                 fn = jax.jit(lambda *xs, _blk=blk: registry.dispatch(
@@ -114,9 +114,6 @@ def tune(
                 t = _time_once(fn, args, iters)
                 if best_t is None or t < best_t:
                     best_t, result = t, tuple(int(v) for v in blk)
-        finally:
-            registry.DISPATCH_COUNTS.clear()
-            registry.DISPATCH_COUNTS.update(saved)
     if cache is not None:
         cache[key] = result
     return result

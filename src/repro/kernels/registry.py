@@ -22,9 +22,13 @@ before calling the impl.
 
 Backends (same contract as the old wrappers):
   'ref' | 'pallas_interpret' | 'pallas' | 'auto' (pallas on TPU else
-  interpret). Every dispatch bumps ``DISPATCH_COUNTS`` at trace time with
-  ``name`` and ``name:backend`` keys, so tests and the CI serving gate can
-  assert a planned model actually reached its kernel route.
+  interpret). Every dispatch records a trace-time
+  ``kernel_dispatch_total{op,backend,m_bucket,bits}`` counter into the
+  repro.obs metrics registry stack, so tests and the CI serving gate can
+  assert a planned model actually reached its kernel route — scoped reads
+  via ``obs.metrics.scoped()`` replace the old global snapshot/reset dance
+  (``dispatch_counts``/``reset_dispatch_counts`` remain as deprecation
+  shims over the global registry).
 
 QuantPlan's ``kernel`` route field resolves to a registry name — registering
 a new KernelOp is all it takes to give a plan a new route (the bit-sliced
@@ -34,6 +38,7 @@ a new KernelOp is all it takes to give a plan a new route (the bit-sliced
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import Counter
 from typing import Any, Callable
 
@@ -42,6 +47,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.lut import ProductLUT
 from repro.dist import sharding as dsh
+from repro.obs import metrics as obs_metrics
 from . import ref as _ref
 from .lut_gemm import lut_gemm_pallas
 from .lut_gemm_bitsliced import lut_gemm_bitsliced_pallas
@@ -51,21 +57,42 @@ from .expert_dequant_matmul import (expert_dequant_matmul_pallas,
 from .kv_cache_attention import kv_cache_attention_pallas
 from .paged_attention import paged_attention_pallas
 
+# Legacy mirror of the global registry's kernel-dispatch view. Kept only so
+# pre-PR 7 callers holding a reference keep seeing live counts; it mirrors
+# the PROCESS-GLOBAL registry exactly (an obs.metrics.scoped(isolate=True)
+# block hides its dispatches from both). New code reads the metrics
+# registry instead.
 DISPATCH_COUNTS: Counter = Counter()
+
+_DEPRECATION = ("kernels.registry.{} is deprecated; use repro.obs.metrics "
+                "(scoped() for isolated reads, "
+                "global_registry().dispatch_counts() for the process view)")
 
 
 def reset_dispatch_counts() -> None:
+    """Deprecated: clears the process-global kernel-dispatch counters.
+    Prefer ``with obs.metrics.scoped(): ...`` — an isolated read needs no
+    reset and cannot race other tests."""
+    warnings.warn(_DEPRECATION.format("reset_dispatch_counts"),
+                  DeprecationWarning, stacklevel=2)
+    obs_metrics.global_registry().clear(obs_metrics.KERNEL_DISPATCH)
     DISPATCH_COUNTS.clear()
 
 
 def dispatch_counts() -> dict:
-    """Snapshot of per-op (and per-op:backend) trace-time dispatch counts."""
-    return dict(DISPATCH_COUNTS)
+    """Deprecated: per-op (and per-op:backend) trace-time dispatch counts
+    from the PROCESS-GLOBAL metrics registry, in the legacy
+    ``{op: n, "op:backend": n}`` shape."""
+    warnings.warn(_DEPRECATION.format("dispatch_counts"),
+                  DeprecationWarning, stacklevel=2)
+    return obs_metrics.global_registry().dispatch_counts()
 
 
-def _count(op: str, backend: str) -> None:
-    DISPATCH_COUNTS[op] += 1
-    DISPATCH_COUNTS[f"{op}:{backend}"] += 1
+def _count(op: str, backend: str, m=None, bits=None) -> None:
+    obs_metrics.record_kernel_dispatch(op, backend, m=m, bits=bits)
+    if obs_metrics.global_active():
+        DISPATCH_COUNTS[op] += 1
+        DISPATCH_COUNTS[f"{op}:{backend}"] += 1
 
 
 def _on_tpu() -> bool:
@@ -137,7 +164,9 @@ def dispatch(
     ``block`` overrides the Pallas (bm, bn, bk) tile — ignored by 'ref'."""
     op = get(name)
     b = resolve_backend(backend)
-    _count(op.name, b)
+    m = next((int(x.shape[0]) for x in arrays
+              if x is not None and getattr(x, "ndim", 0) >= 2), None)
+    _count(op.name, b, m=m, bits=static.get("w_bits", static.get("bits")))
     blk = {}
     if block is not None and b != "ref" and op.pallas is not None:
         blk = dict(bm=block[0], bn=block[1], bk=block[2])

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -46,6 +47,7 @@ from repro.kernels import registry as kops
 from repro.models import lm, frontends
 from repro.launch import steps as St
 from repro.launch.mesh import make_tp_mesh
+from repro.obs import Tracer, metrics as obs_metrics
 from repro.serving import Engine, Request
 
 
@@ -88,6 +90,15 @@ def validate_args(args, cfg) -> None:
             "--a-scale static is incompatible with --plan legacy: the "
             "legacy dequant-einsum forward has no activation quantization "
             "to calibrate a scale for")
+    if args.trace_out and not args.paged:
+        raise ValueError(
+            "--trace-out requires --paged: request-lifecycle tracing hooks "
+            "into the paged engine's scheduling loop (the fixed-batch loop "
+            "has no per-request lifecycle to trace)")
+    if args.metrics_out and not args.paged:
+        raise ValueError(
+            "--metrics-out requires --paged: the metrics snapshot is the "
+            "paged engine's per-engine registry (docs/observability.md)")
     if args.tp < 1:
         raise ValueError(f"--tp must be >= 1, got {args.tp}")
     if args.tp > 1:
@@ -105,11 +116,13 @@ def serve_paged(cfg, qparams, args, mesh=None) -> int:
     key = jax.random.PRNGKey(args.seed)
     max_len = args.prompt_len + args.gen + args.block_size
     max_len = -(-max_len // args.block_size) * args.block_size
+    tracer = Tracer() if args.trace_out else None
     engine = Engine(cfg, qparams, n_slots=args.batch, max_len=max_len,
                     block_size=args.block_size, max_queue=args.max_queue,
                     prefill=args.prefill,
                     prefix_cache=args.prefix_cache,
-                    prefill_batch=args.prefill_batch, mesh=mesh)
+                    prefill_batch=args.prefill_batch, mesh=mesh,
+                    tracer=tracer)
     if mesh is not None:
         print(f"  tensor-parallel over {mesh.shape['model']} devices: "
               f"{engine.per_device_weight_bytes()/1e3:.1f} KB weights "
@@ -154,9 +167,37 @@ def serve_paged(cfg, qparams, args, mesh=None) -> int:
               f"tokens attached from cache "
               f"({m['prefix_cache']['cached_blocks']} blocks cached, "
               f"{m['prefix_cache']['evictions']} evictions)")
-    counts = {k: v for k, v in kops.dispatch_counts().items() if ":" not in k}
+    counts = {k: v for k, v in m["metrics"]["counters"].items()
+              if k.startswith("kernel_dispatch_total")}
     if counts:
-        print(f"  kernel dispatches (trace-time): {counts}")
+        ops = {}
+        for k, v in counts.items():
+            op = dict(p.split("=", 1) for p in
+                      k[k.index("{") + 1:-1].split(","))["op"]
+            ops[op] = ops.get(op, 0) + int(v)
+        print(f"  kernel dispatches (trace-time): {ops}")
+    if tracer is not None:
+        lat = tracer.latency_summary()
+        ph = tracer.phase_summary()
+
+        def p(stat):
+            s = lat[stat]
+            if not s["count"]:
+                return f"{stat}: n/a"
+            return (f"{stat} p50/p95/p99 {1e3*s['p50']:.0f}/"
+                    f"{1e3*s['p95']:.0f}/{1e3*s['p99']:.0f} ms")
+        print(f"  latency: {p('ttft_s')} | {p('tpot_s')}")
+        tot = ph["total_s"]
+        print("  phases (s): " + ", ".join(
+            f"{k}={tot[k]:.3f}" for k in sorted(tot)))
+        tracer.export(args.trace_out)
+        kind = ("JSONL" if args.trace_out.endswith(".jsonl")
+                else "chrome trace; load in ui.perfetto.dev")
+        print(f"  trace written to {args.trace_out} ({kind})")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fh:
+            json.dump(m, fh, indent=1, default=float)
+        print(f"  metrics snapshot written to {args.metrics_out}")
     return 0
 
 
@@ -202,6 +243,14 @@ def main():
                     help="tensor-parallel degree: serve over a (tp,)-device "
                          "'model' mesh (--paged; weights, LUT kernels and "
                          "the paged KV pool shard over the mesh)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the request-lifecycle + step-phase trace "
+                         "here after the run (--paged): .jsonl for line-"
+                         "delimited records, anything else for Chrome "
+                         "trace JSON (Perfetto-loadable)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the engine metrics()/registry snapshot as "
+                         "JSON here after the run (--paged)")
     ap.add_argument("--a-scale", default="dynamic",
                     choices=("dynamic", "static"),
                     help="w{b}a{b} activation scales: dynamic per-token "
@@ -259,7 +308,8 @@ def main():
               f"{args.calib_batches} batches in {time.time()-t0:.2f}s")
 
     t0 = time.time()
-    kops.reset_dispatch_counts()
+    obs_metrics.global_registry().clear(obs_metrics.KERNEL_DISPATCH)
+    kops.DISPATCH_COUNTS.clear()   # keep the legacy mirror in step
     qparams = jax.jit(lambda p: lm.quantize_tree(
         p, cfg, tp=args.tp, act_scales=act_scales))(params)
     qparams = jax.block_until_ready(qparams)
@@ -313,7 +363,9 @@ def main():
           f"({n_tok/max(t_dec,1e-9):.1f} tok/s)")
     gen = jnp.stack(out_tokens, axis=1)
     print(f"  sample generation (batch 0): {gen[0].tolist()}")
-    counts = {k: v for k, v in kops.dispatch_counts().items() if ":" not in k}
+    counts = {k: v for k, v
+              in obs_metrics.global_registry().dispatch_counts().items()
+              if ":" not in k}
     if counts:
         print(f"  kernel dispatches (trace-time): {counts}")
     return 0

@@ -1,0 +1,20 @@
+"""repro.obs — serving-stack observability.
+
+Host-side, jax-free instrumentation for the serving engine and the kernel
+registry:
+
+  metrics   unified labeled counters/gauges/histograms with a scoped
+            registry stack (MetricsRegistry, scoped, global_registry,
+            record_kernel_dispatch, percentile)
+  trace     per-request lifecycle spans + engine step-phase timeline with
+            an injectable clock, exportable as JSONL and Chrome-trace JSON
+            (Tracer, FakeClock)
+
+See docs/observability.md for metric names, the span schema, and how to
+open the exported traces in Perfetto.
+"""
+
+from . import metrics  # noqa: F401
+from .metrics import (MetricsRegistry, global_registry,  # noqa: F401
+                      percentile, record_kernel_dispatch, scoped, summarize)
+from .trace import FakeClock, Span, Tracer  # noqa: F401

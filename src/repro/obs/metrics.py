@@ -1,0 +1,293 @@
+"""Unified metrics registry: labeled counters, gauges, and histograms.
+
+One `MetricsRegistry` holds three metric families, all keyed by
+``(name, sorted-label-items)``:
+
+  counters    monotonically increasing ints/floats (``inc``); the engine's
+              step/preemption/token counters and the kernel-dispatch
+              counters live here
+  gauges      last-value-wins samples (``set_gauge``); per-step pool
+              occupancy, queue depth, jit cache entries
+  histograms  raw observation lists (``observe``) summarized to
+              count/sum/min/max/p50/p95/p99 at ``snapshot()`` time;
+              latencies and compile times live here
+
+Everything is host-side pure Python — this module never imports jax, so
+recording a metric can never trace, allocate device memory, or add a jit
+cache entry.
+
+Scoped recording (the test-ordering fix)
+----------------------------------------
+
+The PR 6 kernel registry kept one process-global ``Counter`` that tests and
+benchmarks snapshot/reset ad hoc — two tests touching it in the wrong order
+corrupt each other's reads, and the autotuner had to save/restore the whole
+dict around its probe traces. The replacement is a *stack* of registries:
+
+  * ``global_registry()`` is the always-on process base (CLI printouts,
+    long-lived engines);
+  * ``with scoped() as reg:`` pushes a fresh registry — records land in
+    ``reg`` AND everything below it, so a test reads its own isolated
+    counts without resetting anybody else's;
+  * ``with scoped(isolate=True) as reg:`` additionally stops propagation —
+    records land ONLY in ``reg``. The autotuner runs its probe traces under
+    this, so tuning can never leak dispatch counts into serving gates.
+
+``record_kernel_dispatch`` is the one schema-owning entry point for kernel
+dispatch counts: one ``kernel_dispatch_total`` counter with labels
+``op`` / ``backend`` / ``m_bucket`` / ``bits``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any, Iterator, Optional
+
+# --------------------------------------------------------------------------- #
+# percentile math (pure python; matches numpy's default 'linear' method)
+# --------------------------------------------------------------------------- #
+
+
+def percentile(values, q: float) -> Optional[float]:
+    """q-th percentile (0..100) by linear interpolation between closest
+    ranks — the same convention as ``numpy.percentile(..., method='linear')``.
+    Returns None for an empty input."""
+    xs = sorted(float(v) for v in values)
+    if not xs:
+        return None
+    if len(xs) == 1:
+        return xs[0]
+    rank = (q / 100.0) * (len(xs) - 1)
+    lo = math.floor(rank)
+    hi = math.ceil(rank)
+    if lo == hi:
+        return xs[int(rank)]
+    frac = rank - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def summarize(values) -> dict:
+    """count/mean/min/max/p50/p95/p99 summary of raw observations (the
+    histogram snapshot form; all-None fields for an empty series)."""
+    xs = [float(v) for v in values]
+    if not xs:
+        return {"count": 0, "mean": None, "min": None, "max": None,
+                "p50": None, "p95": None, "p99": None}
+    return {
+        "count": len(xs),
+        "mean": sum(xs) / len(xs),
+        "min": min(xs),
+        "max": max(xs),
+        "p50": percentile(xs, 50),
+        "p95": percentile(xs, 95),
+        "p99": percentile(xs, 99),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# the registry
+# --------------------------------------------------------------------------- #
+
+_Key = tuple  # (name, ((label, value), ...))
+
+
+def _key(name: str, labels: dict) -> _Key:
+    return (name, tuple(sorted((str(k), str(v)) for k, v in labels.items())))
+
+
+def _fmt_key(key: _Key) -> str:
+    name, labels = key
+    if not labels:
+        return name
+    return name + "{" + ",".join(f"{k}={v}" for k, v in labels) + "}"
+
+
+class MetricsRegistry:
+    """Labeled counters / gauges / histograms (see module docstring)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: dict[_Key, float] = {}
+        self._gauges: dict[_Key, Any] = {}
+        self._hists: dict[_Key, list] = {}
+
+    # -- write side ------------------------------------------------------- #
+
+    def inc(self, name: str, value: float = 1, **labels) -> None:
+        k = _key(name, labels)
+        with self._lock:
+            self._counters[k] = self._counters.get(k, 0) + value
+
+    def set_counter(self, name: str, value: float, **labels) -> None:
+        """Overwrite a counter (benchmark window resets; prefer ``inc``)."""
+        with self._lock:
+            self._counters[_key(name, labels)] = value
+
+    def set_gauge(self, name: str, value, **labels) -> None:
+        with self._lock:
+            self._gauges[_key(name, labels)] = value
+
+    def observe(self, name: str, value: float, **labels) -> None:
+        k = _key(name, labels)
+        with self._lock:
+            self._hists.setdefault(k, []).append(float(value))
+
+    # -- read side -------------------------------------------------------- #
+
+    def get(self, name: str, default: float = 0, **labels) -> float:
+        return self._counters.get(_key(name, labels), default)
+
+    def counter_total(self, name: str, **labels) -> float:
+        """Sum of a counter over all label sets matching ``labels``."""
+        want = set((str(k), str(v)) for k, v in labels.items())
+        return sum(v for (n, ls), v in self._counters.items()
+                   if n == name and want <= set(ls))
+
+    def gauge(self, name: str, default=None, **labels):
+        return self._gauges.get(_key(name, labels), default)
+
+    def observations(self, name: str, **labels) -> list:
+        return list(self._hists.get(_key(name, labels), ()))
+
+    def label_values(self, name: str, label: str) -> list[str]:
+        out = []
+        for (n, ls) in self._counters:
+            if n != name:
+                continue
+            for k, v in ls:
+                if k == label and v not in out:
+                    out.append(v)
+        return sorted(out)
+
+    def snapshot(self) -> dict:
+        """JSON-ready view: flat ``name{k=v,...}`` keys; histograms become
+        count/mean/min/max/p50/p95/p99 summaries."""
+        with self._lock:
+            return {
+                "counters": {_fmt_key(k): v
+                             for k, v in sorted(self._counters.items())},
+                "gauges": {_fmt_key(k): v
+                           for k, v in sorted(self._gauges.items())},
+                "histograms": {_fmt_key(k): summarize(v)
+                               for k, v in sorted(self._hists.items())},
+            }
+
+    # -- legacy kernel-dispatch view -------------------------------------- #
+
+    def dispatch_counts(self) -> dict:
+        """The PR 6 ``{op: n, "op:backend": n}`` dict shape, reconstructed
+        from the labeled ``kernel_dispatch_total`` counter (the deprecation
+        shims in kernels/registry.py and old callers read this)."""
+        out: dict[str, int] = {}
+        for (name, ls), v in self._counters.items():
+            if name != KERNEL_DISPATCH:
+                continue
+            d = dict(ls)
+            op, backend = d.get("op"), d.get("backend")
+            if op is None:
+                continue
+            out[op] = out.get(op, 0) + int(v)
+            if backend is not None:
+                key = f"{op}:{backend}"
+                out[key] = out.get(key, 0) + int(v)
+        return out
+
+    def clear(self, name: Optional[str] = None) -> None:
+        """Drop metrics (all, or only those named ``name``)."""
+        with self._lock:
+            if name is None:
+                self._counters.clear()
+                self._gauges.clear()
+                self._hists.clear()
+                return
+            for store in (self._counters, self._gauges, self._hists):
+                for k in [k for k in store if k[0] == name]:
+                    del store[k]
+
+
+# --------------------------------------------------------------------------- #
+# registry stack
+# --------------------------------------------------------------------------- #
+
+_GLOBAL = MetricsRegistry()
+_STACK: list[tuple[MetricsRegistry, bool]] = []   # (registry, isolate)
+
+
+def global_registry() -> MetricsRegistry:
+    return _GLOBAL
+
+
+def active_registries() -> Iterator[MetricsRegistry]:
+    """Registries a record lands in: innermost scope outward, stopping at
+    (and including) the first ``isolate=True`` scope, else down to the
+    process-global base."""
+    for reg, isolate in reversed(_STACK):
+        yield reg
+        if isolate:
+            return
+    yield _GLOBAL
+
+
+def global_active() -> bool:
+    """True when records propagate down to the process-global registry
+    (i.e. no ``isolate=True`` scope is on the stack)."""
+    return not any(isolate for _, isolate in _STACK)
+
+
+@contextlib.contextmanager
+def scoped(isolate: bool = False, registry: MetricsRegistry | None = None):
+    """Push a registry for the duration of the block (see module
+    docstring). Yields the scoped registry — a fresh one by default; pass
+    ``registry=`` to route the block's records into an existing registry
+    (e.g. an engine scoping its jitted calls onto its own ``obs``)."""
+    reg = MetricsRegistry() if registry is None else registry
+    _STACK.append((reg, isolate))
+    try:
+        yield reg
+    finally:
+        _STACK.pop()
+
+
+def inc(name: str, value: float = 1, **labels) -> None:
+    for reg in active_registries():
+        reg.inc(name, value, **labels)
+
+
+def set_gauge(name: str, value, **labels) -> None:
+    for reg in active_registries():
+        reg.set_gauge(name, value, **labels)
+
+
+def observe(name: str, value: float, **labels) -> None:
+    for reg in active_registries():
+        reg.observe(name, value, **labels)
+
+
+# --------------------------------------------------------------------------- #
+# kernel-dispatch schema
+# --------------------------------------------------------------------------- #
+
+KERNEL_DISPATCH = "kernel_dispatch_total"
+
+
+def m_bucket(m: Optional[int]) -> str:
+    """Token-row-count bucket label: exact for decode shapes (m <= 8, where
+    the GEMV specialization and the autotuner's tune= buckets live), power-
+    of-two ``le{N}`` above that, ``na`` when the op has no row dim."""
+    if m is None:
+        return "na"
+    m = int(m)
+    if m <= 8:
+        return str(m)
+    return f"le{1 << (m - 1).bit_length()}"
+
+
+def record_kernel_dispatch(op: str, backend: str, *,
+                           m: Optional[int] = None,
+                           bits: Optional[int] = None) -> None:
+    """One trace-time kernel dispatch: counted per (op, backend, m-bucket,
+    bits) into every active registry."""
+    inc(KERNEL_DISPATCH, op=op, backend=backend, m_bucket=m_bucket(m),
+        bits="na" if bits is None else str(bits))

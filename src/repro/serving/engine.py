@@ -59,12 +59,21 @@ points move with the chunking).
 whole-prompt forward per request, recompiling per prompt length); the
 ContinuousBatcher shim uses it to stay bit-identical to the pre-paged
 scheduler. `prefill="chunked"` is the default and the fast path.
+
+Observability (docs/observability.md): every counter lives in a PER-ENGINE
+metrics registry (``engine.obs``, snapshot in ``metrics()["metrics"]``),
+and an optional ``tracer`` records request lifecycle spans (queued ->
+prefill -> decode, preemption events) plus a per-step phase timeline with
+pool/queue gauges. All instrumentation runs in the host scheduling loop,
+strictly outside the jit'd step functions — tracing adds zero jit cache
+entries and cannot perturb the token stream (guard-tested).
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from collections import deque
 from typing import Callable, Optional
 
@@ -74,6 +83,8 @@ import numpy as np
 
 from repro.dist import sharding as Sh
 from repro.models import lm
+from repro.obs import metrics as obs_metrics
+from repro.obs.metrics import MetricsRegistry
 from . import cache as C
 from .radix import RadixCache
 
@@ -116,6 +127,20 @@ class Request:
 _FREE, _PREFILL, _DECODE = 0, 1, 2
 
 
+def _counter(metric: str, doc: str):
+    """Engine counter attribute backed by the per-engine metrics registry
+    (``engine.obs``): reads/writes hit one counter, so ``metrics()``
+    snapshots and benchmark-window resets (``eng.steps = 0``) stay in
+    sync with the registry by construction."""
+    def _get(self) -> int:
+        return int(self.obs.get(metric))
+
+    def _set(self, v: int) -> None:
+        self.obs.set_counter(metric, v)
+
+    return property(_get, _set, doc=doc)
+
+
 @dataclasses.dataclass
 class _Slot:
     req: Optional[Request] = None
@@ -152,6 +177,11 @@ class Engine:
                      attention-only archs; silently disabled otherwise)
       sample         logits (n_slots, V) f32 -> next token ids (n_slots,);
                      default greedy argmax
+      tracer         optional repro.obs.Tracer: per-request lifecycle spans
+                     + a per-step phase timeline, recorded from the host
+                     scheduling loop only (never inside the jit'd steps; no
+                     new jit entries, token stream unchanged). None
+                     (default): every hook is one `is None` check.
       mesh           optional jax Mesh with a "model" axis: the engine runs
                      TENSOR-PARALLEL over it. Parameters are placed sharded
                      (dist.sharding.param_specs — packed codes/scales along
@@ -177,7 +207,7 @@ class Engine:
                  prefill: str = "chunked", prefill_batch: int = 1,
                  prefix_cache: bool = False,
                  sample: Optional[Callable] = None,
-                 mesh=None, rules="serve_tp"):
+                 tracer=None, mesh=None, rules="serve_tp"):
         if cfg.is_encdec:
             raise NotImplementedError("engine: encoder-decoder serving")
         if cfg.mrope_sections or cfg.n_vision_tokens:
@@ -244,17 +274,68 @@ class Engine:
                                       donate_argnums=(0,))
         self._reset = jax.jit(C.reset_slot, donate_argnums=(0,))
 
-        # counters
-        self.steps = 0                 # engine steps (admit+prefill+decode)
-        self.decode_steps = 0
-        self.prefill_chunks = 0        # chunk launches (a batched launch is 1)
-        self.busy_slot_steps = 0
-        self.preemptions = 0
-        self.rejections = 0
-        self.prefill_tokens_computed = 0   # real prompt rows run through prefill
-        self.prefill_tokens_shared = 0     # prompt rows attached from the radix
+        # observability: a per-engine metrics registry backs every counter
+        # attribute below (no process-global state — two engines never see
+        # each other's counts), plus an optional lifecycle/timeline tracer
+        self.obs = MetricsRegistry()
+        self.tracer = tracer
         self._admit_counter = 0
         self._pf_rr = 0
+
+    # counters (engine.obs-backed; see _counter)
+    steps = _counter("engine_steps",
+                     "engine steps (admit+prefill+decode)")
+    decode_steps = _counter("engine_decode_steps", "batched decode steps")
+    prefill_chunks = _counter(
+        "engine_prefill_chunks",
+        "prefill chunk launches (a batched launch is 1)")
+    busy_slot_steps = _counter("engine_busy_slot_steps",
+                               "sum over decode steps of active slots")
+    preemptions = _counter("engine_preemptions", "slots evicted + requeued")
+    rejections = _counter("engine_rejections", "admissions refused")
+    prefill_tokens_computed = _counter(
+        "engine_prefill_tokens_computed",
+        "real prompt rows run through prefill")
+    prefill_tokens_shared = _counter(
+        "engine_prefill_tokens_shared",
+        "prompt rows attached from the radix cache")
+
+    def attach_tracer(self, tracer) -> None:
+        """Attach (or swap) the lifecycle tracer after construction — e.g.
+        after an untraced warmup, so the trace covers only the measured
+        window."""
+        self.tracer = tracer
+
+    _NULL_CTX = contextlib.nullcontext()     # stateless, safe to share
+
+    def _phase(self, name: str):
+        """Tracer phase context for the host scheduling loop (no-op without
+        a tracer)."""
+        tr = self.tracer
+        return tr.phase(name) if tr is not None else Engine._NULL_CTX
+
+    def _run_jit(self, name: str, fn, *args):
+        """Call a jit'd step function, tracking cache growth: the call that
+        adds a cache entry is the one that paid trace+lower+compile, so its
+        wall time is recorded as a compile event (per-fn counter + histogram
+        in ``obs``, a ``compile:<fn>`` sub-slice in the step timeline). The
+        call runs with ``obs`` pushed as a metrics scope so trace-time
+        kernel dispatch counters land in this engine's snapshot too."""
+        try:
+            before = int(fn._cache_size())
+        except AttributeError:
+            before = None
+        tr = self.tracer
+        t0 = tr.now() if tr is not None else time.perf_counter()
+        with obs_metrics.scoped(registry=self.obs):
+            out = fn(*args)
+        if before is not None and int(fn._cache_size()) > before:
+            t1 = tr.now() if tr is not None else time.perf_counter()
+            self.obs.inc("jit_compiles_total", fn=name)
+            self.obs.observe("jit_compile_s", t1 - t0, fn=name)
+            if tr is not None:
+                tr.add_slice(f"compile:{name}", t0, t1)
+        return out
 
     # ---------------- jit'd step functions ----------------
 
@@ -343,8 +424,12 @@ class Engine:
                 or self._max_blocks_needed(P, req.max_new) > self.n_blocks - 1:
             req.rejected = True
             self.rejections += 1
+            if self.tracer is not None:
+                self.tracer.on_reject(req.uid, P)
             return False
         self.queue.append(req)
+        if self.tracer is not None:
+            self.tracer.on_submit(req.uid, P)
         return True
 
     def _table_row(self, slot: _Slot) -> np.ndarray:
@@ -372,6 +457,8 @@ class Engine:
             self.pool.free(s.blocks)
         self.slots[ix] = _Slot()
         self.queue.appendleft(req)
+        if self.tracer is not None:
+            self.tracer.on_preempt(req.uid)
 
     def _make_room(self, n: int, requester_ix: int) -> bool:
         """Free blocks until n are available: LRU-evict unreferenced radix-
@@ -379,12 +466,16 @@ class Engine:
         victims. Returns False if the requester itself was evicted (it is
         the lowest-priority occupant)."""
         while self.pool.n_free < n:
-            if self.radix is not None and self.radix.evict_one():
-                continue
+            if self.radix is not None:
+                with self._phase("evict"):
+                    evicted = self.radix.evict_one()
+                if evicted:
+                    continue
             victim = self._pick_victim()
             if victim is None:
                 return False
-            self._preempt(victim)
+            with self._phase("preempt"):
+                self._preempt(victim)
             if victim == requester_ix:
                 return False
         return True
@@ -415,10 +506,11 @@ class Engine:
                 shared = self.radix.match(eff_prompt)
             m = len(shared) * self.block_size
             first_blocks = self._first_alloc_size(P, m)
-            while self.radix is not None \
-                    and first_blocks > self.pool.n_free \
-                    and self.radix.evict_one():
-                pass                         # eviction racing admission
+            while self.radix is not None and first_blocks > self.pool.n_free:
+                with self._phase("evict"):   # eviction racing admission
+                    evicted = self.radix.evict_one()
+                if not evicted:
+                    break
             if first_blocks > self.pool.n_free:
                 if shared:
                     self.pool.free(shared)   # release the match's references
@@ -432,9 +524,12 @@ class Engine:
             slot = _Slot(req=req, prompt=eff_prompt, pos=0, prefill_done=m,
                          blocks=list(shared), admit_seq=self._admit_counter)
             self.slots[ix] = slot
+            if self.tracer is not None:
+                self.tracer.on_admit(req.uid, shared_tokens=m)
             if self._has_state:
-                self.caches = self._reset(self.caches,
-                                          jnp.asarray(ix, jnp.int32))
+                self.caches = self._run_jit(
+                    "reset_slot", self._reset, self.caches,
+                    jnp.asarray(ix, jnp.int32))
             if P == 0:
                 slot.state = _DECODE         # zero-block request
                 slot.next_input = 0
@@ -473,10 +568,16 @@ class Engine:
             if not self._make_room(need, ix):
                 return
             s.blocks += self.pool.alloc(need)
-        self.caches = self._prefill_whole(
+        tr = self.tracer
+        t0 = tr.now() if tr is not None else 0.0
+        self.caches = self._run_jit(
+            "prefill_whole", self._prefill_whole,
             self.caches, jnp.asarray(self._table_row(s)),
             jnp.asarray(s.prompt, jnp.int32)[None],
             jnp.asarray(ix, jnp.int32))
+        if tr is not None:
+            tr.on_prefill_chunk(s.req.uid, start=0, rows=P, t0=t0,
+                                t1=tr.now())
         self.prefill_tokens_computed += P
         s.state = _DECODE
         s.prefill_done = P
@@ -528,10 +629,16 @@ class Engine:
             return
         chunk, start, real = prep
         s = self.slots[ix]
-        self.caches = self._prefill_chunk(
+        tr = self.tracer
+        t0 = tr.now() if tr is not None else 0.0
+        self.caches = self._run_jit(
+            "prefill_chunk", self._prefill_chunk,
             self.caches, jnp.asarray(self._table_row(s)),
             jnp.asarray(chunk)[None],
             jnp.asarray(start, jnp.int32), jnp.asarray(ix, jnp.int32))
+        if tr is not None:
+            tr.on_prefill_chunk(s.req.uid, start=start, rows=real, t0=t0,
+                                t1=tr.now())
         self.prefill_chunks += 1
         self._finish_chunk(ix, real)
 
@@ -564,9 +671,17 @@ class Engine:
             tokens[j] = chunk
             starts[j] = start
             tables[j] = self._table_row(self.slots[ix])
-        self.caches = self._prefill_batched(
+        tr = self.tracer
+        t0 = tr.now() if tr is not None else 0.0
+        self.caches = self._run_jit(
+            "prefill_batched", self._prefill_batched,
             self.caches, jnp.asarray(tables), jnp.asarray(tokens),
             jnp.asarray(starts))
+        if tr is not None:
+            t1 = tr.now()
+            for ix, (chunk, start, real) in live:
+                tr.on_prefill_chunk(self.slots[ix].req.uid, start=start,
+                                    rows=real, t0=t0, t1=t1)
         self.prefill_chunks += 1
         for ix, (_, _, real) in live:
             self._finish_chunk(ix, real)
@@ -592,6 +707,8 @@ class Engine:
         if s.blocks:
             self.pool.free(s.blocks)
         self.slots[ix] = _Slot()
+        if self.tracer is not None:
+            self.tracer.on_finish(s.req.uid)
 
     def _do_decode(self):
         self._grow_for_decode()
@@ -609,7 +726,8 @@ class Engine:
             tables[i] = self._table_row(self.slots[i])
         mask = np.zeros((self.n_slots,), bool)
         mask[active] = True
-        self.caches, logits = self._decode(
+        self.caches, logits = self._run_jit(
+            "decode", self._decode,
             self.caches, jnp.asarray(tables), tokens, pos, jnp.asarray(mask))
         nxt = self.sample(logits)
 
@@ -625,6 +743,8 @@ class Engine:
             done = ((req.eos_id is not None and tok == req.eos_id)
                     or len(req.out) >= req.max_new
                     or s.pos >= self.max_len - 1)
+            if self.tracer is not None:
+                self.tracer.on_token(req.uid, tok, done)
             if req.on_token is not None:
                 req.on_token(tok, done)
             if done:
@@ -636,20 +756,32 @@ class Engine:
         """Admit, run one prefill chunk step (batched over up to
         prefill_batch requests), run one batched decode step. Returns the
         number of occupied slots. Streaming callbacks fire from inside this
-        call, in generation order."""
-        self._admit()
+        call, in generation order. With a tracer attached, the step is
+        decomposed into admit / prefill / decode phases (evict / preempt /
+        compile nested inside whichever triggered them) and pool/queue
+        gauges are sampled at step end."""
+        tr = self.tracer
+        if tr is not None:
+            tr.step_begin(self.steps)
+        with self._phase("admit"):
+            self._admit()
         prefilling = [i for i, s in enumerate(self.slots)
                       if s.state == _PREFILL]
         if prefilling:
             k = self._pf_rr % len(prefilling)
             self._pf_rr += 1
-            if self.prefill_batch > 1:
-                sel = (prefilling[k:] + prefilling[:k])[:self.prefill_batch]
-                self._do_prefill_batched(sel)
-            else:
-                self._do_prefill_chunk(prefilling[k])
-        self._do_decode()
+            with self._phase("prefill"):
+                if self.prefill_batch > 1:
+                    sel = (prefilling[k:]
+                           + prefilling[:k])[:self.prefill_batch]
+                    self._do_prefill_batched(sel)
+                else:
+                    self._do_prefill_chunk(prefilling[k])
+        with self._phase("decode"):
+            self._do_decode()
         self.steps += 1
+        if tr is not None:
+            tr.step_end(self._sample_gauges())
         return sum(s.state != _FREE for s in self.slots)
 
     def run(self, max_steps: int = 10_000) -> dict:
@@ -669,9 +801,37 @@ class Engine:
             for s in self.slots:        # resume hints point into the old tree
                 s.radix_node, s.radix_done = None, 0
 
+    def _sample_gauges(self, mirror: bool = False) -> dict:
+        """Per-step gauges: pool occupancy, tree-held blocks, scheduler
+        load, and the cumulative radix hit ratio. ``mirror=True`` also
+        writes them into ``obs`` as last-value gauges — done once at
+        ``metrics()`` time, not per step (six locked registry writes per
+        step were measurable against sub-ms step times)."""
+        free = self.pool.n_free
+        g = {
+            "free_blocks": free,
+            "used_blocks": self.n_blocks - 1 - free,
+            "tree_blocks": (self.radix.n_nodes
+                            if self.radix is not None else 0),
+            "active_slots": sum(s.state != _FREE for s in self.slots),
+            "queue_depth": len(self.queue),
+            "radix_hit_ratio": None,
+        }
+        if self.radix is not None:
+            seen = self.radix.hit_tokens + self.radix.miss_tokens
+            if seen:
+                g["radix_hit_ratio"] = self.radix.hit_tokens / seen
+        if mirror:
+            for k, v in g.items():
+                if v is not None:
+                    self.obs.set_gauge(k, v)
+        return g
+
     def metrics(self) -> dict:
         util = self.busy_slot_steps / max(self.decode_steps * self.n_slots, 1)
-        return {
+        self._sample_gauges(mirror=True)
+        self.obs.set_gauge("jit_cache_entries", self.n_compiles())
+        out = {
             "steps": self.decode_steps,
             "engine_steps": self.steps,
             "decode_steps": self.decode_steps,
@@ -684,7 +844,14 @@ class Engine:
             "prefix_cache": (self.radix.metrics()
                              if self.radix is not None else None),
             "n_compiles": self.n_compiles(),
+            # unified registry snapshot (counters above + compile tracking
+            # + last-sampled gauges), flat name{label=value} keys
+            "metrics": self.obs.snapshot(),
         }
+        if self.tracer is not None:
+            out["latency"] = self.tracer.latency_summary()
+            out["phases"] = self.tracer.phase_summary()
+        return out
 
     def per_device_weight_bytes(self) -> int:
         """Parameter bytes resident on ONE device (the first mesh device).

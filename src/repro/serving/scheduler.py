@@ -82,7 +82,8 @@ class ContinuousBatcher:
         return self.engine.step()
 
     def run(self, max_steps: int = 10_000) -> dict:
-        """Drain queue and slots; returns the legacy metrics subset
-        (``steps``, ``slot_utilization``)."""
-        m = self.engine.run(max_steps)
-        return {"steps": m["steps"], "slot_utilization": m["slot_utilization"]}
+        """Drain queue and slots; returns the engine's full ``metrics()``
+        dict (superset of the legacy ``steps``/``slot_utilization`` pair, so
+        dense-path benchmark rows report the real prefill/preemption
+        counters instead of nulls)."""
+        return self.engine.run(max_steps)

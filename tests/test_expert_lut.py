@@ -18,6 +18,7 @@ from repro.core.qlinear import QuantPolicy, QuantizedWeight, quantize_expert_wei
 from repro.kernels import registry as kops
 from repro.kernels import ref as R
 from repro.models import lm
+from repro.obs import metrics as obs_metrics
 
 
 def _codes(rng, shape, bits):
@@ -88,11 +89,11 @@ def test_moe_w2a2_dispatches_expert_lut_and_matches_ref():
     assert any(l.kernel == "lut_gemm" and l.a_bits is not None
                and l.packed.ndim >= 3 for l in leaves)
 
-    kops.reset_dispatch_counts()
-    h, _ = lm.forward(qparams, cfg, tokens)
-    logits = lm.logits_fn(qparams, cfg, h).astype(jnp.float32)
-    assert kops.dispatch_counts().get("expert_lut_gemm", 0) > 0, \
-        kops.dispatch_counts()
+    with obs_metrics.scoped() as reg:
+        h, _ = lm.forward(qparams, cfg, tokens)
+        logits = lm.logits_fn(qparams, cfg, h).astype(jnp.float32)
+    assert reg.dispatch_counts().get("expert_lut_gemm", 0) > 0, \
+        reg.dispatch_counts()
 
     ref_cfg = dataclasses.replace(
         cfg, quant=dataclasses.replace(plan, backend="ref"))
@@ -106,9 +107,9 @@ def test_moe_w2a2_grouped_expert_lut_matches_ref():
     plan = qplan.get_plan("w2a2g64")
     cfg, params, tokens = _moe_setup(plan)
     qparams = lm.quantize_tree(params, cfg)
-    kops.reset_dispatch_counts()
-    h, _ = lm.forward(qparams, cfg, tokens)
-    assert kops.dispatch_counts().get("expert_lut_gemm", 0) > 0
+    with obs_metrics.scoped() as reg:
+        h, _ = lm.forward(qparams, cfg, tokens)
+    assert reg.dispatch_counts().get("expert_lut_gemm", 0) > 0
     ref_cfg = dataclasses.replace(
         cfg, quant=dataclasses.replace(plan, backend="ref"))
     h2, _ = lm.forward(qparams, ref_cfg, tokens)

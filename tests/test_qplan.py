@@ -16,8 +16,8 @@ from repro.configs import get_config, reduce_for_smoke
 from repro.core import packing, qlinear, qplan
 from repro.core.qlinear import QuantPolicy, QuantizedWeight, dense_serve, \
     dequant_weight, quantize_expert_weight, quantize_weight
-from repro.kernels import registry as kops
 from repro.models import lm
+from repro.obs import metrics as obs_metrics
 
 KEY = jax.random.PRNGKey(0)
 
@@ -123,10 +123,10 @@ def test_mixed_expert_projection_plan_dispatches_per_leaf():
     for plan in (gate_only, updown_only):
         cfg = dataclasses.replace(cfg0, quant=plan)
         qp = lm.quantize_tree(params, cfg)
-        kops.reset_dispatch_counts()
-        h, _ = lm.forward(qp, cfg, tokens)
+        with obs_metrics.scoped() as reg:
+            h, _ = lm.forward(qp, cfg, tokens)
         assert bool(jnp.isfinite(h.astype(jnp.float32)).all())
-        assert kops.dispatch_counts().get("expert_dequant_matmul", 0) > 0
+        assert reg.dispatch_counts().get("expert_dequant_matmul", 0) > 0
 
 
 def test_make_plan_keeps_sensitive_layers_bf16():
@@ -236,8 +236,8 @@ def test_planned_dense_reaches_kernels_and_precomputes_tables():
     qp16 = lm.quantize_tree(params, cfg16)
 
     def trace(cfg, qp):
-        kops.reset_dispatch_counts()
-        with mock.patch.object(
+        with obs_metrics.scoped() as reg, \
+             mock.patch.object(
                 qlinear, "product_lut",
                 side_effect=AssertionError("product_lut in hot path")), \
              mock.patch.object(
@@ -245,7 +245,7 @@ def test_planned_dense_reaches_kernels_and_precomputes_tables():
                 side_effect=AssertionError("codebook built in hot path")):
             h = jax.jit(lambda p, t: lm.forward(p, cfg, t)[0])(qp, tokens)
         assert bool(jnp.isfinite(h.astype(jnp.float32)).all())
-        return kops.dispatch_counts()
+        return reg.dispatch_counts()
 
     c2 = trace(cfg2, qp2)
     assert c2.get("lut_gemm", 0) > 0 and c2.get("dequant_matmul", 0) == 0, c2
@@ -260,10 +260,10 @@ def test_legacy_policy_tree_keeps_dequant_einsum_path():
     assert isinstance(cfg.quant, QuantPolicy) and cfg.quant.kernel is None
     params = lm.init_params(KEY, cfg, mode="plain")
     qp = lm.quantize_tree(params, cfg)
-    kops.reset_dispatch_counts()
     tokens = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
-    lm.forward(qp, cfg, tokens)
-    assert kops.dispatch_counts() == {}
+    with obs_metrics.scoped() as reg:
+        lm.forward(qp, cfg, tokens)
+    assert reg.dispatch_counts() == {}
 
 
 def test_planned_w2a2_logits_match_ref_formulation():
@@ -296,9 +296,9 @@ def test_mixed_plan_assigns_bits_per_layer_class():
     assert blk["mlp"]["w_up"]["qw"].kernel == "lut_gemm"
     assert blk["mlp"]["w_up"]["qw"].plut is not None
     tokens = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
-    kops.reset_dispatch_counts()
-    h, _ = lm.forward(qp, cfg, tokens)
-    c = kops.dispatch_counts()
+    with obs_metrics.scoped() as reg:
+        h, _ = lm.forward(qp, cfg, tokens)
+    c = reg.dispatch_counts()
     assert c.get("lut_gemm", 0) > 0 and c.get("dequant_matmul", 0) > 0, c
     assert bool(jnp.isfinite(h.astype(jnp.float32)).all())
 
@@ -374,9 +374,9 @@ def test_engine_serves_planned_model_deterministically():
         assert all(r.done for r in reqs)
         return [r.out for r in reqs]
 
-    kops.reset_dispatch_counts()
-    out1 = run_once()
-    assert kops.dispatch_counts().get("lut_gemm", 0) > 0
+    with obs_metrics.scoped() as reg:
+        out1 = run_once()
+    assert reg.dispatch_counts().get("lut_gemm", 0) > 0
     out2 = run_once()
     assert out1 == out2        # token-deterministic run-to-run
 
@@ -400,9 +400,9 @@ def test_bitsliced_plan_packs_planes_and_dispatches():
     # (the subset-sum LUT is built from activation codes inside the kernel)
     assert all(q.packed.shape[-3] == 2 and q.plut is None for q in qws)
     tokens = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
-    kops.reset_dispatch_counts()
-    h, _ = lm.forward(qp, cfg, tokens)
-    c = kops.dispatch_counts()
+    with obs_metrics.scoped() as reg:
+        h, _ = lm.forward(qp, cfg, tokens)
+    c = reg.dispatch_counts()
     assert c.get("lut_gemm_bitsliced", 0) > 0 and c.get("lut_gemm", 0) == 0, c
     assert bool(jnp.isfinite(h.astype(jnp.float32)).all())
 

@@ -11,6 +11,7 @@ import pytest
 
 from repro.core import lut, packing, quant
 from repro.kernels import ops, ref, registry
+from repro.obs import metrics as obs_metrics
 
 RNG = np.random.default_rng(0)
 
@@ -42,13 +43,25 @@ def test_unknown_op_raises_with_listing():
 
 def test_dispatch_counts_name_and_backend():
     ap, wp, plut = _lut_case()
-    registry.reset_dispatch_counts()
-    registry.dispatch("lut_gemm", ap, wp, plut.table, None,
-                      w_bits=plut.w_bits, a_bits=plut.a_bits, backend="ref")
-    c = registry.dispatch_counts()
+    with obs_metrics.scoped() as reg:
+        registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                          w_bits=plut.w_bits, a_bits=plut.a_bits,
+                          backend="ref")
+    c = reg.dispatch_counts()
     assert c.get("lut_gemm") == 1 and c.get("lut_gemm:ref") == 1, c
-    registry.reset_dispatch_counts()
-    assert registry.dispatch_counts() == {}
+
+
+def test_dispatch_counter_labels():
+    """The registry records per-(op, backend, m-bucket, bits) labels on the
+    unified kernel_dispatch_total counter (docs/observability.md)."""
+    ap, wp, plut = _lut_case(M=4)
+    with obs_metrics.scoped() as reg:
+        registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                          w_bits=plut.w_bits, a_bits=plut.a_bits,
+                          backend="ref")
+    n = reg.get(obs_metrics.KERNEL_DISPATCH, op="lut_gemm", backend="ref",
+                m_bucket="4", bits="2")
+    assert n == 1, reg.snapshot()["counters"]
 
 
 def test_ref_and_pallas_backends_agree():
@@ -104,14 +117,14 @@ def test_duplicate_registration_rejected():
 
 def test_ops_shims_warn_and_match_registry():
     ap, wp, plut = _lut_case()
-    registry.reset_dispatch_counts()
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        old = ops.lut_gemm(ap, wp, plut, backend="pallas_interpret")
+    with obs_metrics.scoped() as reg:
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            old = ops.lut_gemm(ap, wp, plut, backend="pallas_interpret")
     assert any(issubclass(w.category, DeprecationWarning) and
                "lut_gemm" in str(w.message) for w in rec), \
         [str(w.message) for w in rec]
-    assert registry.dispatch_counts().get("lut_gemm", 0) == 1
+    assert reg.dispatch_counts().get("lut_gemm", 0) == 1
     new = registry.dispatch("lut_gemm", ap, wp, plut.table, None,
                             w_bits=plut.w_bits, a_bits=plut.a_bits,
                             backend="pallas_interpret")
@@ -139,3 +152,32 @@ def test_ops_reexports_counters():
     assert ops.DISPATCH_COUNTS is registry.DISPATCH_COUNTS
     assert ops.dispatch_counts is registry.dispatch_counts
     assert ops.reset_dispatch_counts is registry.reset_dispatch_counts
+
+
+def test_dispatch_count_shims_warn_and_mirror_registry():
+    """The module-level counter API is a deprecation shim over the obs
+    metrics registry: it warns, still returns the legacy dict shape, and
+    the legacy DISPATCH_COUNTS mirror stays consistent with the registry
+    view outside isolated scopes."""
+    ap, wp, plut = _lut_case()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        registry.reset_dispatch_counts()
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec), rec
+    registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                      w_bits=plut.w_bits, a_bits=plut.a_bits, backend="ref")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        c = registry.dispatch_counts()
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec), rec
+    assert c.get("lut_gemm") == 1 and c.get("lut_gemm:ref") == 1, c
+    assert dict(registry.DISPATCH_COUNTS) == c
+    # isolated scopes (the autotuner's probe mode) leak into neither view
+    with obs_metrics.scoped(isolate=True):
+        registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                          w_bits=plut.w_bits, a_bits=plut.a_bits,
+                          backend="ref")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert registry.dispatch_counts().get("lut_gemm") == 1
+        registry.reset_dispatch_counts()   # leave global state clean

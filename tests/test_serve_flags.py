@@ -12,7 +12,7 @@ from repro.launch.serve import validate_args
 def _args(**kw):
     base = dict(paged=False, prefix_cache=False, prefill_batch=1,
                 prefill="chunked", tp=1, a_scale="dynamic", a_bits=None,
-                plan=None)
+                plan=None, trace_out=None, metrics_out=None)
     base.update(kw)
     return argparse.Namespace(**base)
 
@@ -33,6 +33,15 @@ def test_valid_combinations_pass(qwen):
                   qwen)
     validate_args(_args(paged=True, prefill="whole"), qwen)
     validate_args(_args(paged=True, a_scale="static", a_bits=2), qwen)
+    validate_args(_args(paged=True, trace_out="t.json",
+                        metrics_out="m.json"), qwen)
+
+
+def test_trace_and_metrics_out_require_paged(qwen):
+    with pytest.raises(ValueError, match="--trace-out requires --paged"):
+        validate_args(_args(trace_out="t.json"), qwen)
+    with pytest.raises(ValueError, match="--metrics-out requires --paged"):
+        validate_args(_args(metrics_out="m.json"), qwen)
 
 
 def test_prefix_cache_requires_paged(qwen):

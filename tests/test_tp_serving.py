@@ -101,7 +101,7 @@ def test_tp_quantized_engine_deterministic():
     leaves carry their TP roles."""
     run_in_subprocess("""
         from repro.core.qlinear import QuantizedWeight
-        from repro.kernels import registry as kops
+        from repro.obs import metrics as obs_metrics
         cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
         qcfg = dataclasses.replace(cfg, quant=qplan.get_plan("w2a2"))
         params = lm.init_params(jax.random.PRNGKey(0), cfg, mode="plain")
@@ -111,9 +111,9 @@ def test_tp_quantized_engine_deterministic():
                  if isinstance(l, QuantizedWeight)]
         assert "col" in roles and "row" in roles, roles
         mesh = make_tp_mesh(8)
-        kops.reset_dispatch_counts()
-        q1, _, _ = run_engine(qcfg, qp, mesh, gen=4, n_req=3)
-        assert kops.dispatch_counts().get("lut_gemm", 0) > 0
+        with obs_metrics.scoped() as reg:
+            q1, _, _ = run_engine(qcfg, qp, mesh, gen=4, n_req=3)
+        assert reg.dispatch_counts().get("lut_gemm", 0) > 0
         q2, _, _ = run_engine(qcfg, qp, mesh, gen=4, n_req=3)
         assert q1 == q2, (q1, q2)
         print("tp quantized determinism OK")
