@@ -137,7 +137,8 @@ def _expert_lut_kernel(a_ref, w_ref, lut_ref, o_ref, *, bits: int,
         o_ref[0] = jnp.zeros_like(o_ref[0])
 
     prods = _lut_products(a_ref[0], w_ref[0], lut_ref, bits=bits,
-                          scheme=scheme, lookup_impl=lookup_impl)
+                          a_bits=bits, scheme=scheme,
+                          lookup_impl=lookup_impl)
     o_ref[0] += prods.sum(axis=-1).astype(jnp.float32)
 
 
@@ -151,7 +152,8 @@ def _expert_lut_grouped_kernel(a_ref, w_ref, lut_ref, sc_ref, o_ref, *,
         o_ref[0] = jnp.zeros_like(o_ref[0])
 
     prods = _lut_products(a_ref[0], w_ref[0], lut_ref, bits=bits,
-                          scheme=scheme, lookup_impl=lookup_impl)
+                          a_bits=bits, scheme=scheme,
+                          lookup_impl=lookup_impl)
     bm, bn, bk = prods.shape
     ng = bk // group_size
     pg = prods.reshape(bm, bn, ng, group_size).sum(axis=-1)

@@ -28,6 +28,7 @@ index is a single OR) — the same offline-rearrangement trick as Fig. 4(c).
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -62,17 +63,21 @@ def _unpack_indexready(tile: jax.Array, bits: int) -> jax.Array:
     return out.reshape(*tile.shape[:-1], tile.shape[-1] * f).astype(jnp.int32)
 
 
-def _lut_products(a_ref, w_ref, lut_ref, *, bits: int, scheme: str,
-                  lookup_impl: str) -> jax.Array:
+def _lut_products(a_ref, w_ref, lut_ref, *, bits: int, a_bits: int,
+                  scheme: str, lookup_impl: str) -> jax.Array:
     """Shared tile body: unpack both operands, build LUT indices, look up.
-    Returns the (bm, bn, bk) product tile."""
-    a_idx = _unpack_natural(a_ref[...], bits)                    # (bm, bk) int32
-    if scheme in ("c", "d"):
+    Returns the (bm, bn, bk) product tile. The flat product index is
+    ``(w_idx << a_bits) | a_idx`` (ProductLUT layout); the scheme-'c'/'d'
+    index-ready unpack bakes in ``w << w_bits``, which only equals that
+    shift when the operand widths match — asymmetric pairs (e.g. w4a8)
+    fall back to the natural unpack + explicit shift."""
+    a_idx = _unpack_natural(a_ref[...], a_bits)                  # (bm, bk) int32
+    if scheme in ("c", "d") and a_bits == bits:
         w_pre = _unpack_indexready(w_ref[...], bits)             # (bn, bk) = w<<b
         idx = w_pre[None, :, :] | a_idx[:, None, :]              # (bm, bn, bk)
     else:
         w_idx = _unpack_natural(w_ref[...], bits)
-        idx = (w_idx[None, :, :] << bits) | a_idx[:, None, :]
+        idx = (w_idx[None, :, :] << a_bits) | a_idx[:, None, :]
 
     lut = lut_ref[...]                                           # (2^(2b),)
     if lookup_impl == "onehot":
@@ -84,7 +89,8 @@ def _lut_products(a_ref, w_ref, lut_ref, *, bits: int, scheme: str,
 
 
 def _lut_gemm_kernel(
-    a_ref, w_ref, lut_ref, o_ref, *, bits: int, scheme: str, lookup_impl: str, bk: int
+    a_ref, w_ref, lut_ref, o_ref, *, bits: int, a_bits: int, scheme: str,
+    lookup_impl: str, bk: int
 ):
     k = pl.program_id(2)
 
@@ -92,14 +98,14 @@ def _lut_gemm_kernel(
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    prods = _lut_products(a_ref, w_ref, lut_ref, bits=bits, scheme=scheme,
-                          lookup_impl=lookup_impl)
+    prods = _lut_products(a_ref, w_ref, lut_ref, bits=bits, a_bits=a_bits,
+                          scheme=scheme, lookup_impl=lookup_impl)
     o_ref[...] += prods.sum(axis=-1).astype(jnp.float32)
 
 
 def _lut_gemm_grouped_kernel(
-    a_ref, w_ref, lut_ref, sc_ref, o_ref, *, bits: int, scheme: str,
-    lookup_impl: str, group_size: int
+    a_ref, w_ref, lut_ref, sc_ref, o_ref, *, bits: int, a_bits: int,
+    scheme: str, lookup_impl: str, group_size: int
 ):
     """Group-scale epilogue fused per K step: the tile's K codes split into
     bk/G groups; each group's partial sum is scaled by its (out, group)
@@ -111,8 +117,8 @@ def _lut_gemm_grouped_kernel(
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    prods = _lut_products(a_ref, w_ref, lut_ref, bits=bits, scheme=scheme,
-                          lookup_impl=lookup_impl)     # (bm, bn, bk)
+    prods = _lut_products(a_ref, w_ref, lut_ref, bits=bits, a_bits=a_bits,
+                          scheme=scheme, lookup_impl=lookup_impl)  # (bm, bn, bk)
     bm, bn, bk = prods.shape
     ng = bk // group_size
     pg = prods.reshape(bm, bn, ng, group_size).sum(axis=-1)      # (bm, bn, ng)
@@ -140,16 +146,17 @@ def _fit(target: int, n: int) -> int:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "scheme", "lookup_impl", "group_size",
+    static_argnames=("bits", "a_bits", "scheme", "lookup_impl", "group_size",
                      "bm", "bn", "bk", "interpret"),
 )
 def lut_gemm_pallas(
-    a_packed: jax.Array,     # (M, K/f) uint8
-    w_packed: jax.Array,     # (N, K/f) uint8
-    lut_table: jax.Array,    # (2^(2*bits),) f32/int32
+    a_packed: jax.Array,     # (M, K/fa) uint8
+    w_packed: jax.Array,     # (N, K/fw) uint8
+    lut_table: jax.Array,    # (2^(bits + a_bits),) f32/int32
     w_scales: jax.Array | None = None,   # (N, K/G) group-wise weight scales
     *,
     bits: int = 2,
+    a_bits: int | None = None,   # activation code width (default: == bits)
     scheme: str = "d",
     lookup_impl: str = "take",
     group_size: int | None = None,
@@ -158,7 +165,12 @@ def lut_gemm_pallas(
     bk: int = 512,           # in CODES (not bytes); VMEM idx tile = bm*bn*bk_step
     interpret: bool = False,
 ) -> jax.Array:
-    """Blocked LUT GEMM. out[m,n] = sum_k LUT[(w[n,k]<<b) | a[m,k]], f32.
+    """Blocked LUT GEMM. out[m,n] = sum_k LUT[(w[n,k]<<a_bits) | a[m,k]], f32.
+
+    ``bits``/``a_bits`` are the weight/activation code widths; they pack at
+    DIFFERENT factors (e.g. w4a8: 2 weight codes per byte, 1 activation code
+    per byte), so K is recovered from each operand's own factor and the two
+    packed widths need not match — only the code count K must.
 
     With ``w_scales``/``group_size`` the group-scale epilogue runs fused in
     the K loop: out[m,n] = sum_g s[n,g] * sum_{k in g} LUT[...].
@@ -167,11 +179,15 @@ def lut_gemm_pallas(
     dimension walks K in bk-code steps so the working set stays bounded:
     default 128*128*64 i32 + f32 ≈ 8 MiB < v5e VMEM.
     """
-    f = packing.PACK_FACTOR[bits]
-    M, Kp = a_packed.shape
-    N, Kp2 = w_packed.shape
-    assert Kp == Kp2, (a_packed.shape, w_packed.shape)
-    K = Kp * f
+    if a_bits is None:
+        a_bits = bits
+    fw, fa = packing.PACK_FACTOR[bits], packing.PACK_FACTOR[a_bits]
+    M, Kpa = a_packed.shape
+    N, Kpw = w_packed.shape
+    K = Kpw * fw
+    assert Kpa * fa == K, (a_packed.shape, w_packed.shape, bits, a_bits)
+    # a K step must cover whole packed bytes of BOTH operands
+    f = math.lcm(fa, fw)
     grouped = w_scales is not None
     if grouped:
         assert group_size is not None and group_size % f == 0 \
@@ -180,7 +196,7 @@ def lut_gemm_pallas(
     bm = _fit(bm, M)
     bn = _fit(bn, N)
     # K-step unit: one group when scaled (the epilogue needs whole groups
-    # per tile), else one packed byte's worth of codes.
+    # per tile), else one step of both operands' packed bytes.
     unit = group_size if grouped else f
     u = _fit(max(bk // unit, 1), K // unit)
     # The 3D index tile must fit VMEM: cap the per-step K chunk first...
@@ -195,12 +211,11 @@ def lut_gemm_pallas(
         else:
             bn = _fit(max(bn // 2, 1), N)
     bk = u * unit
-    bkp = bk // f
 
-    grid = (M // bm, N // bn, Kp // bkp)
+    grid = (M // bm, N // bn, K // bk)
     in_specs = [
-        pl.BlockSpec((bm, bkp), lambda i, j, k: (i, k)),
-        pl.BlockSpec((bn, bkp), lambda i, j, k: (j, k)),
+        pl.BlockSpec((bm, bk // fa), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bn, bk // fw), lambda i, j, k: (j, k)),
         pl.BlockSpec((lut_table.shape[0],), lambda i, j, k: (0,)),
     ]
     args = [a_packed, w_packed, lut_table.astype(jnp.float32)]
@@ -209,11 +224,11 @@ def lut_gemm_pallas(
             pl.BlockSpec((bn, bk // group_size), lambda i, j, k: (j, k)))
         args.append(w_scales.astype(jnp.float32))
         kernel = functools.partial(
-            _lut_gemm_grouped_kernel, bits=bits, scheme=scheme,
+            _lut_gemm_grouped_kernel, bits=bits, a_bits=a_bits, scheme=scheme,
             lookup_impl=lookup_impl, group_size=group_size)
     else:
         kernel = functools.partial(
-            _lut_gemm_kernel, bits=bits, scheme=scheme,
+            _lut_gemm_kernel, bits=bits, a_bits=a_bits, scheme=scheme,
             lookup_impl=lookup_impl, bk=bk)
     return pl.pallas_call(
         kernel,

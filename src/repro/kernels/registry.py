@@ -312,10 +312,9 @@ def _lut_gemm_ref(ap, wp, table, sc, *, w_bits, a_bits, scheme="d",
 
 def _lut_gemm_pl(ap, wp, table, sc, *, w_bits, a_bits, scheme="d",
                  lookup_impl="take", group_size=None, interpret=False, **blk):
-    del a_bits
-    return lut_gemm_pallas(ap, wp, table, sc, bits=w_bits, scheme=scheme,
-                           lookup_impl=lookup_impl, group_size=group_size,
-                           interpret=interpret, **blk)
+    return lut_gemm_pallas(ap, wp, table, sc, bits=w_bits, a_bits=a_bits,
+                           scheme=scheme, lookup_impl=lookup_impl,
+                           group_size=group_size, interpret=interpret, **blk)
 
 
 def _dequant_matmul_ref(a, wp, cb, sc, *, bits, group_size=None):

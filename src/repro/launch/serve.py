@@ -48,7 +48,7 @@ from repro.models import lm, frontends
 from repro.launch import steps as St
 from repro.launch.mesh import make_tp_mesh
 from repro.obs import Tracer, metrics as obs_metrics
-from repro.serving import Engine, Request
+from repro.serving import Engine, Request, SamplerConfig
 
 
 def validate_args(args, cfg) -> None:
@@ -80,6 +80,36 @@ def validate_args(args, cfg) -> None:
             "--prefix-cache is incompatible with --prefill whole: "
             "whole-prompt admission recomputes from scratch and cannot "
             "consume cached blocks; use --prefill chunked")
+    if args.spec_draft_plan is not None:
+        if not args.paged:
+            raise ValueError(
+                "--spec-draft-plan requires --paged: speculative decoding "
+                "runs through the engine's draft/verify step functions")
+        if args.prefill == "whole":
+            raise ValueError(
+                "--spec-draft-plan is incompatible with --prefill whole: "
+                "the drafter's catch-up prefill replays the fed-token "
+                "stream in chunks; use --prefill chunked")
+        if recurrent:
+            raise ValueError(
+                f"--spec-draft-plan is incompatible with recurrent arch "
+                f"'{cfg.name}': the drafter cannot rewind per-slot scan "
+                "state past rejected tokens (attention-only archs only)")
+        if args.spec_draft_plan not in PLANS:
+            raise ValueError(
+                f"--spec-draft-plan '{args.spec_draft_plan}' is not a "
+                f"known plan preset ({', '.join(sorted(PLANS))})")
+    if args.spec_k < 1:
+        raise ValueError(f"--spec-k must be >= 1, got {args.spec_k}")
+    if args.temperature < 0:
+        raise ValueError(
+            f"--temperature must be >= 0 (0 = greedy), got "
+            f"{args.temperature}")
+    if not 0.0 < args.top_p <= 1.0:
+        raise ValueError(
+            f"--top-p must be in (0, 1] (1 = off), got {args.top_p}")
+    if args.top_k < 0:
+        raise ValueError(f"--top-k must be >= 0 (0 = off), got {args.top_k}")
     if args.a_scale == "static" and args.plan is None and args.a_bits is None:
         raise ValueError(
             "--a-scale static requires an activation-quantized plan: pass "
@@ -111,18 +141,27 @@ def validate_args(args, cfg) -> None:
                 "device_count=N before starting)")
 
 
-def serve_paged(cfg, qparams, args, mesh=None) -> int:
-    """Continuous-batching serve loop over the paged engine."""
+def serve_paged(cfg, qparams, args, mesh=None, spec=None) -> int:
+    """Continuous-batching serve loop over the paged engine. ``spec`` is an
+    optional (draft_cfg, draft_params) pair enabling self-speculative
+    decoding (--spec-draft-plan)."""
     key = jax.random.PRNGKey(args.seed)
     max_len = args.prompt_len + args.gen + args.block_size
     max_len = -(-max_len // args.block_size) * args.block_size
     tracer = Tracer() if args.trace_out else None
+    sampler = SamplerConfig(temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, seed=args.seed)
+    spec_kw = {}
+    if spec is not None:
+        dcfg, dparams = spec
+        spec_kw = dict(spec_draft_params=dparams, spec_draft_cfg=dcfg,
+                       spec_k=args.spec_k)
     engine = Engine(cfg, qparams, n_slots=args.batch, max_len=max_len,
                     block_size=args.block_size, max_queue=args.max_queue,
                     prefill=args.prefill,
                     prefix_cache=args.prefix_cache,
                     prefill_batch=args.prefill_batch, mesh=mesh,
-                    tracer=tracer)
+                    sampler=sampler, tracer=tracer, **spec_kw)
     if mesh is not None:
         print(f"  tensor-parallel over {mesh.shape['model']} devices: "
               f"{engine.per_device_weight_bytes()/1e3:.1f} KB weights "
@@ -161,6 +200,12 @@ def serve_paged(cfg, qparams, args, mesh=None) -> int:
           f"decode steps {m['decode_steps']}, prefill chunks "
           f"{m['prefill_chunks']}, preemptions {m['preemptions']}, "
           f"util {m['slot_utilization']:.2f}, jit entries {m['n_compiles']}")
+    if m.get("spec") is not None:
+        sp = m["spec"]
+        print(f"  spec decode: {sp['accepted_tokens_per_step']:.2f} tokens/"
+              f"slot-step (acceptance {sp['acceptance_rate']:.2f} over "
+              f"{sp['draft_tokens']} drafts, {sp['draft_evictions']} "
+              f"drafter evictions)")
     if m["prefix_cache"] is not None:
         total = m["prefill_tokens_computed"] + m["prefill_tokens_shared"]
         print(f"  prefix cache: {m['prefill_tokens_shared']}/{total} prompt "
@@ -239,6 +284,22 @@ def main():
                     choices=("chunked", "whole"),
                     help="paged-engine admission mode (whole replays the "
                          "legacy dense batcher's whole-prompt prefill)")
+    ap.add_argument("--spec-draft-plan", default=None,
+                    help="enable self-speculative decoding (--paged): pack "
+                         "a SECOND copy of the weights under this plan "
+                         "preset (e.g. w2a2) as the drafter; the serving "
+                         "plan's model verifies spec-k drafts per round "
+                         "with lossless rejection sampling")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per speculative round")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest-probability tokens "
+                         "(0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: minimal covering probability "
+                         "mass (1 = off)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree: serve over a (tp,)-device "
                          "'model' mesh (--paged; weights, LUT kernels and "
@@ -320,7 +381,20 @@ def main():
 
     if args.paged:
         mesh = make_tp_mesh(args.tp) if args.tp > 1 else None
-        return serve_paged(cfg, qparams, args, mesh=mesh)
+        spec = None
+        if args.spec_draft_plan:
+            dcfg = dataclasses.replace(cfg,
+                                       quant=get_plan(args.spec_draft_plan))
+            t0 = time.time()
+            dparams = jax.block_until_ready(jax.jit(
+                lambda p: lm.quantize_tree(p, dcfg, tp=args.tp))(params))
+            d_bytes = sum(x.size * x.dtype.itemsize
+                          for x in jax.tree.leaves(dparams))
+            print(f"  drafter packed under plan '{args.spec_draft_plan}' "
+                  f"in {time.time()-t0:.2f}s: {d_bytes/1e6:.1f} MB "
+                  f"(spec-k {args.spec_k})")
+            spec = (dcfg, dparams)
+        return serve_paged(cfg, qparams, args, mesh=mesh, spec=spec)
 
     kw = {}
     if cfg.is_encdec:

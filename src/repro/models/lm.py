@@ -310,7 +310,12 @@ def forward(
     Decode: caches given, S == 1, pos (B,).
     Paged serving (serving/engine.py): caches hold shared block pools,
     block_tables map each batch row's logical blocks to physical blocks;
-    S == 1 is a batched decode step, S > 1 a single-request prefill chunk.
+    S == 1 is a batched decode step, S > 1 the batched chunk math with
+    per-row start positions `pos` (B,). S need not be block-aligned: the
+    engine's speculative VERIFY step is exactly this path with
+    S == spec_k + 1, scattering the draft tokens' K/V through (widened)
+    tables and keeping the returned hidden states at every position so
+    `logits_fn` can score all spec_k + 1 candidates in one forward.
     """
     B, S = tokens.shape
     dtype = jnp.dtype(cfg.dtype)

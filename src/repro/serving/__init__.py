@@ -9,6 +9,9 @@ Public surface:
   RadixCache        prefix-sharing radix index over the block pool
   ContinuousBatcher legacy fixed-slot API, now a shim over Engine
   init_paged_cache  paged cache tree constructor
+  SamplerConfig     engine-wide sampler defaults (temperature / top_k /
+                    top_p / seed) for the jit'd per-request sampler stack;
+                    also drives speculative decoding's rejection sampler
 
 See docs/serving.md for the usage guide and docs/architecture.md for how
 the pieces fit together.
@@ -17,4 +20,5 @@ the pieces fit together.
 from .cache import BlockPool, init_paged_cache  # noqa: F401
 from .engine import Engine, Request  # noqa: F401
 from .radix import RadixCache  # noqa: F401
+from .sampler import SamplerConfig  # noqa: F401
 from .scheduler import ContinuousBatcher  # noqa: F401

@@ -40,12 +40,25 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.dist import sharding as Sh
 from repro.models import recurrent as R
 
 
 NULL_BLOCK = 0
+
+
+def table_row(blocks: list, width: int) -> np.ndarray:
+    """One NULL-padded block-table row: entry j is the physical block
+    holding token rows [j*block_size, (j+1)*block_size). Scatter rows whose
+    logical block exceeds ``len(blocks)`` land in the null block — the
+    speculative-decoding verify/draft tables are deliberately widened past
+    ``max_len // block_size`` so near-the-limit draft overflow writes go to
+    the null block instead of wrapping onto a real one."""
+    row = np.full((width,), NULL_BLOCK, np.int32)
+    row[: len(blocks)] = blocks
+    return row
 
 # cache-tree keys holding per-slot (non-paged) state
 _PER_SLOT_KEYS = ("rnn", "rwkv", "cross")

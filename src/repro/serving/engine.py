@@ -16,6 +16,25 @@ recompiles:
                    batch of `prefill_batch` requests, padded with inert rows
                    whose tables point at the null block — short-prompt
                    bursts admit in one forward instead of prefill_batch.
+  _sample          the jit'd per-request sampler stack (serving/sampler.py):
+                   temperature -> top-k -> top-p -> seeded categorical.
+                   Greedy rows (the default) collapse to exact argmax, so
+                   default decoding is unchanged; seeded sampled decode is
+                   bit-reproducible across runs and batch compositions.
+  _draft / _verify / _draft_prefill / _spec_accept
+                   (spec_draft_params set) SELF-SPECULATIVE decoding: a
+                   low-bit drafter (e.g. the same weights quantize_tree'd
+                   to w2a2) proposes spec_k tokens per round against its
+                   own paged KV — a second cache tree addressed by the same
+                   BlockPool — and the target verifies all of them in one
+                   fixed-shape (n_slots, spec_k+1) forward. Lossless
+                   rejection sampling (serving/spec.py) emits 1..spec_k+1
+                   tokens per round with EXACTLY the target-only output
+                   distribution; greedy spec decode is bit-identical to
+                   non-spec greedy. Drafter KV is best-effort: it is the
+                   first thing reclaimed under pool pressure, and a slot
+                   whose drafter lags just decodes un-speculated through
+                   the same two traces.
 
 Scheduling policy per `step()`: admit from the bounded queue while free
 slots AND first-chunk blocks exist -> run one prefill chunk (round-robin
@@ -73,7 +92,9 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import time
+import zlib
 from collections import deque
 from typing import Callable, Optional
 
@@ -86,6 +107,8 @@ from repro.models import lm
 from repro.obs import metrics as obs_metrics
 from repro.obs.metrics import MetricsRegistry
 from . import cache as C
+from . import sampler as S
+from . import spec as SP
 from .radix import RadixCache
 
 
@@ -104,6 +127,13 @@ class Request:
                 evicted first; ties evict the latest-admitted slot
       on_token  streaming callback, called as on_token(token: int,
                 done: bool) from inside `step()` in generation order
+      temperature / top_p
+                per-request sampler overrides (None: the engine's
+                SamplerConfig defaults apply; see serving/sampler.py).
+                temperature 0 is greedy argmax. For the seeded sampler the
+                uid doubles as the per-request PRNG stream id, so two
+                requests with the same (seed, uid) prompt-independently
+                draw identical token streams
 
     Fields filled by the engine:
       out         generated token ids (ints), streamed in order
@@ -117,6 +147,8 @@ class Request:
     eos_id: Optional[int] = None
     priority: int = 0            # lower priority is preempted first
     on_token: Optional[Callable[[int, bool], None]] = None   # streaming
+    temperature: Optional[float] = None   # None: engine sampler default
+    top_p: Optional[float] = None         # None: engine sampler default
     # filled by the engine
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
@@ -151,6 +183,11 @@ class _Slot:
     next_input: int = 0
     blocks: list = dataclasses.field(default_factory=list)
     admit_seq: int = 0
+    # speculative decoding: drafter-KV blocks (same pool id space as
+    # `blocks` but written by the DRAFT cache tree) and how many drafter
+    # rows mirror the target's fed-token stream (draft_done == pos: synced)
+    draft_blocks: list = dataclasses.field(default_factory=list)
+    draft_done: int = 0
     # radix insert resume hint: deepest indexed node + blocks indexed so
     # far (valid while this slot lives — see RadixCache.insert)
     radix_node: object = None
@@ -175,8 +212,37 @@ class Engine:
                      padded; forced to 1 for recurrent archs / whole mode)
       prefix_cache   enable the prefix-sharing radix cache (chunked,
                      attention-only archs; silently disabled otherwise)
-      sample         logits (n_slots, V) f32 -> next token ids (n_slots,);
-                     default greedy argmax
+      sample         OPTIONAL legacy host-side hook: logits (n_slots, V) f32
+                     -> next token ids (n_slots,). None (default) routes
+                     every decode draw through the jit'd sampler stack
+                     (serving/sampler.py) configured by ``sampler`` — the
+                     default SamplerConfig is greedy and bit-identical to
+                     the historical argmax lambda. Incompatible with
+                     speculative decoding (the hook sees only logits, not
+                     the warped distributions rejection sampling needs)
+      sampler        SamplerConfig (temperature/top_k/top_p/seed) — engine
+                     defaults; Request.temperature / Request.top_p override
+                     per request. Seeded draws are bit-reproducible across
+                     runs and scheduling changes (keys derive from
+                     (seed, uid, sample index) only)
+      spec_draft_params
+                     optional second parameter tree (same cfg — typically a
+                     low-bit quantize_tree of the same weights, e.g. w2a2)
+                     enabling SELF-SPECULATIVE decoding: the drafter
+                     proposes spec_k tokens per round against its own paged
+                     KV (a second cache tree sharing this engine's
+                     BlockPool id space) and the target verifies all of
+                     them in ONE fixed-shape (n_slots, spec_k+1) forward.
+                     Lossless rejection sampling (serving/spec.py) keeps
+                     the output distribution exactly the target's — greedy
+                     spec decode is bit-identical to non-spec greedy.
+                     Requires chunked prefill, an attention-only arch, and
+                     sample=None
+      spec_draft_cfg config the drafter params were built against (same
+                     architecture; typically dataclasses.replace(cfg,
+                     quant=get_plan("w2a2")) so forward dispatches the LUT
+                     kernels). None: the target cfg
+      spec_k         draft tokens per speculative round (>= 1)
       tracer         optional repro.obs.Tracer: per-request lifecycle spans
                      + a per-step phase timeline, recorded from the host
                      scheduling loop only (never inside the jit'd steps; no
@@ -207,6 +273,8 @@ class Engine:
                  prefill: str = "chunked", prefill_batch: int = 1,
                  prefix_cache: bool = False,
                  sample: Optional[Callable] = None,
+                 sampler: Optional[S.SamplerConfig] = None,
+                 spec_draft_params=None, spec_draft_cfg=None, spec_k: int = 4,
                  tracer=None, mesh=None, rules="serve_tp"):
         if cfg.is_encdec:
             raise NotImplementedError("engine: encoder-decoder serving")
@@ -240,9 +308,21 @@ class Engine:
         self.max_queue = max_queue
         self.prefill_mode = prefill
         self.nb_max = max_len // block_size
+        # spec decoding doubles KV demand (target + drafter rows): default
+        # the pool so every slot can hold max_len rows in BOTH trees
         self.n_blocks = n_blocks if n_blocks is not None \
-            else n_slots * self.nb_max + 1
-        self.sample = sample or (lambda logits: jnp.argmax(logits, -1))
+            else (2 if spec_draft_params is not None else 1) \
+            * n_slots * self.nb_max + 1
+        self.sample = sample            # legacy hook; None = jit'd stack
+        self.sampler = sampler if sampler is not None else S.SamplerConfig()
+        self.spec = spec_draft_params is not None
+        self.spec_k = int(spec_k)
+        # verify/draft block tables are widened past nb_max so the up-to-k
+        # overflow rows near the context limit scatter into the null block
+        # instead of wrapping onto a real one (emitted tokens are capped by
+        # the context room, so null-block garbage is never attended)
+        self.nb_spec = self.nb_max + (
+            -(-(self.spec_k + 1) // block_size) if self.spec else 0)
 
         self.caches = C.init_paged_cache(cfg, n_slots, self.n_blocks,
                                          block_size)
@@ -253,6 +333,39 @@ class Engine:
             self.caches = jax.device_put(self.caches, self._cache_specs)
         self.pool = C.BlockPool(self.n_blocks)
         self._has_state = C.has_per_slot_state(self.caches)
+        self.draft_params = None
+        self.draft_caches = None
+        self._draft_cache_specs = None
+        if self.spec:
+            if self._has_state:
+                raise NotImplementedError(
+                    "spec decoding: recurrent per-slot state (the drafter "
+                    "cannot rewind a scan state past rejected tokens)")
+            if prefill != "chunked":
+                raise ValueError("spec decoding requires chunked prefill")
+            if sample is not None:
+                raise ValueError(
+                    "spec decoding requires the built-in sampler stack "
+                    "(a sample= hook sees only logits, not the warped "
+                    "distributions rejection sampling needs)")
+            assert self.spec_k >= 1, spec_k
+            dparams = spec_draft_params
+            if mesh is not None:
+                dparams = jax.device_put(
+                    dparams, Sh.param_specs(dparams, mesh, self.rules))
+            self.draft_params = dparams
+            self.draft_cfg = spec_draft_cfg if spec_draft_cfg is not None \
+                else cfg
+            # the drafter's paged KV: a SECOND cache tree addressed by the
+            # SAME BlockPool ids, so one allocator arbitrates target vs
+            # drafter residency (drafter blocks are reclaimed first)
+            self.draft_caches = C.init_paged_cache(self.draft_cfg, n_slots,
+                                                   self.n_blocks, block_size)
+            if mesh is not None:
+                self._draft_cache_specs = C.paged_cache_specs(
+                    self.draft_caches, mesh, self.rules)
+                self.draft_caches = jax.device_put(self.draft_caches,
+                                                   self._draft_cache_specs)
         # batched prefill pads with inert rows — recurrent state must see
         # exactly the prompt tokens, so stateful archs stay one-per-chunk
         self.prefill_batch = 1 if (self._has_state or prefill == "whole") \
@@ -272,7 +385,19 @@ class Engine:
                                         donate_argnums=(0,))
         self._prefill_whole = jax.jit(self._prefill_whole_fn,
                                       donate_argnums=(0,))
-        self._reset = jax.jit(C.reset_slot, donate_argnums=(0,))
+        # partial() gives each engine its own jit wrapper over the
+        # module-level reset_slot: jitting C.reset_slot directly shares one
+        # pjit cache across every engine in the process, so n_compiles()
+        # would count traces other engines compiled
+        self._reset = jax.jit(functools.partial(C.reset_slot),
+                              donate_argnums=(0,))
+        self._sample = jax.jit(self._sample_fn)
+        if self.spec:
+            self._draft = jax.jit(self._draft_fn, donate_argnums=(0,))
+            self._verify = jax.jit(self._verify_fn, donate_argnums=(0,))
+            self._draft_prefill = jax.jit(self._draft_prefill_fn,
+                                          donate_argnums=(0,))
+            self._spec_accept = jax.jit(self._spec_accept_fn)
 
         # observability: a per-engine metrics registry backs every counter
         # attribute below (no process-global state — two engines never see
@@ -281,6 +406,7 @@ class Engine:
         self.tracer = tracer
         self._admit_counter = 0
         self._pf_rr = 0
+        self._dpf_rr = 0
 
     # counters (engine.obs-backed; see _counter)
     steps = _counter("engine_steps",
@@ -299,6 +425,17 @@ class Engine:
     prefill_tokens_shared = _counter(
         "engine_prefill_tokens_shared",
         "prompt rows attached from the radix cache")
+    spec_rounds = _counter("spec_rounds_total",
+                           "speculative draft+verify rounds")
+    spec_draft_tokens = _counter("spec_draft_tokens_total",
+                                 "draft tokens proposed to the verifier")
+    spec_accepted = _counter("spec_accepted_total",
+                             "draft tokens accepted AND emitted")
+    spec_emitted = _counter("spec_emitted_total",
+                            "tokens emitted by speculative rounds")
+    spec_draft_evictions = _counter(
+        "spec_draft_evictions_total",
+        "drafter-KV evictions under pool pressure")
 
     def attach_tracer(self, tracer) -> None:
         """Attach (or swap) the lifecycle tracer after construction — e.g.
@@ -361,6 +498,13 @@ class Engine:
             lambda x, s: jax.lax.with_sharding_constraint(x, s),
             tree, self._cache_specs)
 
+    def _constrain_draft(self, tree):
+        if self._draft_cache_specs is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            tree, self._draft_cache_specs)
+
     def _decode_fn(self, caches, tables, tokens, pos, active):
         """One token for every slot. tokens (n_slots, 1) int32, pos
         (n_slots,) int32, tables (n_slots, nb_max) int32, active (n_slots,)
@@ -394,6 +538,87 @@ class Engine:
             _, new = lm.forward(self.params, self.cfg, tokens, caches=caches,
                                 pos=starts, block_tables=tables)
             return self._constrain_caches(new)
+
+    def _sample_fn(self, logits, uids, sidx, temperature, top_p):
+        """Jit'd decode draw through the sampler stack (one trace for
+        greedy AND sampled rows: greedy rows collapse to a one-hot whose
+        categorical draw is exactly argmax — see serving/sampler.py)."""
+        with self._mesh_ctx():
+            return S.sample(logits, self.sampler, uids, sidx, temperature,
+                            top_p)
+
+    def _draft_fn(self, dcaches, tables, first_tok, pos, uids, sidx,
+                  temperature, top_p):
+        """spec_k+1 drafter steps (lax.scan over one-token forwards against
+        the DRAFT cache tree) writing rows pos..pos+spec_k. The scan feeds
+        [F[pos], d_1..d_k] — one step more than it samples — so a fully
+        accepted round (take = k+1 with the bonus token) still leaves every
+        drafter row below the new position holding the token the target
+        actually kept; the (k+1)'th sampled token is discarded. Returns
+        (new draft caches, drafts (n_slots, k) int32, drafter probs
+        (n_slots, k, V) f32). Non-drafting rows ride through on all-null
+        tables (their writes and drafts are inert)."""
+        base = S.fold_tag(S.request_keys(self.sampler.seed, uids, sidx),
+                          S.TAG_DRAFT)
+        with self._mesh_ctx():
+            def one(carry, i):
+                caches, tok = carry
+                h, new = lm.forward(self.draft_params, self.draft_cfg,
+                                    tok[:, None], caches=caches, pos=pos + i,
+                                    block_tables=tables)
+                logits = lm.logits_fn(self.draft_params, self.draft_cfg,
+                                      h)[:, -1]
+                p = S.probs(logits, temperature, self.sampler.top_k, top_p)
+                keys = jax.vmap(jax.random.fold_in, (0, None))(base, i)
+                d = S.draw(p, keys)
+                return (self._constrain_draft(new), d), (d, p)
+            (dcaches, _), (ds, ps) = jax.lax.scan(
+                one, (dcaches, first_tok), jnp.arange(self.spec_k + 1))
+        k = self.spec_k
+        return dcaches, ds[:k].T, jnp.moveaxis(ps[:k], 0, 1)
+
+    def _verify_fn(self, caches, tables, tokens, pos, active):
+        """Fixed-shape (n_slots, spec_k+1) TARGET forward over
+        [F[pos], d_1..d_k] returning logits at EVERY position — the same
+        per-row chunk math as _prefill_batched_fn, just with the hidden
+        states kept. The drafts' K/V lands in the target cache as a side
+        effect; rows past the accepted prefix hold stale tokens but are
+        rewritten by the next round's forward before any emitted query
+        attends them (the engine advances pos only over emitted tokens)."""
+        with self._mesh_ctx():
+            h, new = lm.forward(self.params, self.cfg, tokens, caches=caches,
+                                pos=pos, block_tables=tables)
+            new = C.select_slots(caches, new, active)
+            logits = lm.logits_fn(self.params, self.cfg, h)
+            return self._constrain_caches(new), logits
+
+    def _draft_prefill_fn(self, dcaches, tables, tokens, starts):
+        """_prefill_batched_fn over the DRAFTER params/cache tree: replays
+        chunks of the fed-token stream to catch the drafter's KV up to the
+        target's context (after admission, radix full-prefix hits,
+        preemption-requeue, or a drafter-KV eviction)."""
+        with self._mesh_ctx():
+            _, new = lm.forward(self.draft_params, self.draft_cfg, tokens,
+                                caches=dcaches, pos=starts,
+                                block_tables=tables)
+            return self._constrain_draft(new)
+
+    def _spec_accept_fn(self, logits, drafts, p_draft, drafting, uids, sidx,
+                        temperature, top_p):
+        """Warp the target's (n_slots, spec_k+1, V) logits through the SAME
+        sampler stack the plain decode path uses, then run lossless
+        rejection sampling (serving/spec.py). Non-drafting rows get zeroed
+        drafter probs: zero accepts, and the 'residual' collapses to the
+        target's position-0 distribution — a plain decode draw through the
+        same trace. Returns (n_acc (n_slots,), tokens (n_slots, k+1))."""
+        keys = S.request_keys(self.sampler.seed, uids, sidx)
+        p_t = jax.vmap(
+            lambda lg: S.probs(lg, temperature, self.sampler.top_k, top_p),
+            in_axes=1, out_axes=1)(logits)
+        p_d = jnp.where(drafting[:, None, None], p_draft, 0.0)
+        return SP.reject_sample(drafts, p_d, p_t,
+                                S.fold_tag(keys, S.TAG_ACCEPT),
+                                S.fold_tag(keys, S.TAG_RESAMPLE))
 
     def _prefill_whole_fn(self, caches, table_row, prompt, slot_ix):
         # legacy-equivalent admission: one full-prompt forward (same math,
@@ -433,9 +658,7 @@ class Engine:
         return True
 
     def _table_row(self, slot: _Slot) -> np.ndarray:
-        row = np.full((self.nb_max,), C.NULL_BLOCK, np.int32)
-        row[: len(slot.blocks)] = slot.blocks
-        return row
+        return C.table_row(slot.blocks, self.nb_max)
 
     def _pick_victim(self) -> Optional[int]:
         occupied = [i for i, s in enumerate(self.slots) if s.state != _FREE]
@@ -455,6 +678,8 @@ class Engine:
         self.preemptions += 1
         if s.blocks:
             self.pool.free(s.blocks)
+        if s.draft_blocks:
+            self.pool.free(s.draft_blocks)
         self.slots[ix] = _Slot()
         self.queue.appendleft(req)
         if self.tracer is not None:
@@ -471,13 +696,44 @@ class Engine:
                     evicted = self.radix.evict_one()
                 if evicted:
                     continue
-            victim = self._pick_victim()
+            if self._evict_one_draft():
+                continue                     # drafter KV goes before any
+            victim = self._pick_victim()     # live request is preempted
             if victim is None:
                 return False
             with self._phase("preempt"):
                 self._preempt(victim)
             if victim == requester_ix:
                 return False
+        return True
+
+    def _evict_one_draft(self) -> bool:
+        """Reclaim one slot's entire drafter KV (largest holding first).
+        The drafter is a pure accelerator: dropping its cache loses no
+        request state — the slot just decodes un-speculated until the
+        catch-up prefill rebuilds it. No-op (False) when nothing to take."""
+        cand = [i for i, s in enumerate(self.slots) if s.draft_blocks]
+        if not cand:
+            return False
+        s = self.slots[max(cand,
+                           key=lambda j: len(self.slots[j].draft_blocks))]
+        self.pool.free(s.draft_blocks)
+        s.draft_blocks = []
+        s.draft_done = 0
+        self.spec_draft_evictions += 1
+        return True
+
+    def _alloc_draft(self, ix: int, n: int) -> bool:
+        """Allocate n drafter blocks for slot ix WITHOUT preempting anyone:
+        LRU-evict unreferenced radix blocks, then give up (the slot simply
+        doesn't draft / catch up this round). Target allocations always win
+        over drafter ones — _make_room reclaims drafter KV, this never
+        takes a live request's blocks."""
+        while self.pool.n_free < n:
+            if self.radix is not None and self.radix.evict_one():
+                continue
+            return False
+        self.slots[ix].draft_blocks += self.pool.alloc(n)
         return True
 
     def _free_ix(self) -> Optional[int]:
@@ -706,6 +962,8 @@ class Engine:
         s.req.done = True
         if s.blocks:
             self.pool.free(s.blocks)
+        if s.draft_blocks:
+            self.pool.free(s.draft_blocks)
         self.slots[ix] = _Slot()
         if self.tracer is not None:
             self.tracer.on_finish(s.req.uid)
@@ -729,7 +987,12 @@ class Engine:
         self.caches, logits = self._run_jit(
             "decode", self._decode,
             self.caches, jnp.asarray(tables), tokens, pos, jnp.asarray(mask))
-        nxt = self.sample(logits)
+        if self.sample is not None:
+            nxt = self.sample(logits)        # legacy host-side hook
+        else:
+            uids, sidx, temp, topp = self._sampler_rows()
+            nxt = self._run_jit("sample", self._sample, logits, uids, sidx,
+                                temp, topp)
 
         self.decode_steps += 1
         self.busy_slot_steps += len(active)
@@ -747,6 +1010,207 @@ class Engine:
                 self.tracer.on_token(req.uid, tok, done)
             if req.on_token is not None:
                 req.on_token(tok, done)
+            if done:
+                self._finish(i)
+
+    def _sampler_rows(self):
+        """(uids, sidx, temperature, top_p) rows for the jit'd sampler:
+        per-request overrides folded over the engine defaults, plus the
+        PRNG derivation inputs (uid, sample index = tokens generated so
+        far — see serving/sampler.py). Inactive slots get inert values;
+        their draws are discarded. Non-int uids hash through crc32 so the
+        stream id stays stable across runs."""
+        sc = self.sampler
+        uids = np.zeros((self.n_slots,), np.int32)
+        sidx = np.zeros((self.n_slots,), np.int32)
+        temp = np.full((self.n_slots,), sc.temperature, np.float32)
+        topp = np.full((self.n_slots,), sc.top_p, np.float32)
+        for i, s in enumerate(self.slots):
+            r = s.req
+            if r is None:
+                continue
+            u = r.uid if isinstance(r.uid, int) \
+                else zlib.crc32(str(r.uid).encode())
+            uids[i] = np.int64(u) & 0x7FFFFFFF
+            sidx[i] = len(r.out)
+            if r.temperature is not None:
+                temp[i] = r.temperature
+            if r.top_p is not None:
+                topp[i] = r.top_p
+        return (jnp.asarray(uids), jnp.asarray(sidx), jnp.asarray(temp),
+                jnp.asarray(topp))
+
+    # ---------------- speculative decode ----------------
+
+    def _fed_stream(self, s: _Slot, upto: int) -> np.ndarray:
+        """First `upto` entries of the slot's fed-token stream F — the
+        exact sequence of input tokens whose K/V occupies target rows
+        0..upto-1: the prompt, then the last prompt token re-fed at row P
+        (the first decode step's input), then the generated tokens. The
+        drafter's catch-up prefill replays this stream so drafter rows
+        below draft_done always mirror the target's context byte-for-byte
+        (same tokens, same positions — only the weights differ)."""
+        P = len(s.prompt)
+        f = list(s.prompt[:min(upto, P)])
+        if upto > P:
+            f.append(int(s.prompt[-1]) if P else 0)
+            # tokens generated SINCE ADMISSION (earlier generations were
+            # folded into s.prompt by recompute preemption): pos - P of them
+            gen = s.req.out[len(s.req.out) - (s.pos - P):] if s.pos > P \
+                else []
+            f.extend(int(t) for t in gen[: upto - P - 1])
+        return np.asarray(f, np.int32)
+
+    def _draft_target(self, s: _Slot) -> int:
+        """Row the drafter should be caught up to: the filled prompt rows
+        while prefilling, the decode position afterwards."""
+        return s.prefill_done if s.state == _PREFILL else s.pos
+
+    def _do_draft_prefill(self):
+        """One fixed-shape batched chunk catching drafter KV up to the
+        target's context, for up to prefill_batch lagging slots (round-
+        robin). Runs every step alongside target prefill, so the drafter is
+        usually synced by the time a request reaches decode; slots it
+        cannot serve (no free blocks) keep decoding un-speculated."""
+        lag = [i for i, s in enumerate(self.slots)
+               if s.state in (_PREFILL, _DECODE)
+               and s.draft_done < self._draft_target(s)]
+        if not lag:
+            return
+        j0 = self._dpf_rr % len(lag)
+        self._dpf_rr += 1
+        lag = (lag[j0:] + lag[:j0])[:self.prefill_batch]
+        Bp = self.prefill_batch
+        tokens = np.zeros((Bp, self.chunk_size), np.int32)
+        starts = np.zeros((Bp,), np.int32)
+        tables = np.full((Bp, self.nb_spec), C.NULL_BLOCK, np.int32)
+        live = []
+        for j, i in enumerate(lag):
+            s = self.slots[i]
+            start = s.draft_done
+            real = min(self.chunk_size, self._draft_target(s) - start)
+            need = -(-(start + real) // self.block_size) \
+                - len(s.draft_blocks)
+            if need > 0 and not self._alloc_draft(i, need):
+                continue                      # row stays inert (all-null)
+            tokens[j, :real] = self._fed_stream(s, start + real)[start:]
+            starts[j] = start
+            tables[j] = C.table_row(s.draft_blocks, self.nb_spec)
+            live.append((i, real))
+        if not live:
+            return
+        self.draft_caches = self._run_jit(
+            "draft_prefill", self._draft_prefill,
+            self.draft_caches, jnp.asarray(tables), jnp.asarray(tokens),
+            jnp.asarray(starts))
+        for i, real in live:
+            self.slots[i].draft_done += real
+
+    def _do_spec_decode(self):
+        """One speculative round for the whole decode batch: drafter scans
+        spec_k+1 one-token steps, the target verifies [F[pos], d_1..d_k] in
+        one (n_slots, k+1) forward, rejection sampling (serving/spec.py)
+        decides how many tokens each slot emits (1..k+1). Slots whose
+        drafter is not synced (or that can't get blocks) ride the SAME two
+        traces un-speculated — zeroed drafter probs make the accept step a
+        plain decode draw — so a steady-state spec engine runs exactly
+        these jit entries every step, never a per-state variant."""
+        k = self.spec_k
+        self._grow_for_decode()
+        # who drafts this round: synced drafter + target blocks covering
+        # verify rows pos..pos+k + drafter blocks for the same rows; any
+        # failure just means the slot runs un-speculated (1 token)
+        drafting = np.zeros((self.n_slots,), bool)
+        for i in range(self.n_slots):
+            s = self.slots[i]
+            if s.state != _DECODE or s.draft_done != s.pos:
+                continue
+            rows = min(s.pos + k + 1, self.max_len)
+            need = -(-rows // self.block_size) - len(s.blocks)
+            if need > 0:
+                if not self._make_room(need, i):
+                    continue                 # slot i itself was evicted
+                s.blocks += self.pool.alloc(need)
+            dneed = -(-rows // self.block_size) - len(s.draft_blocks)
+            if dneed > 0 and not self._alloc_draft(i, dneed):
+                continue
+            drafting[i] = True
+        # _make_room above may have preempted earlier-marked slots
+        active = [i for i, s in enumerate(self.slots) if s.state == _DECODE]
+        for i in range(self.n_slots):
+            if drafting[i] and self.slots[i].state != _DECODE:
+                drafting[i] = False
+        if not active:
+            return
+        first = np.zeros((self.n_slots,), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        vtables = np.full((self.n_slots, self.nb_spec), C.NULL_BLOCK,
+                          np.int32)
+        dtables = np.full((self.n_slots, self.nb_spec), C.NULL_BLOCK,
+                          np.int32)
+        mask = np.zeros((self.n_slots,), bool)
+        uids, sidx, temp, topp = self._sampler_rows()
+        for i in active:
+            s = self.slots[i]
+            first[i] = s.next_input
+            pos[i] = s.pos
+            vtables[i] = C.table_row(s.blocks, self.nb_spec)
+            mask[i] = True
+            if drafting[i]:
+                dtables[i] = C.table_row(s.draft_blocks, self.nb_spec)
+
+        self.draft_caches, drafts, p_draft = self._run_jit(
+            "draft", self._draft, self.draft_caches, jnp.asarray(dtables),
+            jnp.asarray(first), jnp.asarray(pos), uids, sidx, temp, topp)
+        vtokens = jnp.concatenate([jnp.asarray(first)[:, None], drafts],
+                                  axis=1)
+        self.caches, logits = self._run_jit(
+            "verify", self._verify, self.caches, jnp.asarray(vtables),
+            vtokens, jnp.asarray(pos), jnp.asarray(mask))
+        n_acc, toks = self._run_jit(
+            "spec_accept", self._spec_accept, logits, drafts, p_draft,
+            jnp.asarray(drafting), uids, sidx, temp, topp)
+        n_acc = np.asarray(n_acc)
+        toks = np.asarray(toks)
+
+        self.decode_steps += 1
+        self.spec_rounds += 1
+        self.busy_slot_steps += len(active)
+        for i in active:
+            s = self.slots[i]
+            req = s.req
+            # cap the emitted block: context room keeps every emitted row
+            # strictly inside real blocks (the widened tables' null-block
+            # overflow is never attended by an emitted token's query)
+            limit = min(int(n_acc[i]) + 1,
+                        (self.max_len - 1) - s.pos,
+                        req.max_new - len(req.out))
+            if drafting[i]:
+                self.spec_draft_tokens += k
+            emitted, done = 0, False
+            for j in range(limit):
+                tok = int(toks[i, j])
+                req.out.append(tok)
+                s.next_input = tok
+                s.pos += 1
+                emitted += 1
+                done = ((req.eos_id is not None and tok == req.eos_id)
+                        or len(req.out) >= req.max_new
+                        or s.pos >= self.max_len - 1)
+                if self.tracer is not None:
+                    self.tracer.on_token(req.uid, tok, done)
+                if req.on_token is not None:
+                    req.on_token(tok, done)
+                if done:
+                    break
+            self.spec_emitted += emitted
+            if drafting[i]:
+                self.spec_accepted += min(int(n_acc[i]), emitted)
+                # every emitted token below the new pos was fed to the
+                # drafter at the same row by the k+1-step scan (accepted
+                # drafts verbatim; the resample/bonus row sits AT the new
+                # pos and is overwritten by the next round's first step)
+                s.draft_done = s.pos
             if done:
                 self._finish(i)
 
@@ -777,8 +1241,14 @@ class Engine:
                     self._do_prefill_batched(sel)
                 else:
                     self._do_prefill_chunk(prefilling[k])
+        if self.spec:
+            with self._phase("draft_prefill"):
+                self._do_draft_prefill()
         with self._phase("decode"):
-            self._do_decode()
+            if self.spec:
+                self._do_spec_decode()
+            else:
+                self._do_decode()
         self.steps += 1
         if tr is not None:
             tr.step_end(self._sample_gauges())
@@ -844,6 +1314,18 @@ class Engine:
             "prefix_cache": (self.radix.metrics()
                              if self.radix is not None else None),
             "n_compiles": self.n_compiles(),
+            "spec": None if not self.spec else {
+                "rounds": self.spec_rounds,
+                "draft_tokens": self.spec_draft_tokens,
+                "accepted": self.spec_accepted,
+                "emitted": self.spec_emitted,
+                "acceptance_rate": (self.spec_accepted
+                                    / max(self.spec_draft_tokens, 1)),
+                # per SLOT-step (1.0 == plain decode; up to spec_k+1)
+                "accepted_tokens_per_step": (self.spec_emitted
+                                             / max(self.busy_slot_steps, 1)),
+                "draft_evictions": self.spec_draft_evictions,
+            },
             # unified registry snapshot (counters above + compile tracking
             # + last-sampled gauges), flat name{label=value} keys
             "metrics": self.obs.snapshot(),
@@ -871,10 +1353,12 @@ class Engine:
     def n_compiles(self) -> Optional[int]:
         """Total jit cache entries across the engine's step functions (the
         no-recompilation-between-steps check in benchmarks/serving.py)."""
+        fns = [self._decode, self._prefill_chunk, self._prefill_batched,
+               self._prefill_whole, self._reset, self._sample]
+        if self.spec:
+            fns += [self._draft, self._verify, self._draft_prefill,
+                    self._spec_accept]
         try:
-            return sum(int(f._cache_size()) for f in
-                       (self._decode, self._prefill_chunk,
-                        self._prefill_batched, self._prefill_whole,
-                        self._reset))
+            return sum(int(f._cache_size()) for f in fns)
         except AttributeError:                 # older jax: no _cache_size
             return None

@@ -1,0 +1,147 @@
+"""Composable per-request sampler stack for the serving engine.
+
+The engine's historical ``sample`` hook was a host-side greedy lambda:
+``argmax(logits, -1)``. This module replaces it with a jit-safe stack that
+runs INSIDE the fixed-shape decode step:
+
+  temperature -> top-k -> top-p -> seeded Gumbel/categorical draw
+
+applied per batch row, with per-request temperature/top-p (``(B,)`` arrays)
+and one engine-global static ``top_k`` (``lax.top_k`` needs a static k).
+
+Determinism contract: the PRNG key for every draw is derived from
+``(seed, uid, sidx, purpose[, step])`` only —
+
+  key_b = fold_in(fold_in(PRNGKey(seed), uid_b), sidx_b)  then fold by tag
+
+where ``uid`` is the request's id and ``sidx`` its per-request sample
+index (the number of tokens already generated for plain decode; the
+round's token count for speculative rounds). Slot index, batch
+composition, and ``prefill_batch`` never enter the derivation, so a seeded
+sampled run is bit-reproducible across runs AND across scheduling changes
+that re-batch the same requests, and two requests in one batch draw from
+independent streams (tested in tests/test_sampler.py).
+
+Greedy (``temperature == 0``) rows short-circuit to a one-hot of
+``argmax`` over the RAW logits: the categorical draw over a one-hot
+distribution returns exactly that argmax index, bit-identical to the old
+lambda, so the default engine behavior is unchanged. Rows are
+independently greedy or sampled — one request at temperature 0 in a batch
+of sampled requests still decodes greedily.
+
+The filtered distribution (``probs``) is also what speculative decoding's
+lossless rejection sampler consumes (serving/spec.py): acceptance ratios
+and residuals are computed over the SAME warped distribution the
+target-only engine would sample from, which is what makes the spec path
+distributionally identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# purpose tags folded into the per-request key so the plain-decode draw,
+# the drafter's draws, the accept thresholds, and the residual resample
+# are four independent streams
+TAG_DECODE = 0
+TAG_DRAFT = 1
+TAG_ACCEPT = 2
+TAG_RESAMPLE = 3
+
+_NEG_INF = jnp.float32(-jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """Engine-global sampler defaults (per-request ``Request.temperature``
+    / ``Request.top_p`` override the first two; ``top_k`` is static because
+    ``lax.top_k`` requires a compile-time k).
+
+    temperature  0.0 => greedy argmax (the engine's historical default)
+    top_k        keep the k highest-probability tokens (0 = off)
+    top_p        keep the minimal prefix of the sorted distribution whose
+                 cumulative probability covers p (1.0 = off)
+    seed         base PRNG seed for every per-request key derivation
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def request_keys(seed: int, uids: jax.Array, sidx: jax.Array) -> jax.Array:
+    """(B,) per-request keys from (seed, uid, sample-index) — independent
+    of slot index and batch composition. jit-safe (seed is static)."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(
+        lambda u, s: jax.random.fold_in(jax.random.fold_in(base, u), s)
+    )(uids.astype(jnp.uint32), sidx.astype(jnp.uint32))
+
+
+def fold_tag(keys: jax.Array, tag: int) -> jax.Array:
+    """Fold a purpose tag (TAG_*) into a (B,) key batch."""
+    return jax.vmap(lambda k: jax.random.fold_in(k, jnp.uint32(tag)))(keys)
+
+
+def warp_logits(logits: jax.Array, temperature: jax.Array,
+                top_k: int, top_p: jax.Array) -> jax.Array:
+    """Apply the warp stack to (B, V) f32 logits with per-row temperature
+    (B,) and top_p (B,); returns filtered logits with excluded entries at
+    -inf. Greedy rows (temperature <= 0) are NOT handled here — ``probs``
+    overrides them with a one-hot."""
+    B, V = logits.shape
+    t = jnp.where(temperature > 0, temperature, 1.0)[:, None]
+    x = logits / t
+    if top_k and top_k < V:
+        kth = jax.lax.top_k(x, top_k)[0][:, -1:]          # (B, 1)
+        x = jnp.where(x < kth, _NEG_INF, x)
+    # top-p: minimal sorted prefix whose cumulative probability covers p.
+    # Element i (sorted desc) is kept iff the mass BEFORE it is < p — the
+    # first element is always kept, and the boundary element that crosses
+    # p is included (minimal covering prefix).
+    order = jnp.argsort(-x, axis=-1)
+    sx = jnp.take_along_axis(x, order, axis=-1)
+    sp = jax.nn.softmax(sx, axis=-1)
+    before = jnp.cumsum(sp, axis=-1) - sp
+    keep_sorted = before < top_p[:, None]
+    sx = jnp.where(keep_sorted, sx, _NEG_INF)
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(sx, inv, axis=-1)
+
+
+def probs(logits: jax.Array, temperature: jax.Array,
+          top_k: int, top_p: jax.Array) -> jax.Array:
+    """(B, V) f32 logits -> the per-row distribution the engine samples
+    from. Greedy rows (temperature <= 0) get a one-hot at the raw-logits
+    argmax (exactly the historical argmax lambda); sampled rows get
+    softmax over the warped logits."""
+    warped = jax.nn.softmax(
+        warp_logits(logits, temperature, top_k, top_p), axis=-1)
+    onehot = jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1],
+                            dtype=warped.dtype)
+    return jnp.where((temperature > 0)[:, None], warped, onehot)
+
+
+def draw(p: jax.Array, keys: jax.Array) -> jax.Array:
+    """Sample one token id per row from (B, V) probabilities with (B,)
+    per-request keys (Gumbel-max via jax.random.categorical). A one-hot
+    row returns its index deterministically for any key (log 0 = -inf
+    loses every Gumbel race), which is what makes greedy exact."""
+    logp = jnp.log(p)
+    return jax.vmap(jax.random.categorical)(keys, logp).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, cfg: SamplerConfig, uids: jax.Array,
+           sidx: jax.Array, temperature: jax.Array,
+           top_p: jax.Array) -> jax.Array:
+    """The engine's plain decode draw: warp + seeded categorical.
+    (B, V) f32 logits -> (B,) int32 token ids."""
+    keys = fold_tag(request_keys(cfg.seed, uids, sidx), TAG_DECODE)
+    return draw(probs(logits, temperature, cfg.top_k, top_p), keys)

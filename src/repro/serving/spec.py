@@ -1,0 +1,90 @@
+"""Lossless rejection sampling for self-speculative decoding.
+
+The engine (serving/engine.py) drafts ``k`` tokens per round with a
+quantized copy of the weights and verifies all of them in one fixed-shape
+``(n_slots, k+1)`` target forward. This module holds the math that turns
+the two distributions into emitted tokens without changing the output
+distribution (Leviathan et al.-style speculative sampling):
+
+  for i = 1..k:    accept draft d_i with prob  min(1, p_t(d_i)/p_d(d_i))
+  on 1st reject:   resample from the residual  max(0, p_t - p_d) / Z
+  all accepted:    draw one bonus token from the target's position-k
+                   distribution (the residual formula with p_d := 0)
+
+so each round emits between 1 and k+1 tokens whose joint distribution is
+EXACTLY target-only sampling. Under greedy (temperature 0) both
+distributions are one-hots, the accept test degenerates to
+``d_i == argmax_target`` and the residual to the target argmax — the spec
+engine's token stream is bit-identical to non-speculative greedy decode
+(tested in tests/test_spec_decode.py).
+
+Everything here is fixed-shape jax, traced once inside the engine's
+``_spec_accept`` step: ``p_draft`` rows of non-drafting slots are zeroed
+by the caller, which makes their accept count 0 and their "residual" the
+plain target distribution — a non-drafting slot IS a normal decode step
+through the same trace.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reject_sample(draft_tokens: jax.Array,      # (B, k) int32
+                  p_draft: jax.Array,           # (B, k, V) drafter probs
+                  p_target: jax.Array,          # (B, k+1, V) target probs
+                  accept_keys: jax.Array,       # (B,) PRNG keys
+                  resample_keys: jax.Array,     # (B,) PRNG keys
+                  ):
+    """Returns ``(n_acc (B,) int32, tokens (B, k+1) int32)``.
+
+    ``n_acc`` is the number of leading drafts accepted (0..k);
+    ``tokens[:, :n_acc]`` are the accepted drafts and ``tokens[:, n_acc]``
+    is the residual/bonus draw, so a round emits ``n_acc + 1`` tokens
+    (the engine may cap the emitted count by budget/EOS/context limits —
+    any prefix of the emitted block is still distributionally exact).
+
+    One uniform per draft position decides acceptance (u < p_t/p_d accepts
+    with probability min(1, ratio)); the first rejection index is where
+    the residual resample happens. Keys must be pre-folded per purpose
+    (sampler.TAG_ACCEPT / TAG_RESAMPLE) so the two draws are independent
+    of each other and of the drafter's own draws.
+    """
+    B, k = draft_tokens.shape
+    # p_t(d_i) / p_d(d_i) per draft position
+    pt_d = jnp.take_along_axis(p_target[:, :k], draft_tokens[..., None],
+                               axis=-1)[..., 0]           # (B, k)
+    pd_d = jnp.take_along_axis(p_draft, draft_tokens[..., None],
+                               axis=-1)[..., 0]           # (B, k)
+    u = jax.vmap(lambda key: jax.random.uniform(key, (k,)))(accept_keys)
+    # u in [0,1): u*p_d < p_t accepts w.p. min(1, p_t/p_d); p_d == 0 rows
+    # (non-drafting slots) make the ratio 0/0 — the multiply form keeps it
+    # a plain comparison and rejects iff p_t == 0 too, which is irrelevant
+    # because the caller zeroes p_draft, forcing u*0 < p_t only when the
+    # target gives the token mass. Force-reject those rows instead.
+    accept = (u * pd_d < pt_d) & (pd_d > 0)               # (B, k) bool
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=-1),
+                    axis=-1)                              # (B,) 0..k
+    # residual at the first-reject position; position k (all accepted) uses
+    # p_d := 0, i.e. the plain target bonus draw
+    pd_ext = jnp.concatenate(
+        [p_draft, jnp.zeros_like(p_draft[:, :1])], axis=1)  # (B, k+1, V)
+    pt_at = jnp.take_along_axis(
+        p_target, n_acc[:, None, None], axis=1)[:, 0]     # (B, V)
+    pd_at = jnp.take_along_axis(
+        pd_ext, n_acc[:, None, None], axis=1)[:, 0]       # (B, V)
+    residual = jnp.maximum(pt_at - pd_at, 0.0)
+    z = residual.sum(axis=-1, keepdims=True)
+    # z == 0 only when p_t <= p_d pointwise, i.e. the distributions are
+    # equal — any accepted-support draw is then exact; fall back to p_t
+    residual = jnp.where(z > 0, residual / jnp.maximum(z, 1e-20), pt_at)
+    logp = jnp.log(residual)
+    x = jax.vmap(jax.random.categorical)(resample_keys,
+                                         logp).astype(jnp.int32)
+    # emitted block: accepted drafts then the residual/bonus draw
+    pos_i = jnp.arange(k + 1)[None, :]
+    d_pad = jnp.concatenate(
+        [draft_tokens, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    tokens = jnp.where(pos_i < n_acc[:, None], d_pad, x[:, None])
+    return n_acc.astype(jnp.int32), tokens

@@ -1,0 +1,83 @@
+"""Hypothesis import shim for the property-test suites.
+
+When hypothesis is installed (CI), this re-exports the real
+``given`` / ``settings`` / ``st``. When it is not (minimal containers),
+property tests degrade to a deterministic pseudo-random grid — each
+``@given`` function runs 12 examples drawn with a fixed-seed
+``random.Random`` — instead of silently skipping, so the properties keep
+some teeth everywhere. Only the small strategy subset these suites use is
+mimicked (integers / floats / just / tuples / one_of / lists).
+"""
+
+import random
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                           # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _Settings:
+        @staticmethod
+        def register_profile(*a, **k):
+            pass
+
+        @staticmethod
+        def load_profile(*a, **k):
+            pass
+
+    settings = _Settings()
+
+    class _Strat:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _St:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strat(lambda r: r.randint(lo, hi))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strat(lambda r: r.uniform(lo, hi))
+
+        @staticmethod
+        def just(v):
+            return _Strat(lambda r: v)
+
+        @staticmethod
+        def tuples(*ss):
+            return _Strat(lambda r: tuple(s.draw(r) for s in ss))
+
+        @staticmethod
+        def one_of(*ss):
+            return _Strat(lambda r: r.choice(ss).draw(r))
+
+        @staticmethod
+        def lists(elt, min_size=0, max_size=10, unique=False):
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                out, seen, tries = [], set(), 0
+                while len(out) < n and tries < 10 * max(n, 1):
+                    tries += 1
+                    v = elt.draw(r)
+                    if unique:
+                        if v in seen:
+                            continue
+                        seen.add(v)
+                    out.append(v)
+                return out
+            return _Strat(draw)
+
+    st = _St()
+
+    def given(**kw):
+        def deco(fn):
+            def run():
+                rng = random.Random(0xC0FFEE)
+                for _ in range(12):
+                    fn(**{k: s.draw(rng) for k, s in kw.items()})
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return deco

@@ -9,8 +9,7 @@ runs alongside and the invariants are checked after every operation.
 
 import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from _hyp_compat import given, settings, st  # noqa: E402
 
 from repro.serving.cache import NULL_BLOCK, BlockPool  # noqa: E402
 
@@ -110,3 +109,76 @@ def test_null_block_is_never_granted_exhaustively():
     got = pool.alloc(8)
     assert got is not None and NULL_BLOCK not in got
     assert pool.alloc(1) is None
+
+
+# op encoding for the two-table (speculative) protocol:
+#   ("admit", (t, d)) | ("grow_t", n) | ("grow_d", n)
+#   | ("evict_draft", pick) | ("finish", pick)
+_SPEC_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("admit"),
+                  st.tuples(st.integers(1, 4), st.integers(0, 3))),
+        st.tuples(st.just("grow_t"), st.integers(1, 3)),
+        st.tuples(st.just("grow_d"), st.integers(1, 3)),
+        st.tuples(st.just("evict_draft"), st.integers(0, 10 ** 6)),
+        st.tuples(st.just("finish"), st.integers(0, 10 ** 6)),
+    ),
+    max_size=60,
+)
+
+
+@given(n_blocks=st.integers(3, 14), ops=_SPEC_OPS)
+def test_blockpool_two_table_invariants(n_blocks, ops):
+    """Speculative serving holds TWO ownership sets per request — the target
+    table and the best-effort draft table — sharing one block-id space.
+    Whatever interleaving of admissions, growth, draft evictions (draft set
+    freed, target untouched), and finishes (both freed) occurs, the refcount
+    invariants must hold and the pool must drain clean."""
+    pool = BlockPool(n_blocks)
+    model: dict[int, int] = {}
+    reqs: list[tuple[list[int], list[int]]] = []   # (target_ids, draft_ids)
+
+    def _take(n):
+        got = pool.alloc(n)
+        can = sum(1 for b in range(1, n_blocks) if model.get(b, 0) == 0)
+        if n > can:
+            assert got is None
+            return None
+        assert got is not None and NULL_BLOCK not in got
+        for b in got:
+            assert model.get(b, 0) == 0
+            model[b] = 1
+        return list(got)
+
+    for op, arg in ops:
+        if op == "admit":
+            t, d = arg
+            tids = _take(t)
+            if tids is None:
+                continue
+            dids = _take(d) or []       # draft table is best-effort
+            reqs.append((tids, dids))
+        elif op == "grow_t" and reqs:
+            got = _take(arg)
+            if got:
+                reqs[-1][0].extend(got)
+        elif op == "grow_d" and reqs:
+            got = _take(arg)
+            if got:
+                reqs[-1][1].extend(got)
+        elif op == "evict_draft" and reqs:
+            _, dids = reqs[arg % len(reqs)]
+            pool.free(dids)
+            for b in dids:
+                model[b] -= 1
+            dids.clear()
+        elif op == "finish" and reqs:
+            tids, dids = reqs.pop(arg % len(reqs))
+            pool.free(tids + dids)
+            for b in tids + dids:
+                model[b] -= 1
+        _check_invariants(pool, model)
+
+    for tids, dids in reqs:
+        pool.free(tids + dids)
+    assert pool.n_free == n_blocks - 1

@@ -130,6 +130,44 @@ def test_lut_gemm_grouped_equals_scaled_dequant():
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("wb,ab", [(4, 8), (2, 8), (2, 4), (8, 4)])
+def test_lut_gemm_asymmetric_bits_match_ref(wb, ab):
+    """Mixed operand widths (ROADMAP carried bug): the kernel used one pack
+    factor for both operands, so w4a8 (2 weight codes/byte vs 1 activation
+    code/byte) tripped the packed-width assert. K must come from each
+    operand's own factor and the index shift from a_bits."""
+    M, N, K = 8, 16, 64
+    rng = np.random.default_rng(11)
+    ap = packing.pack(_codes((M, K), ab, rng), ab)
+    wp = packing.pack(_codes((N, K), wb, rng), wb)
+    assert ap.shape[-1] != wp.shape[-1]      # the regression's trigger
+    plut = lut.product_lut(quant.uniform_codebook(wb, signed=True),
+                           quant.uniform_codebook(ab, signed=True))
+    want = ref.ref_lut_gemm(ap, wp, plut)
+    for scheme in ("a", "d"):
+        got = registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                                w_bits=wb, a_bits=ab, scheme=scheme,
+                                backend="pallas_interpret",
+                                block=(8, 16, 32))
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_lut_gemm_asymmetric_grouped_scales():
+    M, N, K, wb, ab, G = 8, 8, 128, 4, 8, 32
+    rng = np.random.default_rng(12)
+    ap = packing.pack(_codes((M, K), ab, rng), ab)
+    wp = packing.pack(_codes((N, K), wb, rng), wb)
+    plut = lut.product_lut(quant.uniform_codebook(wb, signed=True),
+                           quant.uniform_codebook(ab, signed=True))
+    sc = jnp.asarray(np.abs(rng.normal(size=(N, K // G))) + 0.05, jnp.float32)
+    want = ref.ref_lut_gemm(ap, wp, plut, w_scales=sc, group_size=G)
+    got = registry.dispatch("lut_gemm", ap, wp, plut.table, sc,
+                            w_bits=wb, a_bits=ab, group_size=G,
+                            backend="pallas_interpret", block=(8, 8, 64))
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_lut65k_matches_lut16():
     M, N, K, bits = 4, 8, 32, 2
     ap, wp = _pack_pair(M, N, K, bits)

@@ -12,7 +12,9 @@ from repro.launch.serve import validate_args
 def _args(**kw):
     base = dict(paged=False, prefix_cache=False, prefill_batch=1,
                 prefill="chunked", tp=1, a_scale="dynamic", a_bits=None,
-                plan=None, trace_out=None, metrics_out=None)
+                plan=None, trace_out=None, metrics_out=None,
+                spec_draft_plan=None, spec_k=4, temperature=0.0,
+                top_k=0, top_p=1.0, seed=0)
     base.update(kw)
     return argparse.Namespace(**base)
 
@@ -96,3 +98,38 @@ def test_tp_rejects_more_shards_than_devices(qwen):
     # the test process sees exactly one CPU device (conftest)
     with pytest.raises(ValueError, match="devices"):
         validate_args(_args(paged=True, tp=8), qwen)
+
+
+def test_spec_draft_plan_requires_paged(qwen):
+    with pytest.raises(ValueError, match="--spec-draft-plan requires --paged"):
+        validate_args(_args(spec_draft_plan="w2a2"), qwen)
+
+
+def test_spec_draft_plan_rejects_recurrent_arch(recurrent):
+    with pytest.raises(ValueError, match="recurrent"):
+        validate_args(_args(paged=True, spec_draft_plan="w2a2"), recurrent)
+
+
+def test_spec_draft_plan_rejects_whole_prefill(qwen):
+    with pytest.raises(ValueError, match="--prefill whole"):
+        validate_args(_args(paged=True, spec_draft_plan="w2a2",
+                            prefill="whole"), qwen)
+
+
+def test_spec_draft_plan_must_be_known(qwen):
+    with pytest.raises(ValueError, match="not a known plan preset"):
+        validate_args(_args(paged=True, spec_draft_plan="w9a9"), qwen)
+
+
+def test_sampler_flag_ranges(qwen):
+    with pytest.raises(ValueError, match="--spec-k must be >= 1"):
+        validate_args(_args(paged=True, spec_draft_plan="w2a2", spec_k=0),
+                      qwen)
+    with pytest.raises(ValueError, match="--temperature"):
+        validate_args(_args(paged=True, temperature=-0.1), qwen)
+    with pytest.raises(ValueError, match="--top-p"):
+        validate_args(_args(paged=True, top_p=0.0), qwen)
+    with pytest.raises(ValueError, match="--top-k"):
+        validate_args(_args(paged=True, top_k=-1), qwen)
+    validate_args(_args(paged=True, spec_draft_plan="w2a2",
+                        temperature=0.8, top_k=40, top_p=0.95), qwen)

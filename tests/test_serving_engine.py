@@ -319,3 +319,45 @@ def test_block_pool_alloc_free_refcount():
     assert pool.n_free == 5
     with pytest.raises(AssertionError):
         pool.free(a[:1])                # double free
+
+
+# --------------------------------------------------------------------------- #
+# Speculative decoding: draft-pool pressure
+# --------------------------------------------------------------------------- #
+
+def test_draft_pool_exhaustion_evicts_drafter_not_target():
+    """The drafter's KV is best-effort: when the shared pool runs dry, the
+    engine reclaims DRAFT blocks first (largest holder), and the evicted
+    drafter re-prefills later without ever corrupting the target KV — the
+    greedy output stream must stay bit-identical to a non-spec engine with
+    an ample pool, and the pool must drain clean."""
+    import dataclasses
+    from repro.core import qplan
+
+    cfg, params = _setup()
+    dcfg = dataclasses.replace(cfg, quant=qplan.get_plan("w2a2"))
+    dparams = lm.quantize_tree(params, dcfg)
+    prompts = [jax.random.randint(jax.random.fold_in(KEY, 40 + i),
+                                  (8 + 3 * i,), 0, cfg.vocab_size)
+               for i in range(4)]
+
+    def serve(spec, n_blocks):
+        kw = dict(spec_draft_params=dparams, spec_draft_cfg=dcfg,
+                  spec_k=3) if spec else {}
+        e = Engine(cfg, params, n_slots=2, max_len=64, block_size=8,
+                   chunk_size=16, prefill_batch=2, n_blocks=n_blocks, **kw)
+        reqs = [Request(uid=i, prompt=p, max_new=20)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            e.submit(r)
+        e.run(max_steps=50_000)
+        assert all(r.done for r in reqs)
+        return [r.out for r in reqs], e
+
+    ref, _ = serve(spec=False, n_blocks=None)       # ample pool reference
+    out, e = serve(spec=True, n_blocks=13)          # tight shared pool
+    assert out == ref
+    sp = e.metrics()["spec"]
+    assert sp["draft_evictions"] > 0, \
+        "pool was not tight enough to exercise draft eviction"
+    assert e.pool.n_free == e.n_blocks - 1          # no leaked draft blocks
