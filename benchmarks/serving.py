@@ -56,6 +56,17 @@ Workloads:
    non-spec engine, accepted tokens per slot-step > 1.0, zero steady-state
    recompiles.
 
+8. Long context (split-KV flash decode + ring-paged local layers,
+   docs/serving.md#long-context-serving): decode-ready slots are PLANTED at
+   8k and 32k context depth (seeded pool fill + slot-state surgery — no
+   O(ctx^2) prefill), then split-KV decode (kv_splits=8) races single-pass
+   on byte-identical device state. A second pair of runs puts the
+   sliding-window arch's local layers in per-slot block rings. CI gates:
+   split tokens bit-identical to single-pass, split tok/s >= 1.3x
+   single-pass at 32k, zero steady-state recompiles, and ring-paged
+   local-layer pool bytes + per-request ring blocks flat from 8k to 32k
+   while the full-table equivalent grows with context.
+
 Reported per backend: wall time, requests/s, tokens/s, mean/median
 time-to-first-token, decode steps, prefill tokens computed/shared, and jit
 cache entries sampled early vs at the end (`recompiled_between_steps` must
@@ -102,6 +113,18 @@ _Q_GROUP = 64                         # group-scale ablation group size
 # speculative-serving workload (w2a2 self-draft; see _spec_serving)
 _SPEC_K = 4
 _SPEC_REQUESTS = 6
+# long-context workload (split-KV flash decode + ring-paged local layers):
+# decode-ready slots are planted surgically at depth — seeded pool fill +
+# slot-state surgery — so the workload times the decode step itself instead
+# of an O(ctx^2) prefill. Compared engines get byte-identical pools and
+# block tables, so greedy tokens must match exactly.
+_LC_RING_ARCH = "gemma3-12b"
+_LC_CONTEXTS = (8192, 32768)
+_LC_BLOCK = 512
+_LC_SLOTS = 2
+_LC_GEN = 12
+_LC_WARM = 3
+_LC_SPLITS = 8
 
 
 def _workload(cfg, seed=0):
@@ -318,6 +341,159 @@ def _spec_serving(cfg, params, prompts) -> dict:
         "draft_evictions": sp["draft_evictions"],
         "recompiled_between_steps": e.n_compiles() > c0,
         "pool_drained": e.pool.n_free == e.n_blocks - 1,
+    }
+
+
+def _lc_engine(cfg, params, ctx, **kw):
+    return Engine(cfg, params, n_slots=_LC_SLOTS,
+                  max_len=ctx + 4 * _LC_BLOCK, block_size=_LC_BLOCK,
+                  chunk_size=_LC_BLOCK, **kw)
+
+
+def _lc_plant(e, cfg, ctx, gen, seed):
+    """Slot surgery: fill every cache pool with seeded synthetic KV and set
+    each slot decode-ready at pos=ctx (blocks and rings allocated exactly as
+    admission would). Two engines planted with the same seed hold
+    byte-identical device state, so their greedy decode must agree."""
+    import jax.numpy as jnp
+    from repro.serving.engine import _DECODE
+    rng = np.random.default_rng(seed)
+
+    def fill(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jnp.asarray(rng.standard_normal(x.shape) * 0.05, x.dtype)
+        if x.dtype == jnp.int8:
+            return jnp.asarray(rng.integers(-127, 128, x.shape), jnp.int8)
+        return x
+
+    e.caches = jax.tree.map(fill, e.caches)
+    reqs = []
+    for i in range(e.n_slots):
+        s = e.slots[i]
+        r = Request(uid=i, prompt=jax.numpy.zeros((1,), jnp.int32),
+                    max_new=gen)
+        s.req = r
+        s.state = _DECODE
+        s.prompt = np.zeros((1,), np.int32)
+        s.pos = ctx
+        s.next_input = int(rng.integers(0, cfg.vocab_size))
+        s.blocks = e.pool.alloc(ctx // e.block_size + 1)
+        e._note_blocks("target", len(s.blocks))
+        if e.ring_len:
+            s.ring_blocks = e.ring_pool.alloc(e.ring_len)
+            e._note_blocks("ring", e.ring_len)
+        reqs.append(r)
+    return reqs
+
+
+def _lc_decode(cfg, params, ctx, seed=11, **kw) -> dict:
+    """One planted decode run: _LC_WARM compile/warmup steps outside the
+    timed window, then _LC_GEN timed steps with the jit cache pinned."""
+    e = _lc_engine(cfg, params, ctx, **kw)
+    reqs = _lc_plant(e, cfg, ctx, _LC_GEN + _LC_WARM, seed)
+    for _ in range(_LC_WARM):
+        e._do_decode()
+    c0 = e.n_compiles()
+    t0 = time.time()
+    for _ in range(_LC_GEN):
+        e._do_decode()
+    dt = time.time() - t0
+    n_tok = _LC_GEN * len(reqs)
+    return {
+        "wall_s": round(dt, 3),
+        "tok_per_s": round(n_tok / max(dt, 1e-9), 2),
+        "recompiled_between_steps": e.n_compiles() > c0,
+        "outputs": [r.out for r in reqs],
+        "engine": e,
+    }
+
+
+def _lc_local_pool_bytes(e, cfg) -> int:
+    """Device bytes held by LOCAL-attention KV pools in the engine's cache
+    tree (the quantity ring paging flattens)."""
+    total = 0
+
+    def walk(tree):
+        nonlocal total
+        for k, v in tree.items():
+            if k[:1] in ("l", "r") and k[1:].isdigit() and "attn" in v:
+                if cfg.pattern[int(k[1:])] == "local":
+                    total += sum(x.size * x.dtype.itemsize
+                                 for x in jax.tree.leaves(v["attn"]))
+            elif isinstance(v, dict):
+                walk(v)
+
+    walk(e.caches)
+    return total
+
+
+def _long_context(cfg, params) -> dict:
+    """Split-KV flash decode vs single-pass at 8k/32k planted contexts, and
+    ring-paged local layers on the sliding-window arch.
+
+    CI gates: split tokens bit-identical to single-pass at every context,
+    zero steady-state recompiles everywhere, split tok/s >= 1.3x single-pass
+    at the 32k shape, and ring-paged local-layer pool bytes + per-request
+    ring blocks FLAT from 8k to 32k while the full-table equivalent grows."""
+    rows = {}
+    for ctx in _LC_CONTEXTS:
+        single = _lc_decode(cfg, params, ctx, kv_splits=1)
+        split = _lc_decode(cfg, params, ctx, kv_splits=_LC_SPLITS)
+        rows[str(ctx)] = {
+            "single_tok_per_s": single["tok_per_s"],
+            "split_tok_per_s": split["tok_per_s"],
+            "speedup": round(split["tok_per_s"]
+                             / max(single["tok_per_s"], 1e-9), 2),
+            "tokens_match": single["outputs"] == split["outputs"],
+            "recompiled": (single["recompiled_between_steps"]
+                           or split["recompiled_between_steps"]),
+            "peak_target_blocks": split["engine"].metrics()
+            ["pool_blocks_peak"].get("target"),
+        }
+        del single, split
+
+    rcfg = reduce_for_smoke(get_config(_LC_RING_ARCH))
+    rparams = lm.init_params(jax.random.PRNGKey(1), rcfg, mode="plain")
+    ring = {}
+    for ctx in _LC_CONTEXTS:
+        r = _lc_decode(rcfg, rparams, ctx, kv_splits=_LC_SPLITS, ring=True)
+        e = r["engine"]
+        legacy = _lc_engine(rcfg, rparams, ctx)   # pools only, never stepped
+        ring[str(ctx)] = {
+            "ring_len_blocks": e.ring_len,
+            "peak_ring_gauge": e.metrics()["pool_blocks_peak"].get("ring"),
+            "local_pool_bytes": _lc_local_pool_bytes(e, rcfg),
+            "legacy_local_pool_bytes": _lc_local_pool_bytes(legacy, rcfg),
+            "full_table_blocks_per_request": ctx // _LC_BLOCK + 1,
+            "recompiled": r["recompiled_between_steps"],
+        }
+        del r, e, legacy
+
+    short, long_ = (ring[str(c)] for c in _LC_CONTEXTS)
+    return {
+        "arch": cfg.name,
+        "ring_arch": rcfg.name,
+        "contexts": list(_LC_CONTEXTS),
+        "block_size": _LC_BLOCK,
+        "n_slots": _LC_SLOTS,
+        "gen": _LC_GEN,
+        "kv_splits": _LC_SPLITS,
+        "rows": rows,
+        "speedup_long": rows[str(_LC_CONTEXTS[-1])]["speedup"],
+        "tokens_match_all": all(r["tokens_match"] for r in rows.values()),
+        "recompile_free": not any(r["recompiled"] for r in rows.values()),
+        "ring": ring,
+        "ring_local_bytes_flat": (short["local_pool_bytes"]
+                                  == long_["local_pool_bytes"]),
+        "ring_blocks_per_request_flat": (short["ring_len_blocks"]
+                                         == long_["ring_len_blocks"]),
+        "legacy_local_bytes_grow": (long_["legacy_local_pool_bytes"]
+                                    > short["legacy_local_pool_bytes"]),
+        "ring_peak_gauge_ok": all(
+            ring[str(c)]["peak_ring_gauge"] == ring[str(c)]["ring_len_blocks"]
+            for c in _LC_CONTEXTS),
+        "ring_recompile_free": not any(
+            ring[str(c)]["recompiled"] for c in _LC_CONTEXTS),
     }
 
 
@@ -554,6 +730,15 @@ def run(json_out: str = "BENCH_serving.json") -> dict:
           f"{spec['greedy_token_identical']}, recompiled "
           f"{spec['recompiled_between_steps']}", flush=True)
 
+    print(f"[serving] long-context decode: ctx {list(_LC_CONTEXTS)}, "
+          f"split-KV x{_LC_SPLITS} vs single-pass, ring-paged "
+          f"{_LC_RING_ARCH}", flush=True)
+    lc = _long_context(cfg, params)
+    print(f"[serving]   32k split speedup {lc['speedup_long']}x, tokens "
+          f"match {lc['tokens_match_all']}, ring local bytes flat "
+          f"{lc['ring_local_bytes_flat']} (legacy grows "
+          f"{lc['legacy_local_bytes_grow']})", flush=True)
+
     print("[serving] observability overhead (tracer attached vs not, "
           "best of 3 each)", flush=True)
     obs = _overhead(cfg, params, prompts)
@@ -613,6 +798,7 @@ def run(json_out: str = "BENCH_serving.json") -> dict:
         },
         "quantized_serving": quantized,
         "spec_serving": spec,
+        "long_context": lc,
         "observability": obs,
         "group_scale_ablation": ablation,
         "tp_serving": tp,

@@ -137,3 +137,144 @@ def paged_attention_pallas(
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
       q, k_pool, k_sc, v_pool, v_sc)
     return out
+
+
+# --------------------------------------------------------------------------- #
+# Split-KV (flash-decoding) variant: pass 1 walks each of `kv_splits` chunks
+# of the block table independently, emitting UNNORMALIZED per-chunk partials
+# (acc, m, l) — the (m, l) pair is the chunk's log-sum-exp in (max, sumexp)
+# form, lse = m + log l, kept decomposed so the merge needs no log/exp round
+# trip. Pass 2 is a fixed-shape exact merge over the split axis.
+# --------------------------------------------------------------------------- #
+
+
+def merge_splitkv_partials(o: jax.Array, m: jax.Array, l: jax.Array
+                           ) -> jax.Array:
+    """Exactly merge per-chunk online-softmax partials over split axis 1.
+
+    ``o`` (B, ns, KV, G, hd) unnormalized chunk outputs (sum of exp(s - m)·v),
+    ``m`` / ``l`` (B, ns, KV, G) chunk running max / sum-of-exp. Returns the
+    (B, KV, G, hd) attention output identical (up to fp reassociation) to the
+    unsplit softmax:
+
+        M = max_c m_c;  out = Σ_c e^{m_c-M} o_c / Σ_c e^{m_c-M} l_c
+
+    All-masked chunks carry m = -1e30, so e^{m_c-M} underflows to an exact
+    0.0 whenever any chunk saw a live row — null-block padding contributes
+    exact zeros, never NaN. A fully masked row merges to 0 via the clamp.
+    """
+    M = m.max(axis=1)
+    w = jnp.exp(m - M[:, None])
+    num = (o * w[..., None]).sum(axis=1)
+    den = (l * w).sum(axis=1)
+    return num / jnp.maximum(den, 1e-30)[..., None]
+
+
+def _paged_attn_splitkv_kernel(tbl_ref, len_ref, q_ref, k_ref, ksc_ref,
+                               v_ref, vsc_ref, o_ref, m_ref, l_ref, *,
+                               bits: int, bs: int, nbc: int, scale: float):
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    jj = pl.program_id(2)
+    del tbl_ref  # consumed by the index maps (scalar prefetch)
+
+    @pl.when(jj == 0)
+    def _init():
+        o_ref[0, 0] = jnp.zeros_like(o_ref[0, 0])
+        m_ref[0, 0] = jnp.full_like(m_ref[0, 0], _NEG)
+        l_ref[0, 0] = jnp.zeros_like(l_ref[0, 0])
+
+    k = _dequant_tile(k_ref, ksc_ref, bits)            # (bs, KV, hd)
+    v = _dequant_tile(v_ref, vsc_ref, bits)
+    q = q_ref[0].astype(jnp.float32)                   # (KV, G, hd)
+
+    sc = jnp.einsum("egh,seh->egs", q, k) * scale      # (KV, G, bs)
+    pos = (c * nbc + jj) * bs + jnp.arange(bs)
+    mask = pos < len_ref[b]
+    sc = jnp.where(mask[None, None, :], sc, _NEG)
+
+    m_prev, l_prev = m_ref[0, 0], l_ref[0, 0]          # (KV, G)
+    m_new = jnp.maximum(m_prev, sc.max(-1))
+    p = jnp.exp(sc - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(-1)
+    pv = jnp.einsum("egs,seh->egh", p, v)              # (KV, G, hd)
+    o_ref[0, 0] = o_ref[0, 0] * corr[..., None] + pv
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+    # no finalize: partials stay unnormalized for the exact merge pass
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "kv_splits", "interpret"))
+def paged_attention_splitkv_pallas(
+    q: jax.Array,             # (B, KV, G, hd) single-position queries
+    k_pool: jax.Array,        # (n_blocks, bs, KV, hd/f) uint8/int8 codes
+    k_sc: jax.Array,          # (n_blocks, bs, KV) f32
+    v_pool: jax.Array,
+    v_sc: jax.Array,
+    block_tables: jax.Array,  # (B, nb_max) int32 physical block ids
+    lengths: jax.Array,       # (B,) valid context lengths
+    *,
+    bits: int = 4,
+    kv_splits: int = 2,
+    interpret: bool = False,
+) -> jax.Array:
+    """Two-pass flash-decoding paged attention: partition each request's
+    block table into ``kv_splits`` chunks, fold each chunk with its own
+    online softmax into (acc, m, l) partials, then merge exactly with
+    :func:`merge_splitkv_partials`. Tables are right-padded to a fixed
+    per-chunk width with null blocks; padded rows sit past ``lengths`` so
+    they mask to exact zeros."""
+    B, KV, G, hd = q.shape
+    bs = k_pool.shape[1]
+    nb = block_tables.shape[1]
+    ns = max(1, min(int(kv_splits), nb))
+    nbc = -(-nb // ns)                                 # blocks per chunk
+    tbl = jnp.pad(block_tables.astype(jnp.int32), ((0, 0), (0, ns * nbc - nb)))
+    grid = (B, ns, nbc)
+    kernel = functools.partial(_paged_attn_splitkv_kernel, bits=bits, bs=bs,
+                               nbc=nbc, scale=hd ** -0.5)
+
+    def q_map(b, c, jj, tbl, lens):
+        return (b, 0, 0, 0)
+
+    def kv_map(b, c, jj, tbl, lens):
+        return (tbl[b, c * nbc + jj], 0, 0, 0)
+
+    def sc_map(b, c, jj, tbl, lens):
+        return (tbl[b, c * nbc + jj], 0, 0)
+
+    def o_map(b, c, jj, tbl, lens):
+        return (b, c, 0, 0, 0)
+
+    def acc_map(b, c, jj, tbl, lens):
+        return (b, c, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # block_tables, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), q_map),
+            pl.BlockSpec((1, bs, KV, k_pool.shape[-1]), kv_map),
+            pl.BlockSpec((1, bs, KV), sc_map),
+            pl.BlockSpec((1, bs, KV, v_pool.shape[-1]), kv_map),
+            pl.BlockSpec((1, bs, KV), sc_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, KV, G, hd), o_map),
+            pl.BlockSpec((1, 1, KV, G), acc_map),
+            pl.BlockSpec((1, 1, KV, G), acc_map),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, ns, KV, G, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, ns, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, ns, KV, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tbl, lengths.astype(jnp.int32), q, k_pool, k_sc, v_pool, v_sc)
+    return merge_splitkv_partials(o, m, l)

@@ -248,3 +248,59 @@ def ref_paged_attention(
 
     return ref_kv_cache_attention(q, view(k_pool), view(k_sc),
                                   view(v_pool), view(v_sc), lengths, bits)
+
+
+def ref_paged_attention_splitkv(
+    q: jax.Array,             # (B, KV, G, hd)
+    k_pool: jax.Array,        # (n_blocks, bs, KV, hd/f)
+    k_sc: jax.Array,          # (n_blocks, bs, KV)
+    v_pool: jax.Array,
+    v_sc: jax.Array,
+    block_tables: jax.Array,  # (B, nb_max)
+    lengths: jax.Array,       # (B,)
+    bits: int,
+    kv_splits: int = 2,
+) -> jax.Array:
+    """Oracle for the flash-decoding split: partition each table into
+    ``kv_splits`` chunks, compute per-chunk unnormalized partials (acc, m, l)
+    with plain jnp, and merge exactly — the same (max, sumexp) lse algebra as
+    ``kernels.paged_attention.merge_splitkv_partials``, kept standalone here
+    so the oracle shares no code with the lowering it checks."""
+    B, nb = block_tables.shape
+    bs = k_pool.shape[1]
+    ns = max(1, min(int(kv_splits), nb))
+    nbc = -(-nb // ns)
+    tbl = jnp.pad(block_tables, ((0, 0), (0, ns * nbc - nb)))
+
+    if bits == 4:
+        def dq(pool, sc):
+            u = packing.unpack(pool, 4).astype(jnp.float32)
+            return (u - 8.0) * sc[..., None]
+    else:
+        def dq(pool, sc):
+            return pool.astype(jnp.float32) * sc[..., None]
+
+    hd = q.shape[-1]
+    qf = q.astype(jnp.float32)
+    o_parts, m_parts, l_parts = [], [], []
+    for c in range(ns):
+        ids = tbl[:, c * nbc:(c + 1) * nbc]         # (B, nbc)
+        kd = dq(k_pool[ids], k_sc[ids]).reshape(B, nbc * bs, *k_pool.shape[2:-1], -1)
+        vd = dq(v_pool[ids], v_sc[ids]).reshape(B, nbc * bs, *v_pool.shape[2:-1], -1)
+        s = jnp.einsum("begh,bseh->begs", qf, kd) * hd ** -0.5
+        pos = c * nbc * bs + jnp.arange(nbc * bs)
+        mask = pos[None, :] < lengths[:, None]
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+        m_c = s.max(-1)                             # (B, KV, G)
+        p = jnp.exp(s - m_c[..., None])
+        o_parts.append(jnp.einsum("begs,bseh->begh", p, vd))
+        m_parts.append(m_c)
+        l_parts.append(p.sum(-1))
+    o = jnp.stack(o_parts, axis=1)                  # (B, ns, KV, G, hd)
+    m = jnp.stack(m_parts, axis=1)                  # (B, ns, KV, G)
+    ll = jnp.stack(l_parts, axis=1)
+    M = m.max(axis=1)
+    w = jnp.exp(m - M[:, None])
+    num = (o * w[..., None]).sum(axis=1)
+    den = (ll * w).sum(axis=1)
+    return num / jnp.maximum(den, 1e-30)[..., None]

@@ -55,7 +55,8 @@ from .lut_dequant_matmul import dequant_matmul_pallas
 from .expert_dequant_matmul import (expert_dequant_matmul_pallas,
                                     expert_lut_gemm_pallas)
 from .kv_cache_attention import kv_cache_attention_pallas
-from .paged_attention import paged_attention_pallas
+from .paged_attention import (paged_attention_pallas,
+                              paged_attention_splitkv_pallas)
 
 # Legacy mirror of the global registry's kernel-dispatch view. Kept only so
 # pre-PR 7 callers holding a reference keep seeing live counts; it mirrors
@@ -403,6 +404,43 @@ def _paged_attn_pl(q, kp, k_sc, vp, v_sc, bt, lengths, *, bits=4,
                                   bits=bits, interpret=interpret)
 
 
+def _paged_attn_splitkv_ref(q, kp, k_sc, vp, v_sc, bt, lengths, *, bits=4,
+                            kv_splits=2):
+    return _ref.ref_paged_attention_splitkv(q, kp, k_sc, vp, v_sc, bt,
+                                            lengths, bits,
+                                            kv_splits=kv_splits)
+
+
+def _paged_attn_splitkv_pl(q, kp, k_sc, vp, v_sc, bt, lengths, *, bits=4,
+                           kv_splits=2, interpret=False, bm=None, bn=None,
+                           bk=None):
+    # autotuner tile override: bn carries the kv_splits candidate
+    del bm, bk
+    return paged_attention_splitkv_pallas(
+        q, kp, k_sc, vp, v_sc, bt, lengths, bits=bits,
+        kv_splits=int(bn) if bn else kv_splits, interpret=interpret)
+
+
+def _paged_attn_splitkv_tp(role, ax, n, arrays, static):
+    """Head-sharded: KV heads split across the mesh axis — q/out on axis 1,
+    pools and scales on their KV axis 2, tables/lengths replicated. Pure
+    data parallelism over heads, so no collective (reduce=False)."""
+    del role
+    q = arrays[0]
+    KV = q.shape[1]
+    if KV % n != 0:
+        return None
+    return ((P(None, ax), P(None, None, ax), P(None, None, ax),
+             P(None, None, ax), P(None, None, ax), P(), P()),
+            P(None, ax), False)
+
+
+def _splitkv_tile_space(m, k, n, static):
+    # the tunable knob is kv_splits (threaded through the bn slot); bm/bk
+    # are placeholders so the (bm, bn, bk) block contract stays uniform
+    return [(1, s, 0) for s in (1, 2, 4, 8, 16)]
+
+
 # --------------------------------------------------------------------------- #
 # The registry
 # --------------------------------------------------------------------------- #
@@ -462,3 +500,13 @@ register(KernelOp(
     doc="Decode attention over a paged packed KV-cache pool via per-"
         "sequence block tables. arrays: (q, k_pool, k_sc, v_pool, v_sc, "
         "block_tables, lengths)"))
+
+register(KernelOp(
+    name="paged_attention_splitkv",
+    ref=_paged_attn_splitkv_ref, pallas=_paged_attn_splitkv_pl,
+    tp_rule=_paged_attn_splitkv_tp, tile_space=_splitkv_tile_space,
+    doc="Flash-decoding paged attention: the block table is partitioned "
+        "into kv_splits chunks, each folded by its own online softmax into "
+        "(acc, m, l) partials, then a fixed-shape lse merge reduces them "
+        "exactly. arrays: (q, k_pool, k_sc, v_pool, v_sc, block_tables, "
+        "lengths)"))

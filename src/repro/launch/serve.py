@@ -120,6 +120,40 @@ def validate_args(args, cfg) -> None:
             "--a-scale static is incompatible with --plan legacy: the "
             "legacy dequant-einsum forward has no activation quantization "
             "to calibrate a scale for")
+    if args.kv_splits != "auto":
+        try:
+            ks = int(args.kv_splits)
+        except ValueError:
+            raise ValueError(
+                f"--kv-splits must be 'auto' or a positive integer, got "
+                f"{args.kv_splits!r}") from None
+        if ks < 1:
+            raise ValueError(f"--kv-splits must be >= 1, got {ks}")
+        if not args.paged:
+            raise ValueError(
+                "--kv-splits requires --paged: split-KV flash decode "
+                "partitions the paged engine's block tables; the "
+                "fixed-batch loop has no block tables to split")
+        if recurrent:
+            raise ValueError(
+                f"--kv-splits is incompatible with recurrent arch "
+                f"'{cfg.name}': per-slot scan state has no KV axis to "
+                "partition (attention-only archs support split-KV decode)")
+    if args.ring:
+        if not args.paged:
+            raise ValueError(
+                "--ring requires --paged: ring-paged local layers replace "
+                "the paged engine's full-length block tables; the "
+                "fixed-batch loop already folds local windows densely")
+        if not any(t == "local" for t in cfg.pattern) or not cfg.window:
+            raise ValueError(
+                f"--ring requires a sliding-window arch: '{cfg.name}' has "
+                "no local attention layers to ring-page")
+        if args.prefix_cache:
+            raise ValueError(
+                "--ring is incompatible with --prefix-cache: ring blocks "
+                "are per-slot and rewritten in place, so local-layer KV "
+                "can never be shared across requests")
     if args.trace_out and not args.paged:
         raise ValueError(
             "--trace-out requires --paged: request-lifecycle tracing hooks "
@@ -161,7 +195,8 @@ def serve_paged(cfg, qparams, args, mesh=None, spec=None) -> int:
                     prefill=args.prefill,
                     prefix_cache=args.prefix_cache,
                     prefill_batch=args.prefill_batch, mesh=mesh,
-                    sampler=sampler, tracer=tracer, **spec_kw)
+                    sampler=sampler, tracer=tracer, ring=args.ring,
+                    kv_splits=args.kv_splits, **spec_kw)
     if mesh is not None:
         print(f"  tensor-parallel over {mesh.shape['model']} devices: "
               f"{engine.per_device_weight_bytes()/1e3:.1f} KB weights "
@@ -284,6 +319,18 @@ def main():
                     choices=("chunked", "whole"),
                     help="paged-engine admission mode (whole replays the "
                          "legacy dense batcher's whole-prompt prefill)")
+    ap.add_argument("--kv-splits", default="auto",
+                    help="split-KV flash-decode chunks per decode step "
+                         "(--paged): 'auto' picks from the max KV blocks "
+                         "per slot (1 at short max-len, i.e. the "
+                         "single-pass trace), or an explicit count >= 1")
+    ap.add_argument("--ring", action="store_true",
+                    help="ring-paged local layers (--paged, sliding-window "
+                         "archs): local-attention KV lives in a fixed "
+                         "per-slot ring of ~ceil(window/block_size) blocks "
+                         "from a dedicated pool, so local-layer memory per "
+                         "request stays flat in context length "
+                         "(token-identical to full tables, not bitwise)")
     ap.add_argument("--spec-draft-plan", default=None,
                     help="enable self-speculative decoding (--paged): pack "
                          "a SECOND copy of the weights under this plan "

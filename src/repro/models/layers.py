@@ -265,6 +265,35 @@ def decode_attention(
     return out.astype(q.dtype)
 
 
+def masked_attention(
+    q: jax.Array,            # (B, Sq, KV, G, hd)
+    k: jax.Array,            # (B, Sk, KV, hd)
+    v: jax.Array,            # (B, Sk, KV, hd)
+    valid: jax.Array,        # (B, Sq, Sk) bool, per-query key mask
+) -> jax.Array:
+    """Dense attention under an arbitrary per-query mask — the ring-paged
+    local path, where key rows are a ring view + the in-flight chunk and the
+    mask encodes both the ring recency window and in-chunk causality. Key
+    count is O(window), so the dense (Sq, Sk) score tile stays small by
+    construction."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqegh,bseh->begqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.where(valid[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("begqs,bseh->bqegh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _scatter_pool_rows(pool: jax.Array, new: jax.Array, blk: jax.Array,
+                       offs: jax.Array) -> jax.Array:
+    """Scatter per-token rows ``new`` (B, S, ...) into a paged pool at
+    (block, offset) coordinates ``blk`` / ``offs`` (both (B, S))."""
+    B, S = blk.shape
+    return pool.at[blk.reshape(-1), offs.reshape(-1)].set(
+        new.reshape(B * S, *new.shape[2:]).astype(pool.dtype))
+
+
 # --------------------------------------------------------------------------- #
 # Attention layer (self / cross, cached / uncached)
 # --------------------------------------------------------------------------- #
@@ -356,6 +385,8 @@ def attn_apply(
     pos: Optional[jax.Array] = None,         # (B,) decode position
     segments: Optional[jax.Array] = None,    # (B,S) packed-sequence ids
     block_tables: Optional[jax.Array] = None,  # (B, nb) paged-cache tables
+    ring_tables: Optional[jax.Array] = None,   # (B, ring_len) local-layer ring
+    kv_splits: Optional[int] = None,           # static flash-decode split count
 ) -> tuple[jax.Array, Optional[dict]]:
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -391,7 +422,8 @@ def attn_apply(
             q = apply_rope(q.reshape(B, S, H, hd), positions, cfg.rope_theta,
                            cfg.mrope_sections).reshape(B, S, KV, G, hd)
             k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
-        if cache is not None and block_tables is not None:
+        if cache is not None and (block_tables is not None
+                                  or ring_tables is not None):
             # Paged cache (serving engine): the layer cache is a shared block
             # pool (n_blocks, bs_tok, KV, ...) and block_tables maps each
             # row's logical block j to a physical block. Gather the slot's
@@ -400,13 +432,144 @@ def attn_apply(
             # path (bit-identical on equal view lengths), then scatter only
             # the written rows back into the pool.
             bs_tok = cache["k"].shape[1]
-            nb = block_tables.shape[1]
-            S_view = nb * bs_tok
             int8_cache = cfg.kv_cache_dtype in KV_QUANT and "k_sc" in cache
             if int8_cache:
                 qf, dqf = KV_QUANT[cfg.kv_cache_dtype]
                 k, k_sc = qf(k)
                 v, v_sc = qf(v)
+
+            if layer_type == "local" and ring_tables is not None:
+                # Ring-paged local layer: the pool holds only ring_len blocks
+                # per slot (absolute row t lives at ring row t mod R), so
+                # memory per request is O(window), flat in context length.
+                # Attend over [pre-write ring view ++ in-flight chunk]: the
+                # ring view carries rows <= pos-1 (each ring row's absolute
+                # position recovered from pos and its ring index), the chunk
+                # adds rows [pos, pos+S) causally — then scatter the chunk
+                # into its ring slots. Correctness needs R >= window + span
+                # - 1 (span = max chunk/spec-verify advance): stale or pad
+                # rows alias a full R below their write position, which the
+                # recency mask then rejects.
+                ring_len = ring_tables.shape[1]
+                R = ring_len * bs_tok
+
+                def rgather(pool):
+                    g = pool[ring_tables]                # (B, ring_len, bs,.)
+                    return g.reshape(B, R, *pool.shape[2:])
+
+                if int8_cache:
+                    kd = jnp.concatenate(
+                        [dqf(rgather(cache["k"]), rgather(cache["k_sc"])),
+                         dqf(k, k_sc)], axis=1)
+                    vd = jnp.concatenate(
+                        [dqf(rgather(cache["v"]), rgather(cache["v_sc"])),
+                         dqf(v, v_sc)], axis=1)
+                else:
+                    kd = jnp.concatenate(
+                        [rgather(cache["k"]), k.astype(cache["k"].dtype)],
+                        axis=1)
+                    vd = jnp.concatenate(
+                        [rgather(cache["v"]), v.astype(cache["v"].dtype)],
+                        axis=1)
+
+                last = pos - 1                           # newest ring row
+                ridx = jnp.arange(R)[None, :]
+                qabs = last[:, None] - jnp.mod(last[:, None] - ridx, R)
+                t = pos[:, None] + jnp.arange(S)[None, :]          # (B, S)
+                valid_ring = ((qabs[:, None, :] >= 0)
+                              & (qabs[:, None, :] > t[:, :, None] - window))
+                sidx = jnp.arange(S)
+                valid_cur = ((sidx[None, None, :] <= sidx[None, :, None])
+                             & (sidx[None, :, None] - sidx[None, None, :]
+                                < window))
+                valid = jnp.concatenate(
+                    [valid_ring, jnp.broadcast_to(valid_cur, (B, S, S))],
+                    axis=2)
+                out = masked_attention(q, kd, vd, valid)
+
+                rows = pos[:, None] + jnp.arange(S)[None, :]
+                blk = jnp.take_along_axis(
+                    ring_tables, (rows // bs_tok) % ring_len, axis=1)
+                offs = rows % bs_tok
+                new_cache = {"k": _scatter_pool_rows(cache["k"], k, blk, offs),
+                             "v": _scatter_pool_rows(cache["v"], v, blk, offs)}
+                if int8_cache:
+                    new_cache["k_sc"] = _scatter_pool_rows(cache["k_sc"],
+                                                           k_sc, blk, offs)
+                    new_cache["v_sc"] = _scatter_pool_rows(cache["v_sc"],
+                                                           v_sc, blk, offs)
+                out = out.reshape(B, S, H * hd)
+                out = shard(out, "batch", "seq", "heads_act")
+                y = dense(p["wo"], out, tag="attn.wo", policy=pol, mode=mode)
+                y = checkpoint_name(
+                    shard(y, "batch", "seq_sp", "embed_act"), "block_out")
+                return y, new_cache  # ring epilogue mirrors the shared tail
+
+            nb = block_tables.shape[1]
+            S_view = nb * bs_tok
+            rows = pos[:, None] + jnp.arange(S)[None, :]             # (B, S)
+            blk = jnp.take_along_axis(
+                block_tables, jnp.minimum(rows // bs_tok, nb - 1), axis=1)
+            offs = rows % bs_tok
+
+            if kv_splits is not None and int(kv_splits) > 1 and S == 1:
+                # Flash-decoding split-KV decode: scatter the new row FIRST,
+                # then reduce the block table in kv_splits chunks — the
+                # chunk axis is a tensor dim (one blocked masked-softmax
+                # pass yielding per-chunk unnormalized partials), merged
+                # exactly by merge_splitkv_partials. Scattering before
+                # attending skips the single-pass path's full-width
+                # gathered-view update copy (_cache_update), and the f32
+                # score/value contractions accumulate straight off the pool
+                # dtype — which is what makes long-context decode faster
+                # than single-pass.
+                new_cache = {"k": _scatter_pool_rows(cache["k"], k, blk, offs),
+                             "v": _scatter_pool_rows(cache["v"], v, blk, offs)}
+                if int8_cache:
+                    new_cache["k_sc"] = _scatter_pool_rows(cache["k_sc"],
+                                                           k_sc, blk, offs)
+                    new_cache["v_sc"] = _scatter_pool_rows(cache["v_sc"],
+                                                           v_sc, blk, offs)
+                from repro.kernels.paged_attention import (
+                    merge_splitkv_partials)
+                ns = min(int(kv_splits), nb)
+                nbc = -(-nb // ns)
+                tblp = jnp.pad(block_tables, ((0, 0), (0, ns * nbc - nb)))
+                qf32 = q[:, 0].astype(jnp.float32)       # (B, KV, G, hd)
+                scale = hd ** -0.5
+
+                def cgather(pool):                       # (B, ns, nbc*bs, .)
+                    g = pool[tblp]
+                    return g.reshape(B, ns, nbc * bs_tok, *pool.shape[2:])
+
+                if int8_cache:
+                    kd = dqf(cgather(new_cache["k"]),
+                             cgather(new_cache["k_sc"]))
+                    vd = dqf(cgather(new_cache["v"]),
+                             cgather(new_cache["v_sc"]))
+                else:
+                    # no f32 materialization of the view: the contractions
+                    # below accumulate in f32 straight off the pool dtype
+                    kd, vd = cgather(new_cache["k"]), cgather(new_cache["v"])
+                idx = jnp.arange(ns * nbc * bs_tok).reshape(ns, nbc * bs_tok)
+                cvalid = idx[None] <= pos[:, None, None]
+                if window is not None:
+                    cvalid &= idx[None] > pos[:, None, None] - window
+                s = jnp.einsum("begh,bnseh->bnegs", qf32, kd,
+                               preferred_element_type=jnp.float32) * scale
+                s = jnp.where(cvalid[:, :, None, None, :], s, -1e30)
+                m_c = s.max(-1)                          # (B, ns, KV, G)
+                pr = jnp.exp(s - m_c[..., None])
+                acc = jnp.einsum("bnegs,bnseh->bnegh", pr, vd,
+                                 preferred_element_type=jnp.float32)
+                out = merge_splitkv_partials(acc, m_c, pr.sum(-1))
+                out = out[:, None].astype(q.dtype)       # (B, 1, KV, G, hd)
+                out = out.reshape(B, S, H * hd)
+                out = shard(out, "batch", "seq", "heads_act")
+                y = dense(p["wo"], out, tag="attn.wo", policy=pol, mode=mode)
+                y = checkpoint_name(
+                    shard(y, "batch", "seq_sp", "embed_act"), "block_out")
+                return y, new_cache
 
             def gather(pool):
                 g = pool[block_tables]                   # (B, nb, bs_tok, ..)
@@ -435,20 +598,13 @@ def attn_apply(
                 out = flash_attention(q, kd, vd, causal=True, window=window,
                                       q_offset=pos)
 
-            rows = pos[:, None] + jnp.arange(S)[None, :]             # (B, S)
-            blk = jnp.take_along_axis(
-                block_tables, jnp.minimum(rows // bs_tok, nb - 1), axis=1)
-            offs = rows % bs_tok
-
-            def scatter(pool, new):
-                return pool.at[blk.reshape(-1), offs.reshape(-1)].set(
-                    new.reshape(B * S, *new.shape[2:]).astype(pool.dtype))
-
-            new_cache = {"k": scatter(cache["k"], k),
-                         "v": scatter(cache["v"], v)}
+            new_cache = {"k": _scatter_pool_rows(cache["k"], k, blk, offs),
+                         "v": _scatter_pool_rows(cache["v"], v, blk, offs)}
             if int8_cache:
-                new_cache["k_sc"] = scatter(cache["k_sc"], k_sc)
-                new_cache["v_sc"] = scatter(cache["v_sc"], v_sc)
+                new_cache["k_sc"] = _scatter_pool_rows(cache["k_sc"], k_sc,
+                                                       blk, offs)
+                new_cache["v_sc"] = _scatter_pool_rows(cache["v_sc"], v_sc,
+                                                       blk, offs)
         elif cache is not None:               # dense slot cache, decode S == 1
             int8_cache = cfg.kv_cache_dtype in KV_QUANT and "k_sc" in cache
             if int8_cache:

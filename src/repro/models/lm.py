@@ -181,7 +181,8 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
 # --------------------------------------------------------------------------- #
 
 def _apply_layer(p: dict, x, *, cfg, layer_type, is_moe, mode, positions,
-                 enc_out, cache, pos, segments=None, block_tables=None):
+                 enc_out, cache, pos, segments=None, block_tables=None,
+                 ring_tables=None, kv_splits=None):
     new_cache: dict = {}
     if layer_type == "rwkv":
         y, st = R.rwkv_apply(p["rwkv"], x, cfg=cfg, mode=mode,
@@ -199,7 +200,8 @@ def _apply_layer(p: dict, x, *, cfg, layer_type, is_moe, mode, positions,
                              mode=mode, positions=positions,
                              cache=cache.get("attn") if cache else None,
                              pos=pos, segments=segments,
-                             block_tables=block_tables)
+                             block_tables=block_tables,
+                             ring_tables=ring_tables, kv_splits=kv_splits)
         if kv is not None:
             new_cache["attn"] = kv
     x = x + y
@@ -225,7 +227,7 @@ def _apply_layer(p: dict, x, *, cfg, layer_type, is_moe, mode, positions,
 
 def _apply_superblock(p: dict, x, cache, *, cfg, pattern, moe_flags, mode,
                       positions, enc_out, pos, segments=None,
-                      block_tables=None):
+                      block_tables=None, ring_tables=None, kv_splits=None):
     new_cache = {}
     for i, lt in enumerate(pattern):
         lc = cache.get(f"l{i}") if cache else None
@@ -233,7 +235,8 @@ def _apply_superblock(p: dict, x, cache, *, cfg, pattern, moe_flags, mode,
                              is_moe=moe_flags[i], mode=mode,
                              positions=positions, enc_out=enc_out,
                              cache=lc, pos=pos, segments=segments,
-                             block_tables=block_tables)
+                             block_tables=block_tables,
+                             ring_tables=ring_tables, kv_splits=kv_splits)
         new_cache[f"l{i}"] = nc
     return x, new_cache
 
@@ -303,6 +306,8 @@ def forward(
     segments: Optional[jax.Array] = None,    # (B,S) sequence-packing ids
     collect_cache: bool = False,
     block_tables: Optional[jax.Array] = None,  # (B, nb) paged-cache tables
+    ring_tables: Optional[jax.Array] = None,   # (B, ring_len) local-layer ring
+    kv_splits: Optional[int] = None,           # static flash-decode splits
 ):
     """Token ids -> final hidden states (B, S, D). Returns (hidden, new_caches).
 
@@ -340,7 +345,8 @@ def forward(
     sb_fn = functools.partial(_apply_superblock, cfg=cfg, pattern=cfg.pattern,
                               moe_flags=mp, mode=mode, positions=positions,
                               enc_out=enc_out, pos=pos, segments=segments,
-                              block_tables=block_tables)
+                              block_tables=block_tables,
+                              ring_tables=ring_tables, kv_splits=kv_splits)
 
     new_caches: dict = {}
     if "blocks" in params:
@@ -390,7 +396,8 @@ def forward(
                                  layer_type=lt, is_moe=mp[i], mode=mode,
                                  positions=positions, enc_out=enc_out,
                                  cache=lc, pos=pos, segments=segments,
-                                 block_tables=block_tables)
+                                 block_tables=block_tables,
+                                 ring_tables=ring_tables, kv_splits=kv_splits)
             rem_cache[f"r{i}"] = nc
         if caches is not None or collect_cache:
             new_caches["rem"] = rem_cache
@@ -403,7 +410,16 @@ def prefill_to_cache(cfg, prefill_caches: dict, prefill_len: int,
                      max_len: int) -> dict:
     """Convert collect_cache=True prefill output (full-length K/V, recurrent
     states) into decode buffers: global attention K/V padded to max_len,
-    local attention K/V folded into a W-slot ring (slot = t mod W)."""
+    local attention K/V folded into a W-slot ring (slot = t mod W).
+
+    Window contract shared with the block-granular ring in serving/cache.py
+    (``Engine(ring=True)``): both keep exactly the rows with
+    t > pos - window, so for the same prompt the fold-based dense decode,
+    the full-table paged engine, and the ring-paged engine all attend over
+    the SAME key set and emit identical argmax tokens. They are not bitwise
+    identical on logits — this fold sums softmax terms in t mod W order,
+    the block ring in its own rotated order — which is why ring mode is
+    opt-in and pinned by token-level tests (tests/test_ring_paged.py)."""
 
     def fold(kv: jax.Array, is_local: bool) -> jax.Array:
         # kv: (..., S, KV, hd); seq axis = -3

@@ -146,7 +146,8 @@ def _paged_attn_cache(cfg, n_blocks: int, block_size: int, dtype) -> dict:
 
 
 def _paged_layer_cache(cfg, layer_type: str, n_slots: int, n_blocks: int,
-                       block_size: int, dtype) -> dict:
+                       block_size: int, dtype,
+                       ring_blocks: Optional[int] = None) -> dict:
     c: dict = {}
     if layer_type == "rwkv":
         c["rwkv"] = R.rwkv_state_init(cfg, n_slots, dtype)
@@ -154,21 +155,31 @@ def _paged_layer_cache(cfg, layer_type: str, n_slots: int, n_blocks: int,
     if layer_type == "recurrent":
         c["rnn"] = R.rglru_state_init(cfg, n_slots, dtype)
     else:
-        c["attn"] = _paged_attn_cache(cfg, n_blocks, block_size, dtype)
+        nb = (ring_blocks if ring_blocks is not None
+              and layer_type == "local" else n_blocks)
+        c["attn"] = _paged_attn_cache(cfg, nb, block_size, dtype)
     return c
 
 
 def init_paged_cache(cfg, n_slots: int, n_blocks: int, block_size: int,
-                     dtype=jnp.bfloat16) -> dict:
+                     dtype=jnp.bfloat16,
+                     ring_blocks: Optional[int] = None) -> dict:
     """Paged decode-cache tree, stacked to mirror the parameter structure
-    (superblock scan axis first, like ``lm.init_cache``)."""
+    (superblock scan axis first, like ``lm.init_cache``).
+
+    ``ring_blocks`` (when set) sizes every LOCAL layer's pool to that many
+    physical blocks instead of ``n_blocks``: sliding-window layers become
+    ring-paged — each slot owns a fixed ring of ``ring_len`` blocks and row
+    t lives at ring row ``t mod ring_len * block_size`` — so their memory
+    per request is O(window), flat in context length."""
     if cfg.is_encdec:
         raise NotImplementedError("paged serving of encoder-decoder archs")
     pattern, n_sb, n_rem = cfg.pattern, cfg.n_superblocks, cfg.n_remainder
 
     def sb():
         return {f"l{i}": _paged_layer_cache(cfg, pattern[i], n_slots,
-                                            n_blocks, block_size, dtype)
+                                            n_blocks, block_size, dtype,
+                                            ring_blocks)
                 for i in range(len(pattern))}
 
     out: dict = {}
@@ -178,7 +189,8 @@ def init_paged_cache(cfg, n_slots: int, n_blocks: int, block_size: int,
             lambda x: jnp.broadcast_to(x, (n_sb,) + x.shape), one)
     if n_rem:
         out["rem"] = {f"r{i}": _paged_layer_cache(cfg, pattern[i], n_slots,
-                                                  n_blocks, block_size, dtype)
+                                                  n_blocks, block_size, dtype,
+                                                  ring_blocks)
                       for i in range(n_rem)}
     return out
 
@@ -330,18 +342,72 @@ def _scatter_attn_rows(pool: dict, rows: dict, table_row, block_size: int,
     return out
 
 
+def _scatter_ring_rows(pool: dict, rows: dict, ring_table_row,
+                       block_size: int, kv_dtype: str) -> dict:
+    """Ring counterpart of ``_scatter_attn_rows``: write only the LAST
+    min(P, R) prompt rows, each at its ring slot ``t mod R`` (R = ring rows).
+    Older rows are dropped — they sit outside any future query's window —
+    and unwritten ring slots stay zero, which the attend-time recency mask
+    maps to negative absolute positions and rejects. Host-side scatter
+    writes only real rows, so whole-mode prefill needs no aliasing cushion."""
+    from repro.models.layers import KV_QUANT
+    k, v = rows["k"], rows["v"]               # (*lead, 1, P, KV, hd)
+    P = k.shape[-3]
+    ring_len = int(ring_table_row.shape[0])
+    R = ring_len * block_size
+    L = min(P, R)
+    lead = pool["k"].ndim - 4                 # superblock-stack dims
+
+    # keep the last L token rows (axis -3), then quantize — per-token scales
+    # make slice-then-quantize identical to quantize-then-slice
+    sl = (Ellipsis, slice(P - L, P), slice(None), slice(None))
+    k, v = k[sl], v[sl]
+    if kv_dtype in KV_QUANT:
+        qf = KV_QUANT[kv_dtype][0]
+        k, k_sc = qf(k)
+        v, v_sc = qf(v)
+        parts = {"k": k, "v": v, "k_sc": k_sc, "v_sc": v_sc}
+    else:
+        parts = {"k": k, "v": v}
+
+    t = np.arange(P - L, P)
+    blk = jnp.asarray(ring_table_row)[(t // block_size) % ring_len]   # (L,)
+    offs = jnp.asarray(t % block_size)
+
+    out = dict(pool)
+    for name, val in parts.items():
+        tgt = pool[name]
+        val = val.reshape(*val.shape[:lead], *val.shape[lead + 1:])  # drop B
+        val = val.astype(tgt.dtype)
+        if lead:
+            out[name] = tgt.at[:, blk, offs].set(val)
+        else:
+            out[name] = tgt.at[blk, offs].set(val)
+    return out
+
+
 def write_prompt_rows(caches: dict, prefill: dict, table_row, slot_ix,
-                      block_size: int, kv_dtype: str) -> dict:
+                      block_size: int, kv_dtype: str, pattern=None,
+                      ring_table_row=None) -> dict:
     """Merge a ``collect_cache=True`` whole-prompt forward into the paged
     tree: attention K/V rows scatter into the slot's blocks, recurrent /
-    rwkv final states land in the slot's per-slot row."""
+    rwkv final states land in the slot's per-slot row.
 
-    def walk(full, upd, slot_axis):
+    With ``ring_table_row`` set (ring-paged serving), LOCAL layers — located
+    via ``pattern`` and the l{i}/r{i} cache keys — scatter through
+    ``_scatter_ring_rows`` into their per-slot ring instead."""
+
+    def walk(full, upd, slot_axis, layer_type=None):
         out = {}
         for key, fv in full.items():
             if key == "attn":
-                out[key] = _scatter_attn_rows(fv, upd[key], table_row,
-                                              block_size, kv_dtype)
+                if ring_table_row is not None and layer_type == "local":
+                    out[key] = _scatter_ring_rows(fv, upd[key],
+                                                  ring_table_row,
+                                                  block_size, kv_dtype)
+                else:
+                    out[key] = _scatter_attn_rows(fv, upd[key], table_row,
+                                                  block_size, kv_dtype)
             elif key in _PER_SLOT_KEYS:
                 out[key] = jax.tree.map(
                     lambda f, u: jax.lax.dynamic_update_slice(
@@ -350,7 +416,11 @@ def write_prompt_rows(caches: dict, prefill: dict, table_row, slot_ix,
                         + (0,) * (f.ndim - slot_axis - 1)),
                     fv, upd[key])
             else:
-                out[key] = walk(fv, upd[key], slot_axis)
+                lt = layer_type
+                if (pattern is not None and len(key) > 1
+                        and key[0] in "lr" and key[1:].isdigit()):
+                    lt = pattern[int(key[1:])]
+                out[key] = walk(fv, upd[key], slot_axis, lt)
         return out
 
     return {top: walk(caches[top], prefill[top], 1 if top == "blocks" else 0)

@@ -188,6 +188,11 @@ class _Slot:
     # rows mirror the target's fed-token stream (draft_done == pos: synced)
     draft_blocks: list = dataclasses.field(default_factory=list)
     draft_done: int = 0
+    # ring-paged local layers (engine ring=True): fixed per-slot rings of
+    # ring_len blocks from the DEDICATED ring pool (own id space); target
+    # and drafter rings live for the whole slot occupancy
+    ring_blocks: list = dataclasses.field(default_factory=list)
+    draft_ring_blocks: list = dataclasses.field(default_factory=list)
     # radix insert resume hint: deepest indexed node + blocks indexed so
     # far (valid while this slot lives — see RadixCache.insert)
     radix_node: object = None
@@ -259,6 +264,27 @@ class Engine:
                      (kernels/ops). None (default): single-device, byte-for-
                      byte the pre-TP engine.
       rules          preset name (or rules dict) used with ``mesh``
+      ring           ring-page the LOCAL (sliding-window) attention layers:
+                     each slot's local-layer KV lives in a fixed per-slot
+                     ring of ceil((window + span - 1)/block_size) blocks
+                     from a DEDICATED ring pool (span = the largest multi-
+                     row advance: prefill chunk / spec verify width), so
+                     local-layer memory per request is O(window) — flat in
+                     context length — instead of O(max_len). Requires local
+                     layers with a window; incompatible with prefix_cache
+                     (a radix hit skips prefill, leaving ring rows
+                     unwritten). Token-identical to the non-ring engine on
+                     gemma3-style archs (regression-tested), but not
+                     bitwise on logits (the ring rotates the softmax
+                     summation order), hence opt-in.
+      kv_splits      flash-decoding split count for the decode-shaped steps
+                     (S == 1): the paged KV walk is partitioned into this
+                     many chunks with an exact log-sum-exp merge
+                     (kernels/paged_attention.py). "auto" (default) picks
+                     max(1, min(16, max_len // 4096)) — engines with
+                     max_len <= 4096 resolve to 1 and keep the single-pass
+                     path byte-for-byte. Static per engine: no new jit
+                     entries between steps.
 
     All device state lives in `self.caches` (the paged tree) and flows
     through the jit'd step functions with donated buffers; everything else
@@ -275,7 +301,8 @@ class Engine:
                  sample: Optional[Callable] = None,
                  sampler: Optional[S.SamplerConfig] = None,
                  spec_draft_params=None, spec_draft_cfg=None, spec_k: int = 4,
-                 tracer=None, mesh=None, rules="serve_tp"):
+                 tracer=None, mesh=None, rules="serve_tp",
+                 ring: bool = False, kv_splits="auto"):
         if cfg.is_encdec:
             raise NotImplementedError("engine: encoder-decoder serving")
         if cfg.mrope_sections or cfg.n_vision_tokens:
@@ -324,14 +351,71 @@ class Engine:
         self.nb_spec = self.nb_max + (
             -(-(self.spec_k + 1) // block_size) if self.spec else 0)
 
+        # ring-paged local layers (opt-in): each slot's local-layer KV lives
+        # in a fixed ring of ring_len blocks (absolute row t at ring row
+        # t mod R), so local-layer memory per request is O(window) — flat in
+        # context length — instead of O(max_len). The ring carries a cushion
+        # past the window because a multi-row forward (prefill chunk / spec
+        # verify) attends BEFORE it scatters and may plant up to span-1
+        # pad/rejected rows past the kept position: R >= window + span - 1
+        # keeps every row a later query can claim alive, and pushes planted
+        # garbage a full R below any position the recency mask would accept.
+        # Whole-mode prefill scatters host-side (exactly the last min(P, R)
+        # real rows), so span collapses to 1 there: ceil(window/block_size)
+        # blocks per slot, as small as the window allows.
+        self.ring_len = 0
+        self.n_ring_blocks = 0
+        if ring:
+            if not any(t == "local" for t in cfg.pattern) or not cfg.window:
+                raise ValueError(
+                    "ring=True requires local attention layers with a "
+                    "sliding window (cfg.pattern / cfg.window)")
+            if prefix_cache:
+                raise ValueError(
+                    "ring=True is incompatible with prefix_cache: a radix "
+                    "hit skips prefill for the matched rows, which would "
+                    "leave their ring slots unwritten")
+            span = 1
+            if prefill == "chunked":
+                span = max(span, chunk_size)
+            if spec_draft_params is not None:
+                span = max(span, self.spec_k + 1)
+            self.ring_len = -(-(cfg.window + span - 1) // block_size)
+            self.n_ring_blocks = (
+                (2 if spec_draft_params is not None else 1)
+                * n_slots * self.ring_len + 1)
+
+        # flash-decoding split-KV (kernels/paged_attention.py): static split
+        # count threaded into the decode-shaped forwards only (S == 1; the
+        # merge is exact, see merge_splitkv_partials). "auto" keys off the
+        # max KV length per slot — short-context engines resolve to 1 and
+        # keep the single-pass path byte-for-byte; long-context ones walk
+        # the block table in ~4k-row chunks so the per-step working set
+        # stays one chunk instead of the full dequantized view.
+        if kv_splits == "auto":
+            self.kv_splits = max(1, min(16, max_len // 4096))
+        else:
+            self.kv_splits = int(kv_splits)
+            if self.kv_splits < 1:
+                raise ValueError(f"kv_splits must be >= 1: {kv_splits!r}")
+
         self.caches = C.init_paged_cache(cfg, n_slots, self.n_blocks,
-                                         block_size)
+                                         block_size,
+                                         ring_blocks=self.n_ring_blocks
+                                         or None)
         self._cache_specs = None
         if mesh is not None:
             self._cache_specs = C.paged_cache_specs(self.caches, mesh,
                                                     self.rules)
             self.caches = jax.device_put(self.caches, self._cache_specs)
         self.pool = C.BlockPool(self.n_blocks)
+        # the ring pool is DEDICATED (own id space, own null block): rings
+        # are allocated whole at admission and freed at finish/preempt, and
+        # the pool is sized so every slot (target + drafter) always fits —
+        # ring allocation can never fail and never contends with the main
+        # pool's preemption/eviction machinery
+        self.ring_pool = C.BlockPool(self.n_ring_blocks) \
+            if self.ring_len else None
         self._has_state = C.has_per_slot_state(self.caches)
         self.draft_params = None
         self.draft_caches = None
@@ -359,8 +443,9 @@ class Engine:
             # the drafter's paged KV: a SECOND cache tree addressed by the
             # SAME BlockPool ids, so one allocator arbitrates target vs
             # drafter residency (drafter blocks are reclaimed first)
-            self.draft_caches = C.init_paged_cache(self.draft_cfg, n_slots,
-                                                   self.n_blocks, block_size)
+            self.draft_caches = C.init_paged_cache(
+                self.draft_cfg, n_slots, self.n_blocks, block_size,
+                ring_blocks=self.n_ring_blocks or None)
             if mesh is not None:
                 self._draft_cache_specs = C.paged_cache_specs(
                     self.draft_caches, mesh, self.rules)
@@ -404,6 +489,7 @@ class Engine:
         # each other's counts), plus an optional lifecycle/timeline tracer
         self.obs = MetricsRegistry()
         self.tracer = tracer
+        self._peaks: dict[str, int] = {}
         self._admit_counter = 0
         self._pf_rr = 0
         self._dpf_rr = 0
@@ -505,19 +591,25 @@ class Engine:
             lambda x, s: jax.lax.with_sharding_constraint(x, s),
             tree, self._draft_cache_specs)
 
-    def _decode_fn(self, caches, tables, tokens, pos, active):
+    def _decode_fn(self, caches, tables, rings, tokens, pos, active):
         """One token for every slot. tokens (n_slots, 1) int32, pos
-        (n_slots,) int32, tables (n_slots, nb_max) int32, active (n_slots,)
-        bool. Returns (new caches, (n_slots, V) f32 last-token logits)."""
+        (n_slots,) int32, tables (n_slots, nb_max) int32, rings
+        (n_slots, ring_len) int32 or None (static per engine), active
+        (n_slots,) bool. Returns (new caches, (n_slots, V) f32 last-token
+        logits). kv_splits is a static engine constant: the decode-shaped
+        forward walks the KV in chunks when it resolves above 1."""
         with self._mesh_ctx():
             h, new = lm.forward(self.params, self.cfg, tokens, caches=caches,
-                                pos=pos, block_tables=tables)
+                                pos=pos, block_tables=tables,
+                                ring_tables=rings,
+                                kv_splits=self.kv_splits)
             # inactive / prefilling slots keep their per-slot recurrent state
             new = C.select_slots(caches, new, active)
             logits = lm.logits_fn(self.params, self.cfg, h)[:, -1]
             return self._constrain_caches(new), logits
 
-    def _prefill_fn(self, caches, table_row, tokens, start, slot_ix):
+    def _prefill_fn(self, caches, table_row, ring_row, tokens, start,
+                    slot_ix):
         """One prompt chunk for one request. tokens (1, chunk) int32 (pad
         rows zero), start scalar int32 (first row index), slot_ix scalar
         int32 (per-slot recurrent state row). Pad-row K/V falls into the
@@ -525,10 +617,12 @@ class Engine:
         with self._mesh_ctx():
             sliced = C.slot_slice(caches, slot_ix)
             _, new = lm.forward(self.params, self.cfg, tokens, caches=sliced,
-                                pos=start[None], block_tables=table_row[None])
+                                pos=start[None], block_tables=table_row[None],
+                                ring_tables=(None if ring_row is None
+                                             else ring_row[None]))
             return self._constrain_caches(C.slot_merge(caches, new, slot_ix))
 
-    def _prefill_batched_fn(self, caches, tables, tokens, starts):
+    def _prefill_batched_fn(self, caches, tables, rings, tokens, starts):
         """Fixed-shape multi-request chunk. tokens (prefill_batch, chunk)
         int32, starts (prefill_batch,) int32, tables (prefill_batch, nb_max)
         int32. Pad rows carry an all-null table (writes land in the null
@@ -536,7 +630,8 @@ class Engine:
         state, so the returned tree is the updated pool wholesale."""
         with self._mesh_ctx():
             _, new = lm.forward(self.params, self.cfg, tokens, caches=caches,
-                                pos=starts, block_tables=tables)
+                                pos=starts, block_tables=tables,
+                                ring_tables=rings)
             return self._constrain_caches(new)
 
     def _sample_fn(self, logits, uids, sidx, temperature, top_p):
@@ -547,7 +642,7 @@ class Engine:
             return S.sample(logits, self.sampler, uids, sidx, temperature,
                             top_p)
 
-    def _draft_fn(self, dcaches, tables, first_tok, pos, uids, sidx,
+    def _draft_fn(self, dcaches, tables, rings, first_tok, pos, uids, sidx,
                   temperature, top_p):
         """spec_k+1 drafter steps (lax.scan over one-token forwards against
         the DRAFT cache tree) writing rows pos..pos+spec_k. The scan feeds
@@ -565,7 +660,8 @@ class Engine:
                 caches, tok = carry
                 h, new = lm.forward(self.draft_params, self.draft_cfg,
                                     tok[:, None], caches=caches, pos=pos + i,
-                                    block_tables=tables)
+                                    block_tables=tables, ring_tables=rings,
+                                    kv_splits=self.kv_splits)
                 logits = lm.logits_fn(self.draft_params, self.draft_cfg,
                                       h)[:, -1]
                 p = S.probs(logits, temperature, self.sampler.top_k, top_p)
@@ -577,7 +673,7 @@ class Engine:
         k = self.spec_k
         return dcaches, ds[:k].T, jnp.moveaxis(ps[:k], 0, 1)
 
-    def _verify_fn(self, caches, tables, tokens, pos, active):
+    def _verify_fn(self, caches, tables, rings, tokens, pos, active):
         """Fixed-shape (n_slots, spec_k+1) TARGET forward over
         [F[pos], d_1..d_k] returning logits at EVERY position — the same
         per-row chunk math as _prefill_batched_fn, just with the hidden
@@ -587,12 +683,13 @@ class Engine:
         attends them (the engine advances pos only over emitted tokens)."""
         with self._mesh_ctx():
             h, new = lm.forward(self.params, self.cfg, tokens, caches=caches,
-                                pos=pos, block_tables=tables)
+                                pos=pos, block_tables=tables,
+                                ring_tables=rings)
             new = C.select_slots(caches, new, active)
             logits = lm.logits_fn(self.params, self.cfg, h)
             return self._constrain_caches(new), logits
 
-    def _draft_prefill_fn(self, dcaches, tables, tokens, starts):
+    def _draft_prefill_fn(self, dcaches, tables, rings, tokens, starts):
         """_prefill_batched_fn over the DRAFTER params/cache tree: replays
         chunks of the fed-token stream to catch the drafter's KV up to the
         target's context (after admission, radix full-prefix hits,
@@ -600,7 +697,7 @@ class Engine:
         with self._mesh_ctx():
             _, new = lm.forward(self.draft_params, self.draft_cfg, tokens,
                                 caches=dcaches, pos=starts,
-                                block_tables=tables)
+                                block_tables=tables, ring_tables=rings)
             return self._constrain_draft(new)
 
     def _spec_accept_fn(self, logits, drafts, p_draft, drafting, uids, sidx,
@@ -620,15 +717,19 @@ class Engine:
                                 S.fold_tag(keys, S.TAG_ACCEPT),
                                 S.fold_tag(keys, S.TAG_RESAMPLE))
 
-    def _prefill_whole_fn(self, caches, table_row, prompt, slot_ix):
+    def _prefill_whole_fn(self, caches, table_row, ring_row, prompt,
+                          slot_ix):
         # legacy-equivalent admission: one full-prompt forward (same math,
         # same float path as the dense batcher), rows scattered into blocks
+        # (local layers scatter into the slot's ring when ring-paging is on)
         with self._mesh_ctx():
             _, pf = lm.forward(self.params, self.cfg, prompt,
                                collect_cache=True)
             return self._constrain_caches(
                 C.write_prompt_rows(caches, pf, table_row, slot_ix,
-                                    self.block_size, self.cfg.kv_cache_dtype))
+                                    self.block_size, self.cfg.kv_cache_dtype,
+                                    pattern=self.cfg.pattern,
+                                    ring_table_row=ring_row))
 
     # ---------------- admission / preemption ----------------
 
@@ -660,6 +761,40 @@ class Engine:
     def _table_row(self, slot: _Slot) -> np.ndarray:
         return C.table_row(slot.blocks, self.nb_max)
 
+    def _note_blocks(self, kind: str, n: int) -> None:
+        """Track the high-water per-request pool footprint as a labelled
+        gauge ``pool_blocks_peak{kind=...}`` — the signal the long-context
+        memory-flattening gate reads (benchmarks/serving.py): target/draft
+        peaks grow with context, the ring peak must stay flat."""
+        if n > self._peaks.get(kind, 0):
+            self._peaks[kind] = n
+            self.obs.set_gauge("pool_blocks_peak", n, kind=kind)
+
+    def _ring_row(self, blocks: list) -> Optional[jax.Array]:
+        """One slot's ring table row (ring_len,), or None when ring-paging
+        is off — the None is a static empty pytree for the jit'd steps, so
+        a non-ring engine traces exactly the pre-ring functions."""
+        if not self.ring_len:
+            return None
+        return jnp.asarray(np.asarray(blocks, np.int32))
+
+    def _ring_rows(self, rows_slots, n_rows: int,
+                   attr: str = "ring_blocks"):
+        """Stacked ring table rows for a fixed-shape batched step:
+        ``rows_slots`` pairs (batch row j, slot index i) place slot i's ring
+        at row j. Unlisted rows (pad rows, inactive or prefilling slots)
+        stay all-null — their writes land in the ring null block, exactly
+        mirroring the block-table convention — so an inert batch row can
+        never scatter into a live slot's ring."""
+        if not self.ring_len:
+            return None
+        t = np.full((n_rows, self.ring_len), C.NULL_BLOCK, np.int32)
+        for j, i in rows_slots:
+            b = getattr(self.slots[i], attr)
+            if b:
+                t[j] = b
+        return jnp.asarray(t)
+
     def _pick_victim(self) -> Optional[int]:
         occupied = [i for i, s in enumerate(self.slots) if s.state != _FREE]
         if not occupied:
@@ -680,6 +815,10 @@ class Engine:
             self.pool.free(s.blocks)
         if s.draft_blocks:
             self.pool.free(s.draft_blocks)
+        if s.ring_blocks:
+            self.ring_pool.free(s.ring_blocks)
+        if s.draft_ring_blocks:
+            self.ring_pool.free(s.draft_ring_blocks)
         self.slots[ix] = _Slot()
         self.queue.appendleft(req)
         if self.tracer is not None:
@@ -734,6 +873,7 @@ class Engine:
                 continue
             return False
         self.slots[ix].draft_blocks += self.pool.alloc(n)
+        self._note_blocks("draft", len(self.slots[ix].draft_blocks))
         return True
 
     def _free_ix(self) -> Optional[int]:
@@ -779,6 +919,15 @@ class Engine:
                 self.radix.miss_tokens += P - m
             slot = _Slot(req=req, prompt=eff_prompt, pos=0, prefill_done=m,
                          blocks=list(shared), admit_seq=self._admit_counter)
+            if self.ring_len:
+                # dedicated pool sized for every slot: alloc cannot fail
+                slot.ring_blocks = self.ring_pool.alloc(self.ring_len)
+                if self.spec:
+                    slot.draft_ring_blocks = \
+                        self.ring_pool.alloc(self.ring_len)
+                self._note_blocks("ring", self.ring_len)
+            if slot.blocks:
+                self._note_blocks("target", len(slot.blocks))
             self.slots[ix] = slot
             if self.tracer is not None:
                 self.tracer.on_admit(req.uid, shared_tokens=m)
@@ -824,11 +973,13 @@ class Engine:
             if not self._make_room(need, ix):
                 return
             s.blocks += self.pool.alloc(need)
+            self._note_blocks("target", len(s.blocks))
         tr = self.tracer
         t0 = tr.now() if tr is not None else 0.0
         self.caches = self._run_jit(
             "prefill_whole", self._prefill_whole,
             self.caches, jnp.asarray(self._table_row(s)),
+            self._ring_row(s.ring_blocks),
             jnp.asarray(s.prompt, jnp.int32)[None],
             jnp.asarray(ix, jnp.int32))
         if tr is not None:
@@ -860,6 +1011,7 @@ class Engine:
             if not self._make_room(need, ix):
                 return None                   # self-preempted
             s.blocks += self.pool.alloc(need)
+            self._note_blocks("target", len(s.blocks))
         chunk = np.zeros((length,), np.int32)
         chunk[:real] = s.prompt[start:start + real]
         return chunk, start, real
@@ -890,7 +1042,7 @@ class Engine:
         self.caches = self._run_jit(
             "prefill_chunk", self._prefill_chunk,
             self.caches, jnp.asarray(self._table_row(s)),
-            jnp.asarray(chunk)[None],
+            self._ring_row(s.ring_blocks), jnp.asarray(chunk)[None],
             jnp.asarray(start, jnp.int32), jnp.asarray(ix, jnp.int32))
         if tr is not None:
             tr.on_prefill_chunk(s.req.uid, start=start, rows=real, t0=t0,
@@ -931,8 +1083,9 @@ class Engine:
         t0 = tr.now() if tr is not None else 0.0
         self.caches = self._run_jit(
             "prefill_batched", self._prefill_batched,
-            self.caches, jnp.asarray(tables), jnp.asarray(tokens),
-            jnp.asarray(starts))
+            self.caches, jnp.asarray(tables),
+            self._ring_rows([(j, ix) for j, (ix, _) in enumerate(live)], Bp),
+            jnp.asarray(tokens), jnp.asarray(starts))
         if tr is not None:
             t1 = tr.now()
             for ix, (chunk, start, real) in live:
@@ -956,6 +1109,7 @@ class Engine:
                 if not self._make_room(need, i):
                     continue                  # slot i was evicted
                 s.blocks += self.pool.alloc(need)
+                self._note_blocks("target", len(s.blocks))
 
     def _finish(self, ix: int):
         s = self.slots[ix]
@@ -964,6 +1118,10 @@ class Engine:
             self.pool.free(s.blocks)
         if s.draft_blocks:
             self.pool.free(s.draft_blocks)
+        if s.ring_blocks:
+            self.ring_pool.free(s.ring_blocks)
+        if s.draft_ring_blocks:
+            self.ring_pool.free(s.draft_ring_blocks)
         self.slots[ix] = _Slot()
         if self.tracer is not None:
             self.tracer.on_finish(s.req.uid)
@@ -986,7 +1144,9 @@ class Engine:
         mask[active] = True
         self.caches, logits = self._run_jit(
             "decode", self._decode,
-            self.caches, jnp.asarray(tables), tokens, pos, jnp.asarray(mask))
+            self.caches, jnp.asarray(tables),
+            self._ring_rows([(i, i) for i in active], self.n_slots),
+            tokens, pos, jnp.asarray(mask))
         if self.sample is not None:
             nxt = self.sample(logits)        # legacy host-side hook
         else:
@@ -1084,6 +1244,7 @@ class Engine:
         tokens = np.zeros((Bp, self.chunk_size), np.int32)
         starts = np.zeros((Bp,), np.int32)
         tables = np.full((Bp, self.nb_spec), C.NULL_BLOCK, np.int32)
+        rings = np.full((Bp, max(self.ring_len, 1)), C.NULL_BLOCK, np.int32)
         live = []
         for j, i in enumerate(lag):
             s = self.slots[i]
@@ -1096,13 +1257,16 @@ class Engine:
             tokens[j, :real] = self._fed_stream(s, start + real)[start:]
             starts[j] = start
             tables[j] = C.table_row(s.draft_blocks, self.nb_spec)
+            if self.ring_len:
+                rings[j] = s.draft_ring_blocks
             live.append((i, real))
         if not live:
             return
         self.draft_caches = self._run_jit(
             "draft_prefill", self._draft_prefill,
-            self.draft_caches, jnp.asarray(tables), jnp.asarray(tokens),
-            jnp.asarray(starts))
+            self.draft_caches, jnp.asarray(tables),
+            jnp.asarray(rings) if self.ring_len else None,
+            jnp.asarray(tokens), jnp.asarray(starts))
         for i, real in live:
             self.slots[i].draft_done += real
 
@@ -1131,6 +1295,7 @@ class Engine:
                 if not self._make_room(need, i):
                     continue                 # slot i itself was evicted
                 s.blocks += self.pool.alloc(need)
+                self._note_blocks("target", len(s.blocks))
             dneed = -(-rows // self.block_size) - len(s.draft_blocks)
             if dneed > 0 and not self._alloc_draft(i, dneed):
                 continue
@@ -1148,6 +1313,8 @@ class Engine:
                           np.int32)
         dtables = np.full((self.n_slots, self.nb_spec), C.NULL_BLOCK,
                           np.int32)
+        drings = np.full((self.n_slots, max(self.ring_len, 1)),
+                         C.NULL_BLOCK, np.int32)
         mask = np.zeros((self.n_slots,), bool)
         uids, sidx, temp, topp = self._sampler_rows()
         for i in active:
@@ -1158,14 +1325,21 @@ class Engine:
             mask[i] = True
             if drafting[i]:
                 dtables[i] = C.table_row(s.draft_blocks, self.nb_spec)
+                if self.ring_len:
+                    # non-drafting rows keep an all-null ring row: their
+                    # inert scan writes must not plant rows in a draft
+                    # ring a catch-up replay is still filling
+                    drings[i] = s.draft_ring_blocks
 
         self.draft_caches, drafts, p_draft = self._run_jit(
             "draft", self._draft, self.draft_caches, jnp.asarray(dtables),
+            jnp.asarray(drings) if self.ring_len else None,
             jnp.asarray(first), jnp.asarray(pos), uids, sidx, temp, topp)
         vtokens = jnp.concatenate([jnp.asarray(first)[:, None], drafts],
                                   axis=1)
         self.caches, logits = self._run_jit(
             "verify", self._verify, self.caches, jnp.asarray(vtables),
+            self._ring_rows([(i, i) for i in active], self.n_slots),
             vtokens, jnp.asarray(pos), jnp.asarray(mask))
         n_acc, toks = self._run_jit(
             "spec_accept", self._spec_accept, logits, drafts, p_draft,
@@ -1314,6 +1488,10 @@ class Engine:
             "prefix_cache": (self.radix.metrics()
                              if self.radix is not None else None),
             "n_compiles": self.n_compiles(),
+            # high-water per-request pool footprint by kind (also a labelled
+            # obs gauge pool_blocks_peak{kind=...}): the long-context bench
+            # gates on the ring peak staying flat as contexts grow
+            "pool_blocks_peak": dict(self._peaks),
             "spec": None if not self.spec else {
                 "rounds": self.spec_rounds,
                 "draft_tokens": self.spec_draft_tokens,

@@ -1,0 +1,155 @@
+"""Ring-paged local layers: regression tests.
+
+With ``Engine(ring=True)``, LOCAL (sliding-window) attention layers keep
+each slot's KV in a fixed per-slot ring of blocks (absolute row t at ring
+row t mod R) from a dedicated pool, instead of full-length block tables —
+local-layer memory per request is O(window), flat in context length.
+
+Contract (documented in models/lm.py prefill_to_cache and serving/cache.py):
+the ring-paged attend is TOKEN-identical to both the legacy full-table paged
+path and the fold-based whole-forward window path on gemma3-style archs. It
+is not BITWISE identical on logits — the ring rotates the softmax summation
+order — which is why ring is opt-in and these tests pin tokens, not floats.
+"""
+
+import jax
+import pytest
+
+from test_serving_engine import _decode_alone, _setup  # noqa: E402
+
+from repro.serving import Engine, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _prompts(cfg, n=3):
+    return [jax.random.randint(jax.random.fold_in(KEY, 10 + i),
+                               (5 + 4 * i,), 0, cfg.vocab_size)
+            for i in range(n)]
+
+
+def _run(cfg, params, prompts, max_new=5, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("chunk_size", 16)
+    e = Engine(cfg, params, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        assert e.submit(r)
+    m = e.run()
+    assert all(r.done for r in reqs)
+    return [r.out for r in reqs], e, m
+
+
+def test_ring_tokens_match_legacy_paged_chunked():
+    """Chunked prefill: ring engine emits the same tokens as the full-table
+    engine, while its local-layer pools hold n_ring_blocks << n_blocks."""
+    cfg, params = _setup("gemma3-12b")
+    ps = _prompts(cfg)
+    base, eb, _ = _run(cfg, params, ps)
+    ring, er, _ = _run(cfg, params, ps, ring=True)
+    assert ring == base
+
+    # every local layer's pool leaf is ring-sized; the global layer's is not
+    # (pool leaves are (..., n_blocks, block_size, KV, hd), possibly with a
+    # leading stacked-superblock axis)
+    local_nb, global_nb = set(), set()
+
+    def walk(tree):
+        for key, v in tree.items():
+            if key[0] in "lr" and key[1:].isdigit() and "attn" in v:
+                nb = int(v["attn"]["k"].shape[-4])
+                (local_nb if cfg.pattern[int(key[1:])] == "local"
+                 else global_nb).add(nb)
+            elif isinstance(v, dict):
+                walk(v)
+
+    walk(er.caches)
+    assert local_nb == {er.n_ring_blocks} and er.n_ring_blocks < er.n_blocks
+    assert global_nb == {er.n_blocks}
+
+
+def test_ring_whole_mode_matches_fold_path():
+    """prefill='whole' runs the same whole-prompt forward the fold-based
+    dense path uses, then scatters local rows into the ring host-side — and
+    the ring there is EXACTLY ceil(window/block_size) blocks (no chunk
+    cushion). Tokens must match both the isolated fold-based decode and the
+    legacy whole-mode engine."""
+    cfg, params = _setup("gemma3-12b")
+    ps = _prompts(cfg)
+    want = [_decode_alone(cfg, params, p, 5) for p in ps]
+    base, _, _ = _run(cfg, params, ps, prefill="whole")
+    ring, er, _ = _run(cfg, params, ps, prefill="whole", ring=True)
+    assert ring == base == want
+    assert er.ring_len == -(-cfg.window // 8)
+
+
+def test_ring_spec_decode_greedy_identical():
+    """Greedy speculative decode through ring-paged target AND drafter
+    trees stays token-identical to the non-spec, non-ring engine (the
+    lossless-rejection contract survives ring paging)."""
+    cfg, params = _setup("gemma3-12b")
+    ps = _prompts(cfg)
+    base, _, _ = _run(cfg, params, ps)
+    ring, er, m = _run(cfg, params, ps, ring=True,
+                       spec_draft_params=params, spec_k=2)
+    assert ring == base
+    # spec widens the ring cushion to cover the k+1-row verify advance
+    assert er.ring_len >= -(-(cfg.window + er.spec_k) // 8)
+    assert m["pool_blocks_peak"]["ring"] == er.ring_len
+
+
+def test_ring_survives_preemption():
+    """A pool small enough to force preemption: rings are freed with the
+    slot and re-allocated at re-admission, and the recompute prefill
+    rewrites them from row 0 — tokens still match the roomy engine."""
+    cfg, params = _setup("gemma3-12b")
+    ps = _prompts(cfg)
+    base, _, _ = _run(cfg, params, ps, max_new=8)
+    ring, _, m = _run(cfg, params, ps, max_new=8, ring=True, n_blocks=5)
+    assert ring == base
+    assert m["preemptions"] >= 1
+
+
+def test_ring_peak_gauge_flat_across_context_lengths():
+    """The memory-flattening signal: pool_blocks_peak{kind=ring} equals
+    ring_len regardless of how long the contexts grow, while the target
+    (global-layer) peak keeps growing."""
+    cfg, params = _setup("gemma3-12b")
+    short = [jax.random.randint(jax.random.fold_in(KEY, 1), (6,),
+                                0, cfg.vocab_size)]
+    long = [jax.random.randint(jax.random.fold_in(KEY, 2), (40,),
+                               0, cfg.vocab_size)]
+    _, es, ms = _run(cfg, params, short, ring=True)
+    _, el, ml = _run(cfg, params, long, ring=True)
+    assert ms["pool_blocks_peak"]["ring"] == es.ring_len
+    assert ml["pool_blocks_peak"]["ring"] == el.ring_len == es.ring_len
+    assert ml["pool_blocks_peak"]["target"] > ms["pool_blocks_peak"]["target"]
+    g = ml["metrics"]["gauges"]
+    assert g["pool_blocks_peak{kind=ring}"] == el.ring_len
+
+
+def test_ring_validates_arch_and_prefix_cache():
+    cfg, params = _setup("gemma3-12b")
+    with pytest.raises(ValueError, match="prefix_cache"):
+        Engine(cfg, params, n_slots=2, max_len=64, block_size=8,
+               ring=True, prefix_cache=True)
+    cfgq, pq = _setup("qwen1.5-0.5b")
+    with pytest.raises(ValueError, match="local"):
+        Engine(cfgq, pq, n_slots=2, max_len=64, block_size=8, ring=True)
+
+
+def test_kv_splits_decode_tokens_match_single_pass():
+    """Forced split-KV decode (kv_splits > 1) emits the same greedy tokens
+    as the single-pass engine on both archs; 'auto' resolves to 1 at these
+    context lengths and stays byte-for-byte the legacy trace."""
+    for arch in ("qwen1.5-0.5b", "gemma3-12b"):
+        cfg, params = _setup(arch)
+        ps = _prompts(cfg)
+        base, eb, _ = _run(cfg, params, ps)
+        assert eb.kv_splits == 1                     # auto, max_len=64
+        split, es, m = _run(cfg, params, ps, kv_splits=3)
+        assert es.kv_splits == 3 and split == base
+        assert m["n_compiles"] is None or m["n_compiles"] <= 3

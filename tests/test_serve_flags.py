@@ -14,7 +14,7 @@ def _args(**kw):
                 prefill="chunked", tp=1, a_scale="dynamic", a_bits=None,
                 plan=None, trace_out=None, metrics_out=None,
                 spec_draft_plan=None, spec_k=4, temperature=0.0,
-                top_k=0, top_p=1.0, seed=0)
+                top_k=0, top_p=1.0, seed=0, kv_splits="auto", ring=False)
     base.update(kw)
     return argparse.Namespace(**base)
 
@@ -119,6 +119,49 @@ def test_spec_draft_plan_rejects_whole_prefill(qwen):
 def test_spec_draft_plan_must_be_known(qwen):
     with pytest.raises(ValueError, match="not a known plan preset"):
         validate_args(_args(paged=True, spec_draft_plan="w9a9"), qwen)
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    return reduce_for_smoke(get_config("gemma3-12b"))
+
+
+def test_kv_splits_requires_paged(qwen):
+    with pytest.raises(ValueError, match="--kv-splits requires --paged"):
+        validate_args(_args(kv_splits="4"), qwen)
+    validate_args(_args(kv_splits="auto"), qwen)   # auto is fine unpaged
+
+
+def test_kv_splits_rejects_recurrent_arch(recurrent):
+    with pytest.raises(ValueError,
+                       match="incompatible with recurrent arch"):
+        validate_args(_args(paged=True, kv_splits="4"), recurrent)
+
+
+def test_kv_splits_value_checks(qwen):
+    with pytest.raises(ValueError, match="--kv-splits must be >= 1"):
+        validate_args(_args(paged=True, kv_splits="0"), qwen)
+    with pytest.raises(ValueError, match="--kv-splits must be 'auto'"):
+        validate_args(_args(paged=True, kv_splits="lots"), qwen)
+    validate_args(_args(paged=True, kv_splits="4"), qwen)
+
+
+def test_ring_requires_paged(gemma):
+    with pytest.raises(ValueError, match="--ring requires --paged"):
+        validate_args(_args(ring=True), gemma)
+
+
+def test_ring_requires_local_arch(qwen):
+    with pytest.raises(ValueError, match="sliding-window arch"):
+        validate_args(_args(paged=True, ring=True), qwen)
+
+
+def test_ring_rejects_prefix_cache(gemma):
+    with pytest.raises(ValueError,
+                       match="--ring is incompatible with --prefix-cache"):
+        validate_args(_args(paged=True, ring=True, prefix_cache=True), gemma)
+    validate_args(_args(paged=True, ring=True), gemma)
+    validate_args(_args(paged=True, ring=True, kv_splits="4"), gemma)
 
 
 def test_sampler_flag_ranges(qwen):

@@ -1,0 +1,186 @@
+"""Split-KV (flash-decoding) merge: property tests.
+
+The two-pass paged decode path (kernels/paged_attention.py) reduces each KV
+chunk to an unnormalized online-softmax partial — acc_c = sum exp(s - m_c) v,
+m_c = chunk max over masked scores, l_c = sum exp(s - m_c) — and a second
+fixed-shape pass merges the per-chunk triples:
+
+    M = max_c m_c;   out = sum_c e^{m_c - M} acc_c / sum_c e^{m_c - M} l_c
+
+The (m, l) pair is the log-sum-exp of the chunk in (max, sumexp) form, so
+the merge equals the flat masked softmax EXACTLY in exact arithmetic for ANY
+partition of the KV axis — including degenerate all-masked chunks (the
+null-block padding a non-dividing split produces), whose m_c = -1e30
+underflows their merge weight to an exact 0.0 instead of a NaN. These tests
+pin the float behaviour: partition invariance within float tolerance,
+bit-stable evaluation, all-masked chunks contributing bit-exact nothing, and
+the split paged-attention oracle agreeing with the unsplit one.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from _hyp_compat import given, settings, st  # noqa: E402
+
+from repro.kernels.paged_attention import merge_splitkv_partials  # noqa: E402
+from repro.kernels.ref import (  # noqa: E402
+    ref_paged_attention,
+    ref_paged_attention_splitkv,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _case(seed: int, n: int, d: int, mask_mode: str):
+    """Deterministic scores / values / mask for one softmax reduction."""
+    rng = np.random.default_rng(seed)
+    s = rng.normal(scale=4.0, size=(n,)).astype(np.float32)
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    if mask_mode == "none":
+        valid = np.ones((n,), bool)
+    elif mask_mode == "all":
+        valid = np.zeros((n,), bool)
+    else:
+        valid = rng.random((n,)) < 0.6
+        if not valid.any():
+            valid[rng.integers(n)] = True      # keep one key live
+    return s, v, valid
+
+
+def _cuts(seed: int, n: int, ns: int) -> list[int]:
+    """ns-chunk partition boundaries of [0, n) (chunks may be empty only at
+    the tail; interior chunks hold >= 1 key)."""
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    if ns >= n:
+        inner = list(range(1, n))
+    else:
+        inner = sorted(rng.choice(np.arange(1, n), size=ns - 1,
+                                  replace=False).tolist())
+    return [0] + inner + [n]
+
+
+def _partials(s, v, valid, cuts):
+    """Per-chunk (acc, m, l) with the kernel's masking convention, stacked
+    into merge_splitkv_partials' (B=1, ns, KV=1, G=1, ...) layout."""
+    accs, ms, ls = [], [], []
+    for a, b in zip(cuts[:-1], cuts[1:]):
+        sc = jnp.where(jnp.asarray(valid[a:b]), jnp.asarray(s[a:b]), -1e30)
+        m = jnp.max(sc, initial=-1e30)
+        p = jnp.exp(sc - m)
+        accs.append(p @ jnp.asarray(v[a:b]))
+        ms.append(m)
+        ls.append(jnp.sum(p))
+    o = jnp.stack(accs)[None, :, None, None, :]        # (1, ns, 1, 1, d)
+    m = jnp.stack(ms)[None, :, None, None]             # (1, ns, 1, 1)
+    l = jnp.stack(ls)[None, :, None, None]
+    return o, m, l
+
+
+def _merge(s, v, valid, cuts) -> np.ndarray:
+    return np.asarray(merge_splitkv_partials(*_partials(s, v, valid, cuts)))
+
+
+def _flat(s, v, valid) -> np.ndarray:
+    """Unsplit reference in f64: masked softmax @ values. A fully-masked
+    row degenerates to UNIFORM weights (every score is the shared -1e30
+    sentinel), matching jax.nn.softmax — the convention the engine relies
+    on never being reachable (a decode row always sees its own key)."""
+    sd = np.where(valid, s.astype(np.float64), -1e30)
+    p = np.exp(sd - sd.max())
+    return (p / p.sum()) @ v.astype(np.float64)
+
+
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(2, 24),
+       ns=st.integers(1, 6), d=st.integers(1, 8),
+       mask=st.one_of(st.just("none"), st.just("some")))
+def test_merge_matches_flat_softmax(seed, n, ns, d, mask):
+    """Any chunk partition merges to the unsplit masked softmax (f64 ref)
+    within a few f32 ulps — the merge introduces no partition-shaped
+    error term."""
+    s, v, valid = _case(seed, n, d, mask)
+    got = _merge(s, v, valid, _cuts(seed, n, min(ns, n)))[0, 0, 0]
+    np.testing.assert_allclose(got, _flat(s, v, valid),
+                               rtol=2e-5, atol=2e-6)
+
+
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(3, 24),
+       d=st.integers(1, 6))
+def test_merge_partition_invariant_and_bit_stable(seed, n, d):
+    """Two different partitions agree within float tolerance, and re-merging
+    the SAME partials is bit-identical (deterministic merge, no data-
+    dependent control flow)."""
+    s, v, valid = _case(seed, n, d, "some")
+    cuts_a = _cuts(seed, n, min(2, n))
+    cuts_b = _cuts(seed + 1, n, min(n, 5))
+    a, b = _merge(s, v, valid, cuts_a), _merge(s, v, valid, cuts_b)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-6)
+    np.testing.assert_array_equal(a, _merge(s, v, valid, cuts_a))
+
+
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(2, 16),
+       d=st.integers(1, 6))
+def test_all_masked_chunk_is_bitwise_inert(seed, n, d):
+    """Appending an all-masked chunk leaves the merge BIT-identical, for
+    BOTH triples such a chunk can produce: the idealized (acc=0, m=-1e30,
+    l=0), and the kernel's actual reduction of a null-block chunk
+    (exp(-1e30 - (-1e30)) = 1 per key, so acc=sum(v), m=-1e30, l=count).
+    Either way its merge weight exp(-1e30 - M) underflows to exact 0.0 —
+    never a NaN — whenever any real chunk holds a live key."""
+    s, v, valid = _case(seed, n, d, "some")
+    o, m, l = _partials(s, v, valid, _cuts(seed, n, min(3, n)))
+    base = np.asarray(merge_splitkv_partials(o, m, l))
+    pad = jnp.full_like(m[:, :1], -1e30)
+    for acc_pad, l_pad in [
+        (jnp.zeros_like(o[:, :1]), jnp.zeros_like(l[:, :1])),
+        (jnp.sum(jnp.asarray(v), 0)[None, None, None, None],
+         jnp.full_like(l[:, :1], float(n))),
+    ]:
+        got = np.asarray(merge_splitkv_partials(
+            jnp.concatenate([o, acc_pad], axis=1),
+            jnp.concatenate([m, pad], axis=1),
+            jnp.concatenate([l, l_pad], axis=1)))
+        assert np.isfinite(got).all()
+        np.testing.assert_array_equal(got, base)
+
+
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(2, 12),
+       ns=st.integers(1, 4), d=st.integers(1, 4))
+def test_fully_masked_row_matches_unsplit_convention(seed, n, ns, d):
+    """Every chunk masked (unreachable in the engine — a decode row always
+    sees at least its own key): the merge degenerates to the SAME uniform-
+    weight output the unsplit masked softmax produces, finite and NaN-free,
+    for any partition."""
+    s, v, valid = _case(seed, n, d, "all")
+    got = _merge(s, v, valid, _cuts(seed, n, min(ns, n)))[0, 0, 0]
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, _flat(s, v, valid), rtol=2e-5, atol=2e-6)
+
+
+@given(seed=st.integers(0, 2 ** 16), nb=st.integers(1, 6),
+       kv_splits=st.integers(1, 8))
+def test_split_paged_oracle_matches_unsplit(seed, nb, kv_splits):
+    """End-to-end over the paged layout: the split oracle (python-loop
+    chunking + standalone merge) agrees with the unsplit ref oracle for any
+    split count — including splits that don't divide the block count and
+    splits larger than it (all-null padded chunks)."""
+    rng = np.random.default_rng(seed)
+    B, KV, G, hd, bs = 2, 2, 2, 8, 4
+    n_blocks = B * nb + 1
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), jnp.float32)
+    kp = jnp.asarray(rng.integers(-127, 128, (n_blocks, bs, KV, hd)),
+                     jnp.int8)
+    vp = jnp.asarray(rng.integers(-127, 128, (n_blocks, bs, KV, hd)),
+                     jnp.int8)
+    ksc = jnp.asarray(rng.random((n_blocks, bs, KV)) * 0.02 + 0.01,
+                      jnp.float32)
+    vsc = jnp.asarray(rng.random((n_blocks, bs, KV)) * 0.02 + 0.01,
+                      jnp.float32)
+    tables = jnp.asarray(
+        1 + np.arange(B * nb).reshape(B, nb) % (n_blocks - 1), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, nb * bs + 1, (B,)), jnp.int32)
+    want = ref_paged_attention(q, kp, ksc, vp, vsc, tables, lengths, bits=8)
+    got = ref_paged_attention_splitkv(q, kp, ksc, vp, vsc, tables, lengths,
+                                      bits=8, kv_splits=kv_splits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
