@@ -21,8 +21,8 @@ Workloads:
 
 3. Quantized serving (the paper's deployment form through the engine): the
    same mixed-length workload on a fully PLANNED w2a2 model — every dense
-   runs kernels/ops.lut_gemm with precomputed per-layer product LUTs and
-   dynamically quantized activations — vs the bf16 engine. Reported:
+   dispatches the lut_gemm KernelOp with precomputed per-layer product LUTs
+   and dynamically quantized activations — vs the bf16 engine. Reported:
    tokens/s, weight bytes moved per decoded token (packed vs bf16), and the
    kernel-dispatch counters. CI gates: the workload completes, greedy decode
    is token-deterministic run-to-run, and the lut_gemm dispatch counter is
@@ -66,6 +66,15 @@ Workloads:
    single-pass at 32k, zero steady-state recompiles, and ring-paged
    local-layer pool bytes + per-request ring blocks flat from 8k to 32k
    while the full-table equivalent grows with context.
+
+9. Fused bit-sliced serving (docs/quantization.md): the mixed-length
+   workload on a w2a8_bs plan, where every dense leaf hands RAW bf16
+   activations to the fused-prologue kernel (quantization inside the
+   dispatch). Tokens are identical either way, so the gate reads the
+   kernel_dispatch_total labels: lut_gemm_bs_fused must be nonzero and the
+   two-step lut_gemm_bitsliced op must never fire — proving the serving
+   path actually took the fused route rather than silently falling back.
+   CI also gates workload completion and run-to-run token determinism.
 
 Reported per backend: wall time, requests/s, tokens/s, mean/median
 time-to-first-token, decode steps, prefill tokens computed/shared, and jit
@@ -229,8 +238,8 @@ def _weight_bytes(tree) -> int:
 def _quantized_serving(cfg, params, prompts) -> dict:
     """Planned w2a2 engine vs the bf16 engine on mixed-length requests.
 
-    The quantized engine's every plan-covered dense reaches
-    kernels/ops.lut_gemm (asserted via the trace-time dispatch counter — a
+    The quantized engine's every plan-covered dense dispatches the
+    lut_gemm KernelOp (asserted via the trace-time dispatch counter — a
     silent fallback to full dequantization would leave it at zero), runs the
     workload twice to check greedy decode is token-deterministic run-to-run,
     and reports weight-bytes-moved per decoded token vs bf16 (each decode
@@ -268,6 +277,40 @@ def _quantized_serving(cfg, params, prompts) -> dict:
         "weight_bytes_moved_per_token_ratio": round(qb / max(fb, 1), 4),
         "tok_per_s_vs_bf16": round(
             q1["tok_per_s"] / max(bf["tok_per_s"], 1e-9), 3),
+    }
+
+
+_FUSED_PLAN = "w2a8_bs"
+
+
+def _fused_serving(cfg, params, prompts) -> dict:
+    """w2a8_bs bit-sliced engine: every plan-covered dense must route
+    through the fused-prologue op (lut_gemm_bs_fused — activation
+    quantization inside the kernel), with the two-step lut_gemm_bitsliced
+    dispatch count pinned at ZERO. A silent fall-back to the two-step route
+    would still serve correct tokens, so only the dispatch counters can
+    prove the fused path is what actually ran. Run twice for greedy
+    run-to-run determinism."""
+    qcfg = dataclasses.replace(cfg, quant=qplan.get_plan(_FUSED_PLAN))
+    qparams = jax.block_until_ready(lm.quantize_tree(params, qcfg))
+
+    def eng():
+        return Engine(qcfg, qparams, n_slots=_N_SLOTS, max_len=_MAX_LEN,
+                      block_size=_BLOCK, chunk_size=_CHUNK,
+                      max_queue=2 * _N_REQUESTS)
+
+    with obs_metrics.scoped() as reg:
+        f1 = _drive(eng, prompts, warmup=True)
+    counts = {k: v for k, v in reg.dispatch_counts().items() if ":" not in k}
+    f2 = _drive(eng, prompts, warmup=True)
+    return {
+        "plan": _FUSED_PLAN,
+        "n_requests": len(prompts),
+        "fused": {k: v for k, v in f1.items() if k != "outputs"},
+        "deterministic_run_to_run": f1["outputs"] == f2["outputs"],
+        "kernel_dispatches": counts,
+        "fused_dispatched": counts.get("lut_gemm_bs_fused", 0) > 0,
+        "two_step_dispatches": counts.get("lut_gemm_bitsliced", 0),
     }
 
 
@@ -721,6 +764,15 @@ def run(json_out: str = "BENCH_serving.json") -> dict:
           f"{quantized['kernel_dispatches'].get('lut_gemm', 0)}, "
           f"deterministic {quantized['deterministic_run_to_run']}", flush=True)
 
+    print(f"[serving] fused bit-sliced engine: plan {_FUSED_PLAN}, "
+          f"{_Q_REQUESTS} reqs (in-kernel activation quant)", flush=True)
+    fused = _fused_serving(cfg, params, prompts[:_Q_REQUESTS])
+    print(f"[serving]   {fused['fused']['tok_per_s']} tok/s, "
+          f"lut_gemm_bs_fused dispatches "
+          f"{fused['kernel_dispatches'].get('lut_gemm_bs_fused', 0)} "
+          f"(two-step {fused['two_step_dispatches']}), deterministic "
+          f"{fused['deterministic_run_to_run']}", flush=True)
+
     print(f"[serving] speculative serving: w2a2 drafter, k={_SPEC_K}, "
           f"{_SPEC_REQUESTS} reqs mixed greedy+sampled", flush=True)
     spec = _spec_serving(cfg, params, prompts[:_SPEC_REQUESTS])
@@ -797,6 +849,7 @@ def run(json_out: str = "BENCH_serving.json") -> dict:
             "prefill_token_savings": round(sp_savings, 3),
         },
         "quantized_serving": quantized,
+        "fused_serving": fused,
         "spec_serving": spec,
         "long_context": lc,
         "observability": obs,

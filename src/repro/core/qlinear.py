@@ -511,6 +511,25 @@ def dense_serve(
         # prefill+decode stays consistent with the full forward.
         if a_scale is None and qw.a_sc is not None and a_bits == qw.a_bits:
             a_scale = jnp.reshape(qw.a_sc, (1, 1)).astype(jnp.float32)
+        if qw.kernel == "lut_gemm_bitsliced" and not (
+                qw.tp == "row" and kreg._tp_active(qw.tp) is not None):
+            # Fused-prologue T-MAC route (ALL backends, including 'ref' —
+            # the op's ref impl IS the optimized CPU formulation): raw
+            # activations go straight in; per-token quantization, the
+            # paired-plane integer core, and the full scale epilogue run
+            # inside the op. ``a_scale`` None means dynamic in-op row amax;
+            # the static (1, 1) / explicit scale rides the a_sc slot.
+            # Row-TP leaves fall through to the two-step route below — the
+            # fused op only column-shards (a K split would change the
+            # dynamic scales), while two-step row-shards with one psum.
+            y = kreg.dispatch(
+                "lut_gemm_bs_fused", xm, qw.packed, qw.scales, a_scale,
+                w_bits=qw.bits, a_bits=a_bits, group_size=G,
+                backend=backend, block=block, tp=qw.tp)
+            y = y[:n_rows]
+            if bias is not None:
+                y = y + bias
+            return y.reshape(*lead, qw.out_features).astype(x.dtype)
         if a_scale is None:
             a_scale, _ = quant.compute_scale_zero_point(
                 xm, a_bits, signed=True, axis=0)                    # (M, 1)
@@ -534,9 +553,11 @@ def dense_serve(
             y = y * a_scale if G is not None \
                 else y * qw.scales[None, :] * a_scale
         elif qw.kernel == "lut_gemm_bitsliced":
-            # T-MAC route: the LUT is built from the activation CODES inside
-            # the kernel; weights are two's-complement bit planes. aq holds
-            # the signed code values directly (int8 carrier).
+            # Two-step T-MAC route (row-TP fallback): the LUT is built from
+            # the activation CODES inside the kernel; weights are two's-
+            # complement bit planes. aq holds the signed code values
+            # directly (int8 carrier). Bit-identical to the fused route
+            # per-channel — both sum the same exact integers.
             y = kreg.dispatch(
                 "lut_gemm_bitsliced", aq.astype(jnp.int8), qw.packed,
                 qw.scales if G is not None else None,

@@ -31,7 +31,13 @@ from repro.obs import metrics as obs_metrics
 from . import registry
 
 # ops the tuner can synthesize operands for (the dense serving routes)
-TUNABLE_OPS = ("dequant_matmul", "lut_gemm", "lut_gemm_bitsliced")
+TUNABLE_OPS = ("dequant_matmul", "lut_gemm", "lut_gemm_bitsliced",
+               "lut_gemm_bs_fused")
+
+# leaf kernel -> op dense_serve actually dispatches for it (bitsliced plans
+# route through the fused-prologue op, so its tiles are what tile_for must
+# stamp; the two-step op stays registered and directly tunable)
+_LEAF_OP = {"lut_gemm_bitsliced": "lut_gemm_bs_fused"}
 
 TileCache = dict  # (op, m, k, n, bits, group_size) -> (bm, bn, bk) | None
 
@@ -64,6 +70,13 @@ def _synth_args(op_name: str, m: int, k: int, n: int, *, bits: int,
         planes = jnp.asarray(rng.integers(0, 2 ** g, (bits, n, k // g)),
                              jnp.uint8)
         return (a, planes, scales if group_size else None), \
+            dict(w_bits=bits, a_bits=ab, group_size=group_size)
+    if op_name == "lut_gemm_bs_fused":
+        g = packing.BITPLANE_GROUP
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        planes = jnp.asarray(rng.integers(0, 2 ** g, (bits, n, k // g)),
+                             jnp.uint8)
+        return (x, planes, scales, None), \
             dict(w_bits=bits, a_bits=ab, group_size=group_size)
     raise ValueError(f"op {op_name!r} is not tunable; have {TUNABLE_OPS}")
 
@@ -132,12 +145,15 @@ def tune_leaf_tiles(
     cache: Optional[TileCache] = None,
 ) -> tuple:
     """Tune every requested M bucket for one leaf's problem shape; returns
-    the ``tiles`` aux tuple ((m, bm, bn, bk), ...) sorted by m."""
+    the ``tiles`` aux tuple ((m, bm, bn, bk), ...) sorted by m. The leaf's
+    kernel name maps through ``_LEAF_OP`` first, so bitsliced leaves tune
+    the fused-prologue op dense_serve will actually dispatch."""
     if qw_kernel not in TUNABLE_OPS:
         return ()
+    op_name = _LEAF_OP.get(qw_kernel, qw_kernel)
     tiles = []
     for m in sorted({int(v) for v in m_buckets}):
-        blk = tune(qw_kernel, m, k_padded, n, bits=bits, a_bits=a_bits,
+        blk = tune(op_name, m, k_padded, n, bits=bits, a_bits=a_bits,
                    group_size=group_size, backend=backend, cache=cache)
         if blk is not None:
             tiles.append((m, *blk))

@@ -53,7 +53,7 @@ def _group_lut(a_tile: jax.Array, group: int) -> jax.Array:
 
 
 def _plane_lookup(lut: jax.Array, pat: jax.Array, lookup_impl: str) -> jax.Array:
-    """Gather each weight pattern's subset sum: (bm, bk/g, 2^g) LUT x
+    """Gather each weight pattern's subset sum: (bm, bk/g, entries) LUT x
     (bn, bk/g) patterns -> (bm, bn, bk/g). 'take' is the vector-gather port
     of pshufb; 'onehot' routes the lookup through the MXU (f32)."""
     bm, bkg, entries = lut.shape
@@ -65,29 +65,44 @@ def _plane_lookup(lut: jax.Array, pat: jax.Array, lookup_impl: str) -> jax.Array
     return jnp.take(lutf, pat.astype(jnp.int32) + offs, axis=1)
 
 
+def _paired_tile_luts(lut, planes, bits: int, group: int):
+    """Fold bit-plane pairs into combined LUTs (ref._paired_plane_terms, the
+    tile-local form): planes (p, p+1) with coefficients (c0, c1) become ONE
+    2^(2g)-entry table clut[..., hi*2^g + lo] = c1*lut[hi] + c0*lut[lo],
+    indexed by pat[p] | pat[p+1]<<g — one gather amortizes both planes'
+    doubling steps. Odd ``bits`` leaves a trailing single-plane term.
+    Yields (idx (bn, bk/g) int32, clut (bm, bk/g, entries) int16, coef_sum)."""
+    from repro.kernels.ref import _paired_plane_terms
+    return _paired_plane_terms(lut, planes, bits, group)
+
+
 def _plane_partials(a, planes, *, bits, group, a_bits, lookup_impl,
                     part_len):
-    """Shared tile body: build the LUT, look up every plane, reduce each
-    ``part_len``-pattern run, and combine planes with the two's-complement
-    coefficients. Returns (bm, bn, bk/g/part_len) — f32-exact integers
-    ('take') or f32 ('onehot')."""
+    """Shared tile body: build the LUT, fold plane pairs into combined
+    tables (coefficients folded INTO the table entries), look each up once,
+    and reduce every ``part_len``-pattern run. Returns
+    (bm, bn, bk/g/part_len) — f32-exact integers ('take') or f32
+    ('onehot')."""
     bm, bk = a.shape
     _, bn, bkg = planes.shape
     lut = _group_lut(a, group)
-    # int16 stays safe while the largest partial |sum| fits 15 bits.
     amax = 1 << max(a_bits - 1, 0)
-    acc_dtype = (jnp.int16 if part_len * group * amax < 2 ** 15
-                 else jnp.int32)
     acc = None
-    for b, coef in enumerate(packing.bitplane_coeffs(bits)):
-        s = _plane_lookup(lut, planes[b], lookup_impl)   # (bm, bn, bkg)
+    for idx, clut, coef_sum in _paired_tile_luts(lut, planes, bits, group):
+        s = _plane_lookup(clut, idx, lookup_impl)         # (bm, bn, bkg)
         if s.dtype == jnp.float32:                        # onehot path
             part = s.reshape(bm, bn, bkg // part_len, part_len).sum(-1)
-            acc = part * coef if acc is None else acc + part * coef
         else:
+            # int16 run sums stay safe while the worst-case magnitude
+            # part_len * coef_sum * group * 2^(a_bits-1) fits 15 bits —
+            # coef_sum reaches 12 for the w4 high pair, so the bound is
+            # per-term, not global.
+            acc_dtype = (jnp.int16
+                         if part_len * coef_sum * group * amax < 2 ** 15
+                         else jnp.int32)
             part = s.reshape(bm, bn, bkg // part_len, part_len) \
                     .sum(-1, dtype=acc_dtype).astype(jnp.int32)
-            acc = part * coef if acc is None else acc + part * coef
+        acc = part if acc is None else acc + part
     return acc
 
 
@@ -209,6 +224,147 @@ def lut_gemm_bitsliced_pallas(
             lookup_impl=lookup_impl, k_axis=k_axis)
         in_specs = [a_spec, w_spec]
         args = [a_codes, w_planes]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(*args)
+
+
+# --------------------------------------------------------------------------- #
+# Fused prologue: raw activations in, scaled f32 out
+# --------------------------------------------------------------------------- #
+
+def _row_scale(x: jax.Array, a_bits: int) -> jax.Array:
+    """``quant.compute_scale_zero_point(axis=0)`` replicated in-kernel:
+    per-row symmetric amax calibration in the INPUT dtype (a bf16 tile keeps
+    a bf16 amax/scale, exactly like the two-step host-side call — the codes,
+    and therefore the outputs, must match bitwise)."""
+    bound = 1 << max(a_bits - 1, 0)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    return jnp.maximum(amax / bound, 1e-8)
+
+
+def _quantize_tile(x: jax.Array, a_scale: jax.Array, a_bits: int) -> jax.Array:
+    """``quant.quantize`` replicated in-kernel (same ops, same promotion)."""
+    qmin, qmax = -(1 << (a_bits - 1)), (1 << (a_bits - 1)) - 1
+    q = jnp.round(x / a_scale + 0.0)
+    return jnp.clip(q, qmin, qmax).astype(jnp.int8)
+
+
+def _bs_fused_kernel(*refs, bits, group, a_bits, group_size, lookup_impl,
+                     has_asc):
+    """Fused tile body: quantize the raw activation rows (dynamic amax or
+    the prefetched static scale), run the paired-plane integer core over the
+    FULL K row, and apply the complete scale epilogue — each output block is
+    written once (no K grid axis; the dynamic amax is a whole-row
+    reduction, which is why the fused kernel never tiles K)."""
+    if has_asc:
+        x_ref, w_ref, sc_ref, asc_ref, o_ref = refs
+    else:
+        x_ref, w_ref, sc_ref, o_ref = refs
+    x = x_ref[...]
+    a_scale = asc_ref[...] if has_asc else _row_scale(x, a_bits)
+    aq = _quantize_tile(x, a_scale, a_bits)
+    bkg = w_ref.shape[-1]
+    if group_size is None:
+        acc = _plane_partials(aq, w_ref[...], bits=bits, group=group,
+                              a_bits=a_bits, lookup_impl=lookup_impl,
+                              part_len=bkg)                  # (bm, bn, 1)
+        y = acc[..., 0].astype(jnp.float32) * sc_ref[...][:, 0][None, :]
+    else:
+        gg = group_size // group
+        acc = _plane_partials(aq, w_ref[...], bits=bits, group=group,
+                              a_bits=a_bits, lookup_impl=lookup_impl,
+                              part_len=gg)                   # (bm, bn, ng)
+        y = (acc.astype(jnp.float32) * sc_ref[...][None, :, :]).sum(-1)
+    o_ref[...] = y * a_scale.astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "a_bits", "group", "group_size", "lookup_impl",
+                     "bm", "bn", "bk", "interpret"),
+)
+def lut_gemm_bs_fused_pallas(
+    x: jax.Array,            # (M, K) raw bf16/f32 activations
+    w_planes: jax.Array,     # (bits, N, K/g) uint8 plane patterns
+    w_scales: jax.Array,     # (N,) per-channel | (N, K/G) group-wise
+    a_sc: jax.Array | None = None,       # static (1,1) / explicit (M,1) scale
+    *,
+    bits: int = 2,
+    a_bits: int = 8,
+    group: int = packing.BITPLANE_GROUP,
+    group_size: int | None = None,
+    lookup_impl: str = "take",
+    bm: int = 8,
+    bn: int = 256,
+    bk: int = 0,             # accepted for the (bm, bn, bk) block contract;
+    interpret: bool = False,  # ignored — the fused kernel never tiles K
+) -> jax.Array:
+    """Fused-prologue bit-sliced LUT GEMM: activation quantization (dynamic
+    per-row amax, or ``a_sc`` as-is), the paired-plane subset-sum core, and
+    the full weight x activation scale epilogue in ONE kernel body.
+    out = ((x / a_sc) . W^T_int) * w_scales * a_sc, bitwise identical to the
+    two-step quantize -> lut_gemm_bitsliced -> epilogue route per-channel
+    (group-wise: identical up to f32 rounding of the group-scale sum).
+
+    Blocks hold the whole K row (the dynamic amax reduces over it), so the
+    grid is (N/bn,) for decode shapes (M <= GEMV_ROWS) and (M/bm, N/bn)
+    otherwise; ``bk`` is ignored."""
+    del bk
+    assert bits in (1, 2, 3, 4), bits
+    M, K = x.shape
+    nplanes, N, Kg = w_planes.shape
+    assert nplanes == bits and Kg * group == K, (x.shape, w_planes.shape)
+    grouped = group_size is not None
+    if grouped:
+        assert group_size % group == 0 and K % group_size == 0, \
+            (K, group_size, group)
+
+    gemv = M <= GEMV_ROWS
+    bm = M if gemv else _fit(bm, M)
+    bn = _fit(bn, N)
+    bkg = K // group
+    cap = 8 * 1024 * 1024
+    # VMEM working set ~ the (bm, bn, bkg) int32 gather tile (+ the paired
+    # 2^(2g)-entry LUT, bm * bkg * 2^(2g) int16).
+    while bm * bn * bkg * 8 > cap and bn > 8:
+        bn = _fit(max(bn // 2, 1), N)
+
+    scv = w_scales.astype(jnp.float32)
+    if not grouped:
+        scv = scv.reshape(N, 1)
+    ns = scv.shape[-1]
+    has_asc = a_sc is not None
+
+    if gemv:
+        x_spec = pl.BlockSpec((bm, K), lambda j: (0, 0))
+        w_spec = pl.BlockSpec((bits, bn, bkg), lambda j: (0, j, 0))
+        sc_spec = pl.BlockSpec((bn, ns), lambda j: (j, 0))
+        asc_spec = pl.BlockSpec((bm, 1), lambda j: (0, 0))
+        o_spec = pl.BlockSpec((bm, bn), lambda j: (0, j))
+        grid = (N // bn,)
+    else:
+        x_spec = pl.BlockSpec((bm, K), lambda i, j: (i, 0))
+        w_spec = pl.BlockSpec((bits, bn, bkg), lambda i, j: (0, j, 0))
+        sc_spec = pl.BlockSpec((bn, ns), lambda i, j: (j, 0))
+        asc_spec = pl.BlockSpec((bm, 1), lambda i, j: (i, 0))
+        o_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+        grid = (M // bm, N // bn)
+
+    in_specs = [x_spec, w_spec, sc_spec]
+    args = [x, w_planes, scv]
+    if has_asc:
+        in_specs.append(asc_spec)
+        args.append(jnp.broadcast_to(jnp.asarray(a_sc).reshape(-1, 1),
+                                     (M, 1)))
+    kernel = functools.partial(
+        _bs_fused_kernel, bits=bits, group=group, a_bits=a_bits,
+        group_size=group_size, lookup_impl=lookup_impl, has_asc=has_asc)
     return pl.pallas_call(
         kernel,
         grid=grid,

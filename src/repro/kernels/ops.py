@@ -1,112 +1,60 @@
-"""DEPRECATED wrapper module — superseded by ``repro.kernels.registry``.
+"""REMOVED wrapper module — superseded by ``repro.kernels.registry``.
 
-PR 6 replaced the five hand-written wrappers that lived here (each
-re-implementing backend resolve, TP shard-map wrapping, and dispatch
-counting) with the declarative ``KernelOp`` registry. Every function below
-is a thin shim that emits ``DeprecationWarning`` and forwards to
-``registry.dispatch`` with its old signature intact; the dispatch-count API
-re-exports point at the registry's single counter.
+PR 6 replaced the hand-written kernel wrappers that lived here with the
+declarative ``KernelOp`` registry and left DeprecationWarning shims behind;
+this PR deletes the shims. The module itself stays importable so stale
+``from repro.kernels import ops`` lines fail at the first ATTRIBUTE access
+with a pointer to the replacement, not with a bare ImportError at a
+distance from the offending call.
 
-New call sites should use::
+Every call site is one mechanical rewrite away::
 
     from repro.kernels import registry as kr
     kr.dispatch("lut_gemm", a_packed, w_packed, lut.table, w_scales,
                 w_bits=..., a_bits=..., backend=..., tp=...)
+
+Dispatch counters moved to ``repro.obs.metrics``: ``scoped()`` for isolated
+reads, ``global_registry().dispatch_counts()`` for the process view.
 """
 
 from __future__ import annotations
 
-import warnings
+# old name -> replacement spelling, shown verbatim in the error message
+_REMOVED = {
+    "lut_gemm": 'registry.dispatch("lut_gemm", a_packed, w_packed, '
+                "lut.table, w_scales, w_bits=..., a_bits=..., ...)",
+    "dequant_matmul": 'registry.dispatch("dequant_matmul", a, w_packed, '
+                      "codebook, scales, bits=..., ...)",
+    "lut65k_gemm": 'registry.dispatch("lut65k_gemm", a_packed, w_packed, '
+                   'table, backend="ref")',
+    "expert_dequant_matmul": 'registry.dispatch("expert_dequant_matmul", '
+                             "x, w_packed, codebook, scales, bits=..., ...)",
+    "expert_lut_gemm": 'registry.dispatch("expert_lut_gemm", a_packed, '
+                       "w_packed, lut.table, w_scales, w_bits=..., ...)",
+    "kv_cache_attention": 'registry.dispatch("kv_cache_attention", q, '
+                          "k_packed, k_sc, v_packed, v_sc, lengths, ...)",
+    "paged_attention": 'registry.dispatch("paged_attention", q, k_pool, '
+                       "k_sc, v_pool, v_sc, block_tables, lengths, ...)",
+    "DISPATCH_COUNTS": "repro.obs.metrics.global_registry()"
+                       ".dispatch_counts()",
+    "dispatch_counts": "repro.obs.metrics.global_registry()"
+                       ".dispatch_counts()",
+    "reset_dispatch_counts": "repro.obs.metrics.global_registry()"
+                             ".clear(obs.metrics.KERNEL_DISPATCH)",
+    "_resolve": "repro.kernels.registry.resolve_backend",
+    "_tp_active": "repro.kernels.registry._tp_active",
+    "_count": "repro.kernels.registry._count",
+}
 
-import jax
-
-from repro.core.lut import ProductLUT
-from . import registry as _reg
-from .registry import (DISPATCH_COUNTS, dispatch_counts,   # noqa: F401
-                       reset_dispatch_counts)
-
-__all__ = [
-    "DISPATCH_COUNTS", "dispatch_counts", "reset_dispatch_counts",
-    "lut_gemm", "dequant_matmul", "lut65k_gemm", "expert_dequant_matmul",
-    "expert_lut_gemm", "kv_cache_attention", "paged_attention",
-]
-
-# legacy private helpers some call sites imported
-_resolve = _reg.resolve_backend
-_tp_active = _reg._tp_active
-_count = _reg._count
-
-
-def _warn(name: str) -> None:
-    warnings.warn(
-        f"repro.kernels.ops.{name} is deprecated; use "
-        f"repro.kernels.registry.dispatch({name!r}, ...) instead",
-        DeprecationWarning, stacklevel=3)
-
-
-def lut_gemm(a_packed, w_packed, lut: ProductLUT, *, scheme="d",
-             lookup_impl="take", w_scales=None, group_size=None,
-             backend="auto", block=None, tp=None) -> jax.Array:
-    """Deprecated shim for ``registry.dispatch('lut_gemm', ...)``."""
-    _warn("lut_gemm")
-    return _reg.dispatch(
-        "lut_gemm", a_packed, w_packed, lut.table, w_scales,
-        w_bits=lut.w_bits, a_bits=lut.a_bits, scheme=scheme,
-        lookup_impl=lookup_impl, group_size=group_size,
-        backend=backend, block=block, tp=tp)
+__all__: list[str] = []
 
 
-def dequant_matmul(a, w_packed, codebook, scales, *, bits, group_size=None,
-                   backend="auto", block=None, tp=None) -> jax.Array:
-    """Deprecated shim for ``registry.dispatch('dequant_matmul', ...)``."""
-    _warn("dequant_matmul")
-    return _reg.dispatch(
-        "dequant_matmul", a, w_packed, codebook, scales, bits=bits,
-        group_size=group_size, backend=backend, block=block, tp=tp)
-
-
-def lut65k_gemm(a_packed, w_packed, table) -> jax.Array:
-    """Deprecated shim for ``registry.dispatch('lut65k_gemm', ...)``."""
-    _warn("lut65k_gemm")
-    return _reg.dispatch("lut65k_gemm", a_packed, w_packed, table,
-                         backend="ref")
-
-
-def expert_dequant_matmul(x, w_packed, codebook, scales, *, bits,
-                          group_size=None, backend="auto", block=None,
-                          tp=None) -> jax.Array:
-    """Deprecated shim for ``registry.dispatch('expert_dequant_matmul', ...)``."""
-    _warn("expert_dequant_matmul")
-    return _reg.dispatch(
-        "expert_dequant_matmul", x, w_packed, codebook, scales, bits=bits,
-        group_size=group_size, backend=backend, block=block, tp=tp)
-
-
-def expert_lut_gemm(a_packed, w_packed, lut: ProductLUT, *, scheme="d",
-                    lookup_impl="take", w_scales=None, group_size=None,
-                    backend="auto", block=None, tp=None) -> jax.Array:
-    """Deprecated shim for ``registry.dispatch('expert_lut_gemm', ...)``."""
-    _warn("expert_lut_gemm")
-    return _reg.dispatch(
-        "expert_lut_gemm", a_packed, w_packed, lut.table, w_scales,
-        w_bits=lut.w_bits, a_bits=lut.a_bits, scheme=scheme,
-        lookup_impl=lookup_impl, group_size=group_size,
-        backend=backend, block=block, tp=tp)
-
-
-def kv_cache_attention(q, k_packed, k_sc, v_packed, v_sc, lengths, *,
-                       bits=4, backend="auto", bs=512) -> jax.Array:
-    """Deprecated shim for ``registry.dispatch('kv_cache_attention', ...)``."""
-    _warn("kv_cache_attention")
-    return _reg.dispatch(
-        "kv_cache_attention", q, k_packed, k_sc, v_packed, v_sc, lengths,
-        bits=bits, bs=bs, backend=backend)
-
-
-def paged_attention(q, k_pool, k_sc, v_pool, v_sc, block_tables, lengths, *,
-                    bits=4, backend="auto") -> jax.Array:
-    """Deprecated shim for ``registry.dispatch('paged_attention', ...)``."""
-    _warn("paged_attention")
-    return _reg.dispatch(
-        "paged_attention", q, k_pool, k_sc, v_pool, v_sc, block_tables,
-        lengths, bits=bits, backend=backend)
+def __getattr__(name: str):
+    if name in _REMOVED:
+        repl = _REMOVED[name]
+        if not repl.startswith("repro."):
+            repl = f"repro.kernels.{repl}"
+        raise AttributeError(
+            f"repro.kernels.ops.{name} was removed; use {repl} instead")
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

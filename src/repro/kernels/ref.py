@@ -107,6 +107,50 @@ def _bitplane_pattern_matrix(group: int) -> jax.Array:
     return jnp.stack([(p >> j) & 1 for j in range(group)]).astype(jnp.int16)
 
 
+_LUT_LANES = 2  # int16 LUT entries packed per int32 gather word (M >= 2)
+
+
+def _paired_plane_terms(lut16, w_planes, bits: int, group: int):
+    """Fold bit-plane pairs into combined LUTs so one gather covers TWO
+    planes (the vector analogue of T-MAC's double-width pshufb).
+
+    For planes (p, p+1) with coefficients (c0, c1) the 2^(2g)-entry table
+    clut[..., hi*2^g + lo] = c1*lut16[..., hi] + c0*lut16[..., lo] makes
+    clut[idx] with idx = pat[p] | pat[p+1]<<g equal to the two plane
+    partials combined — algebraically exact in int16 (|entry| <=
+    (|c0|+|c1|) * g * 2^(a_bits-1) <= 12*4*128 for the supported widths).
+    Odd ``bits`` leaves one trailing single-plane term. Returns
+    [(idx (N, K/g) int32, lut (..., entries) int16, coef_sum), ...].
+    """
+    coeffs = packing.bitplane_coeffs(bits)
+    entries = lut16.shape[-1]
+    terms = []
+    for p in range(0, bits - 1, 2):
+        c0, c1 = int(coeffs[p]), int(coeffs[p + 1])
+        clut = (c1 * lut16[..., :, None] + c0 * lut16[..., None, :]) \
+            .reshape(*lut16.shape[:-1], entries * entries)
+        idx = (w_planes[p].astype(jnp.int32)
+               | (w_planes[p + 1].astype(jnp.int32) << group))
+        terms.append((idx, clut, abs(c0) + abs(c1)))
+    if bits % 2:
+        c = int(coeffs[bits - 1])
+        terms.append((w_planes[bits - 1].astype(jnp.int32), lut16 * c, abs(c)))
+    return terms
+
+
+def _int16_run(coef_sum: int, group: int, G: int) -> int:
+    """Longest pattern run whose int16 partial sums provably cannot
+    overflow: run * coef_sum * group * 2^(a_bits-1) < 2^15 with the int8
+    code carrier (|code| <= 128), and run must divide G. Returns 1 when no
+    run is safe (sum straight in int32). NB the w4 high pair (coef_sum 12)
+    bounds runs at 4 — a fixed 16 would overflow at |entry| up to 6144."""
+    bound = coef_sum * group * 128
+    for run in (32, 16, 8, 4, 2):
+        if run * bound < (1 << 15) and G % run == 0:
+            return run
+    return 1
+
+
 def ref_lut_gemm_bitsliced(
     a_codes: jax.Array,      # (M, K) int8 SIGNED activation codes
     w_planes: jax.Array,     # (bits, N, K/g) uint8 two's-complement planes
@@ -119,9 +163,9 @@ def ref_lut_gemm_bitsliced(
     """Bit-sliced LUT GEMM oracle (T-MAC decomposition, PAPERS.md).
 
     The per-token LUT holds subset sums of ``group`` consecutive activation
-    codes: lut[m, kg, p] = sum_j bit_j(p) * a[m, kg*g+j] (int16). Each weight
-    plane's byte pattern indexes it directly; plane partials combine with the
-    two's-complement coefficients (1, ..., -2^(b-1)), so
+    codes: lut[m, kg, p] = sum_j bit_j(p) * a[m, kg*g+j] (int16). Bit planes
+    are folded pairwise into combined tables (``_paired_plane_terms``) so
+    one gather per pattern byte-pair replaces two, and
 
         out[m, n] = sum_k (idx[n,k] - 2^(b-1)) * a_codes[m, k]
 
@@ -129,32 +173,107 @@ def ref_lut_gemm_bitsliced(
     supported widths). With ``w_scales``/``group_size`` each scale-group's
     integer partial is scaled before accumulation, matching the fused
     epilogue of the grouped Pallas kernels.
+
+    This oracle doubles as the compiled CPU serving path (the registry's
+    'ref' backend), so the gather is laid out per M regime for XLA:CPU —
+    where gathers scalarize and row-major copies dominate:
+
+      M == 1   token-trailing layout: one flat (N*G,) gather from a
+               (G*entries, 1) table — the GEMV specialization that beats
+               the Eigen bf16 GEMV.
+      M >= 2   (ungrouped) LANE PACKING: two adjacent tokens' int16 LUT
+               entries share one int32 word, halving gather count again;
+               runs of ``_int16_run`` patterns accumulate in int16 before
+               widening (overflow-proof by construction).
+
+    Every regime sums the same exact integers, so outputs are bit-identical
+    across M — decode rows reproduce the full-forward rows exactly.
     """
     M, K = a_codes.shape
     nplanes, N, G = w_planes.shape
     assert nplanes == bits and G * group == K, (w_planes.shape, a_codes.shape)
     pat = _bitplane_pattern_matrix(group)
-    lut = jnp.einsum("mgj,jp->mgp",
-                     a_codes.reshape(M, G, group).astype(jnp.int16), pat)
-    lutf = lut.reshape(M, G * (2 ** group))
-    offs = (jnp.arange(G) * (2 ** group))[None, :]
+    lut16 = jnp.einsum("mgj,jp->mgp",
+                       a_codes.reshape(M, G, group).astype(jnp.int16), pat)
     if group_size is not None:
         assert group_size % group == 0 and K % group_size == 0, \
             (K, group_size, group)
         gg = group_size // group           # patterns per scale group
+    lanes = group_size is None and M >= 2
     acc = None
-    for b, coef in enumerate(packing.bitplane_coeffs(bits)):
-        flat = w_planes[b].astype(jnp.int32) + offs            # (N, G)
-        s = jnp.take(lutf, flat, axis=1)                       # (M, N, G) int16
-        if group_size is None:
-            part = s.sum(-1, dtype=jnp.int32)                  # (M, N)
+    for idx, clut, coef_sum in _paired_plane_terms(lut16, w_planes, bits,
+                                                   group):
+        entries = clut.shape[-1]
+        flat = (idx + (jnp.arange(G) * entries)[None, :]).reshape(-1)  # (N*G,)
+        if lanes:
+            Mp = M + (M % _LUT_LANES)
+            cl = clut if Mp == M else \
+                jnp.pad(clut, ((0, Mp - M), (0, 0), (0, 0)))
+            packed = jax.lax.bitcast_convert_type(
+                cl.transpose(1, 2, 0).reshape(G, entries, Mp // _LUT_LANES,
+                                              _LUT_LANES),
+                jnp.int32).reshape(G * entries, Mp // _LUT_LANES)
+            s = jax.lax.bitcast_convert_type(
+                jnp.take(packed, flat, axis=0), jnp.int16).reshape(N, G, Mp)
+            run = _int16_run(coef_sum, group, G)
+            if run > 1:
+                part = (s.reshape(N, G // run, run, Mp)
+                        .sum(2, dtype=jnp.int16).sum(1, dtype=jnp.int32))
+            else:
+                part = s.sum(1, dtype=jnp.int32)
+            part = part[:, :M]                                # (N, M)
         else:
-            part = s.reshape(M, N, G // gg, gg).sum(-1, dtype=jnp.int32)
-        acc = part * coef if acc is None else acc + part * coef
+            lutT = clut.transpose(1, 2, 0).reshape(G * entries, M)
+            s = jnp.take(lutT, flat, axis=0).reshape(N, G, M)
+            if group_size is None:
+                part = s.sum(1, dtype=jnp.int32)              # (N, M)
+            else:
+                part = s.reshape(N, G // gg, gg, M).sum(2, dtype=jnp.int32)
+        acc = part if acc is None else acc + part
     if group_size is None:
-        return acc.astype(jnp.float32)
-    return (acc.astype(jnp.float32)
-            * w_scales[None, :, :].astype(jnp.float32)).sum(-1)
+        return acc.T.astype(jnp.float32)                      # (M, N)
+    accf = acc.transpose(2, 0, 1).astype(jnp.float32)         # (M, N, K/G)
+    return (accf * w_scales[None, :, :].astype(jnp.float32)).sum(-1)
+
+
+def ref_lut_gemm_bs_fused(
+    x: jax.Array,            # (M, K) float activations (bf16/f32)
+    w_planes: jax.Array,     # (bits, N, K/g) uint8 two's-complement planes
+    w_scales: jax.Array,     # (N,) per-channel | (N, K/G) group-wise
+    a_sc: jax.Array | None = None,       # static/explicit activation scale
+    *,
+    w_bits: int,
+    a_bits: int = 8,
+    group: int = packing.BITPLANE_GROUP,
+    group_size: int | None = None,
+) -> jax.Array:
+    """Fused-prologue bit-sliced GEMM oracle: quantize the activations
+    in-graph with the EXACT ``quant.compute_scale_zero_point`` +
+    ``quant.quantize`` ops that ``core.qlinear.dense_serve`` runs two-step
+    (same dtype promotion — a bf16 ``x`` keeps a bf16 amax/scale), feed the
+    codes to the integer bit-sliced core, and apply the full scale epilogue
+    (weight scales x activation scale) instead of returning raw integer
+    partials. Per-channel outputs are bitwise identical to the two-step
+    route (exact integers + elementwise scaling); group-wise outputs match
+    to f32 rounding of the group-scale reduction (XLA may reassociate that
+    one f32 sum across lowerings).
+
+    ``a_sc`` short-circuits the in-graph calibration: a (1, 1) static
+    per-tensor scale (the leaf's offline-calibrated ``qw.a_sc``) or an
+    explicit (M, 1) per-row scale, used as-is.
+    """
+    if a_sc is not None:
+        a_scale = a_sc
+    else:
+        a_scale, _ = quant.compute_scale_zero_point(
+            x, a_bits, signed=True, axis=0)                   # (M, 1)
+    aq = quant.quantize(x, a_scale, bits=a_bits, signed=True)
+    if group_size is not None:
+        y = ref_lut_gemm_bitsliced(aq, w_planes, w_scales, bits=w_bits,
+                                   group=group, group_size=group_size)
+        return y * a_scale
+    y = ref_lut_gemm_bitsliced(aq, w_planes, bits=w_bits, group=group)
+    return y * w_scales[None, :] * a_scale
 
 
 def ref_quantize_pack_act(

@@ -25,21 +25,22 @@ Backends (same contract as the old wrappers):
   interpret). Every dispatch records a trace-time
   ``kernel_dispatch_total{op,backend,m_bucket,bits}`` counter into the
   repro.obs metrics registry stack, so tests and the CI serving gate can
-  assert a planned model actually reached its kernel route — scoped reads
-  via ``obs.metrics.scoped()`` replace the old global snapshot/reset dance
-  (``dispatch_counts``/``reset_dispatch_counts`` remain as deprecation
-  shims over the global registry).
+  assert a planned model actually reached its kernel route — read it with
+  ``obs.metrics.scoped()`` (isolated) or
+  ``obs.metrics.global_registry().dispatch_counts()`` (process view). The
+  PR 6/7 ``DISPATCH_COUNTS``/``dispatch_counts``/``reset_dispatch_counts``
+  deprecation shims are REMOVED; ``kernels.ops`` raises with a pointer at
+  the first stale access.
 
 QuantPlan's ``kernel`` route field resolves to a registry name — registering
 a new KernelOp is all it takes to give a plan a new route (the bit-sliced
-'lut_gemm_bitsliced' op enters exactly this way).
+'lut_gemm_bitsliced' op and its fused-prologue sibling 'lut_gemm_bs_fused'
+enter exactly this way).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from collections import Counter
 from typing import Any, Callable
 
 import jax
@@ -50,7 +51,8 @@ from repro.dist import sharding as dsh
 from repro.obs import metrics as obs_metrics
 from . import ref as _ref
 from .lut_gemm import lut_gemm_pallas
-from .lut_gemm_bitsliced import lut_gemm_bitsliced_pallas
+from .lut_gemm_bitsliced import (lut_gemm_bitsliced_pallas,
+                                 lut_gemm_bs_fused_pallas)
 from .lut_dequant_matmul import dequant_matmul_pallas
 from .expert_dequant_matmul import (expert_dequant_matmul_pallas,
                                     expert_lut_gemm_pallas)
@@ -58,42 +60,9 @@ from .kv_cache_attention import kv_cache_attention_pallas
 from .paged_attention import (paged_attention_pallas,
                               paged_attention_splitkv_pallas)
 
-# Legacy mirror of the global registry's kernel-dispatch view. Kept only so
-# pre-PR 7 callers holding a reference keep seeing live counts; it mirrors
-# the PROCESS-GLOBAL registry exactly (an obs.metrics.scoped(isolate=True)
-# block hides its dispatches from both). New code reads the metrics
-# registry instead.
-DISPATCH_COUNTS: Counter = Counter()
-
-_DEPRECATION = ("kernels.registry.{} is deprecated; use repro.obs.metrics "
-                "(scoped() for isolated reads, "
-                "global_registry().dispatch_counts() for the process view)")
-
-
-def reset_dispatch_counts() -> None:
-    """Deprecated: clears the process-global kernel-dispatch counters.
-    Prefer ``with obs.metrics.scoped(): ...`` — an isolated read needs no
-    reset and cannot race other tests."""
-    warnings.warn(_DEPRECATION.format("reset_dispatch_counts"),
-                  DeprecationWarning, stacklevel=2)
-    obs_metrics.global_registry().clear(obs_metrics.KERNEL_DISPATCH)
-    DISPATCH_COUNTS.clear()
-
-
-def dispatch_counts() -> dict:
-    """Deprecated: per-op (and per-op:backend) trace-time dispatch counts
-    from the PROCESS-GLOBAL metrics registry, in the legacy
-    ``{op: n, "op:backend": n}`` shape."""
-    warnings.warn(_DEPRECATION.format("dispatch_counts"),
-                  DeprecationWarning, stacklevel=2)
-    return obs_metrics.global_registry().dispatch_counts()
-
 
 def _count(op: str, backend: str, m=None, bits=None) -> None:
     obs_metrics.record_kernel_dispatch(op, backend, m=m, bits=bits)
-    if obs_metrics.global_active():
-        DISPATCH_COUNTS[op] += 1
-        DISPATCH_COUNTS[f"{op}:{backend}"] += 1
 
 
 def _on_tpu() -> bool:
@@ -288,6 +257,23 @@ def _bitsliced_tp(role, ax, n, arrays, static):
              P(None, ax) if sc is not None else P()), P(), True)
 
 
+def _bs_fused_tp(role, ax, n, arrays, static):
+    """Fused prologue shards column-wise only: activations stay replicated
+    (each shard re-quantizes its own copy — cheap, and the row amax needs
+    the full K row, so a K split would change the scales). 'row' returns
+    None and dense_serve falls back to the two-step route."""
+    if role != "col":
+        return None
+    _x, w_planes, sc, _a_sc = arrays
+    _bits, N, _Kg = w_planes.shape
+    if N % n != 0:
+        return None
+    grouped = static.get("group_size") is not None
+    return ((P(), P(None, ax, None),
+             P(ax, None) if grouped else P(ax), P()),
+            P(None, ax), False)
+
+
 # --------------------------------------------------------------------------- #
 # Tile spaces — candidate Pallas blocks for the offline autotuner
 # --------------------------------------------------------------------------- #
@@ -298,6 +284,14 @@ def _matmul_tile_space(m, k, n, static):
                 (m, 512, 512), (m, 512, 256)]
     return [(128, 128, 512), (128, 256, 512), (64, 256, 512),
             (64, 128, 1024), (32, 256, 256)]
+
+
+def _bs_fused_tile_space(m, k, n, static):
+    # the fused prologue never tiles K (the dynamic amax reduces over the
+    # whole row), so only (bm, bn) vary; bk=0 keeps the block contract
+    if m <= 4:
+        return [(m, 128, 0), (m, 256, 0), (m, 512, 0)]
+    return [(8, 256, 0), (8, 128, 0), (16, 256, 0)]
 
 
 # --------------------------------------------------------------------------- #
@@ -345,6 +339,25 @@ def _bitsliced_pl(a_codes, planes, sc, *, w_bits, a_bits=8, group=None,
     from repro.core import packing
     return lut_gemm_bitsliced_pallas(
         a_codes, planes, sc, bits=w_bits, a_bits=a_bits,
+        group=group or packing.BITPLANE_GROUP, group_size=group_size,
+        lookup_impl=lookup_impl, interpret=interpret, **blk)
+
+
+def _bs_fused_ref(x, planes, sc, a_sc, *, w_bits, a_bits=8, group=None,
+                  group_size=None, lookup_impl="take"):
+    del lookup_impl
+    from repro.core import packing
+    return _ref.ref_lut_gemm_bs_fused(
+        x, planes, sc, a_sc, w_bits=w_bits, a_bits=a_bits,
+        group=group or packing.BITPLANE_GROUP, group_size=group_size)
+
+
+def _bs_fused_pl(x, planes, sc, a_sc, *, w_bits, a_bits=8, group=None,
+                 group_size=None, lookup_impl="take", interpret=False,
+                 **blk):
+    from repro.core import packing
+    return lut_gemm_bs_fused_pallas(
+        x, planes, sc, a_sc, bits=w_bits, a_bits=a_bits,
         group=group or packing.BITPLANE_GROUP, group_size=group_size,
         lookup_impl=lookup_impl, interpret=interpret, **blk)
 
@@ -458,8 +471,19 @@ register(KernelOp(
     ref=_bitsliced_ref, pallas=_bitsliced_pl, tp_rule=_bitsliced_tp,
     tile_space=_matmul_tile_space,
     doc="T-MAC bit-sliced LUT GEMM: per-token subset-sum LUT, one gather "
-        "per weight plane, int16 tile accumulate, GEMV tiling for M<=4. "
+        "per PAIR of weight planes (coefficients folded into a combined "
+        "2^(2g)-entry table), int16 tile accumulate, GEMV tiling for M<=4. "
         "arrays: (a_codes, w_planes, w_scales|None)"))
+
+register(KernelOp(
+    name="lut_gemm_bs_fused",
+    ref=_bs_fused_ref, pallas=_bs_fused_pl, tp_rule=_bs_fused_tp,
+    tile_space=_bs_fused_tile_space,
+    doc="Fused-prologue bit-sliced LUT GEMM: per-token activation "
+        "quantization (dynamic row amax or a static per-tensor a_sc), the "
+        "paired-plane subset-sum core, and the full weight x activation "
+        "scale epilogue in one kernel — raw bf16/f32 activations in, "
+        "scaled f32 out. arrays: (x, w_planes, w_scales, a_sc|None)"))
 
 register(KernelOp(
     name="dequant_matmul",

@@ -43,7 +43,6 @@ import jax.numpy as jnp
 from repro.configs import get_config, reduce_for_smoke
 from repro.core.qlinear import QuantPolicy
 from repro.core.qplan import PLANS, get_plan, make_plan
-from repro.kernels import registry as kops
 from repro.models import lm, frontends
 from repro.launch import steps as St
 from repro.launch.mesh import make_tp_mesh
@@ -417,7 +416,6 @@ def main():
 
     t0 = time.time()
     obs_metrics.global_registry().clear(obs_metrics.KERNEL_DISPATCH)
-    kops.DISPATCH_COUNTS.clear()   # keep the legacy mirror in step
     qparams = jax.jit(lambda p: lm.quantize_tree(
         p, cfg, tp=args.tp, act_scales=act_scales))(params)
     qparams = jax.block_until_ready(qparams)

@@ -1,0 +1,359 @@
+"""Fused-prologue bit-sliced kernels (lut_gemm_bs_fused): in-kernel
+activation quantization vs the two-step quantize -> lut_gemm_bitsliced route.
+
+Per-channel outputs must be BIT-identical between fused and two-step on both
+backends — the integer core sums the same exact products and the scale
+epilogue is elementwise. Group-wise outputs match within f32 rounding of the
+group-scale reduction (XLA may reassociate that one f32 sum across
+lowerings; same boundary test_bitsliced_grouped_scales_match_ref pins).
+Also covered: static vs dynamic activation scales, bf16 inputs (the fused
+prologue keeps the two-step route's bf16 amax/scale weak typing), the
+tensor-parallel col rule + the row-role fallback to two-step, dense_serve
+routing and dispatch labels, and the serving engine end to end on a fused
+w2a8_bs plan (qwen + gemma3, prefill/decode/spec)."""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import packing, qplan, quant
+from repro.core.qlinear import QuantPolicy, dense_serve, quantize_weight
+from repro.kernels import registry
+from repro.models import lm
+from repro.obs import metrics as obs_metrics
+
+KEY = jax.random.PRNGKey(0)
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _case(M, N, K, bits, group_size=None, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((M, K)), dtype)
+    idx = jnp.asarray(rng.integers(0, 2 ** bits, (N, K)), jnp.uint8)
+    planes = packing.pack_bitplanes_signed(idx, bits)
+    sc_shape = (N, K // group_size) if group_size else (N,)
+    scales = jnp.asarray(rng.random(sc_shape) * 0.02 + 0.01, jnp.float32)
+    return x, planes, scales
+
+
+def _two_step(x, planes, scales, a_sc=None, *, w_bits, a_bits=8,
+              group_size=None, backend="ref"):
+    """The exact dense_serve two-step route: quantize the activations with
+    the same calibration ops, dispatch the integer kernel, apply the same
+    (left-associated) scale epilogue."""
+    if a_sc is not None:
+        a_scale = jnp.reshape(a_sc, (1, 1)).astype(jnp.float32)
+    else:
+        a_scale, _ = quant.compute_scale_zero_point(
+            x, a_bits, signed=True, axis=0)
+    codes = quant.quantize(x, a_scale, bits=a_bits, signed=True)
+    y = registry.dispatch("lut_gemm_bitsliced", codes, planes,
+                          scales if group_size else None,
+                          w_bits=w_bits, a_bits=a_bits,
+                          group_size=group_size, backend=backend)
+    if group_size:
+        return y * a_scale
+    return y * scales[None, :] * a_scale
+
+
+def _fused(x, planes, scales, a_sc=None, *, w_bits, a_bits=8,
+           group_size=None, backend="ref", block=None):
+    return registry.dispatch("lut_gemm_bs_fused", x, planes, scales, a_sc,
+                             w_bits=w_bits, a_bits=a_bits,
+                             group_size=group_size, backend=backend,
+                             block=block)
+
+
+# --------------------------------------------------------------------------- #
+# Fused == two-step, both backends
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("M", [1, 4, 8])
+def test_fused_bit_identical_to_two_step_per_channel(bits, M):
+    """Per-channel: the fused prologue quantizes to the SAME int8 codes the
+    two-step route produces, the integer core is shared, and the epilogue is
+    elementwise — so ref and Pallas fused outputs are array_equal to the
+    two-step route."""
+    x, planes, scales = _case(M, 16, 128, bits, seed=3 * bits + M)
+    want = _two_step(x, planes, scales, w_bits=bits)
+    for backend in ("ref", "pallas_interpret"):
+        got = _fused(x, planes, scales, w_bits=bits, backend=backend)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("M", [1, 4, 8])
+def test_fused_matches_two_step_grouped(M):
+    """Group-wise scales: same codes and integer sums, but the f32
+    group-scale reduction may be reassociated across lowerings — allclose,
+    not array_equal (the documented determinism boundary)."""
+    bits, G = 2, 32
+    x, planes, scales = _case(M, 16, 128, bits, group_size=G, seed=M)
+    want = np.asarray(_two_step(x, planes, scales, w_bits=bits,
+                                group_size=G))
+    for backend in ("ref", "pallas_interpret"):
+        got = np.asarray(_fused(x, planes, scales, w_bits=bits,
+                                group_size=G, backend=backend))
+        np.testing.assert_allclose(got, want, rtol=1e-6,
+                                   atol=1e-5 * np.abs(want).max())
+
+
+def test_fused_static_scale_short_circuits_calibration():
+    """An explicit a_sc must be used as-is (no in-kernel amax): fused output
+    equals the two-step route quantized with the same static scale, and
+    differs from the dynamically-calibrated one when the scales differ."""
+    bits, M = 2, 4
+    x, planes, scales = _case(M, 16, 128, bits, seed=11)
+    a_sc = jnp.asarray([[0.037]], jnp.float32)
+    want = _two_step(x, planes, scales, a_sc, w_bits=bits)
+    dyn = _two_step(x, planes, scales, w_bits=bits)
+    assert not np.array_equal(np.asarray(want), np.asarray(dyn))
+    for backend in ("ref", "pallas_interpret"):
+        got = _fused(x, planes, scales, a_sc, w_bits=bits, backend=backend)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_fused_bf16_keeps_two_step_weak_typing():
+    """bf16 activations calibrate in bf16 (weak typing) on the two-step
+    route; the fused prologue must reproduce that bit-for-bit — a silent
+    f32 upcast of the amax would quantize a few borderline codes off."""
+    bits, M = 2, 4
+    x, planes, scales = _case(M, 16, 128, bits, dtype=jnp.bfloat16, seed=5)
+    want = _two_step(x, planes, scales, w_bits=bits)
+    for backend in ("ref", "pallas_interpret"):
+        got = _fused(x, planes, scales, w_bits=bits, backend=backend)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_fused_block_override_changes_grid_not_result():
+    bits, M = 2, 8
+    x, planes, scales = _case(M, 32, 128, bits, seed=9)
+    want = _fused(x, planes, scales, w_bits=bits, backend="ref")
+    for block in [(8, 16, 0), (4, 32, 0), (8, 8, 0)]:
+        got = _fused(x, planes, scales, w_bits=bits,
+                     backend="pallas_interpret", block=block)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# --------------------------------------------------------------------------- #
+# dense_serve routing: bitsliced leaves dispatch the fused op
+# --------------------------------------------------------------------------- #
+
+def _bs_leaf(N=16, K=64, bits=2, group_size=None, a_sc=False):
+    w = jax.random.normal(KEY, (K, N))
+    pol = QuantPolicy(w_bits=bits, a_bits=8, group_size=group_size,
+                      kernel="lut_gemm_bitsliced")
+    qw = quantize_weight(w, pol)
+    if a_sc:
+        qw = dataclasses.replace(qw, a_sc=jnp.asarray(0.05, jnp.float32))
+    return qw
+
+
+@pytest.mark.parametrize("M", [1, 4, 8])
+@pytest.mark.parametrize("static_asc", [False, True])
+def test_dense_serve_routes_fused_and_matches_two_step(M, static_asc):
+    """dense_serve on a bitsliced leaf dispatches lut_gemm_bs_fused (never
+    the two-step pair) and its output is bit-identical to the explicit
+    two-step computation on the same leaf."""
+    qw = _bs_leaf(a_sc=static_asc)
+    x = jax.random.normal(jax.random.PRNGKey(M), (M, 64))
+    with obs_metrics.scoped() as reg:
+        y = dense_serve(qw, x, backend="pallas_interpret")
+    c = reg.dispatch_counts()
+    assert c.get("lut_gemm_bs_fused", 0) == 1, c
+    assert c.get("lut_gemm_bitsliced", 0) == 0, c
+    want = _two_step(x, qw.packed, qw.scales,
+                     qw.a_sc if static_asc else None, w_bits=qw.bits,
+                     backend="pallas_interpret").astype(x.dtype)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+
+
+def test_dispatch_labels_distinguish_fused_from_two_step():
+    """kernel_dispatch_total carries op='lut_gemm_bs_fused' labels distinct
+    from the two-step op — dashboards can tell the routes apart."""
+    qw = _bs_leaf()
+    x = jax.random.normal(KEY, (4, 64))
+    with obs_metrics.scoped() as reg:
+        dense_serve(qw, x, backend="ref")
+    n = reg.get(obs_metrics.KERNEL_DISPATCH, op="lut_gemm_bs_fused",
+                backend="ref", m_bucket="4", bits="2")
+    assert n == 1, reg.snapshot()["counters"]
+
+
+# --------------------------------------------------------------------------- #
+# Tensor parallelism: col shards bit-exactly; row falls back to two-step
+# --------------------------------------------------------------------------- #
+
+def _run_tp(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    prelude = """
+        import jax, jax.numpy as jnp, numpy as np
+    """
+    r = subprocess.run(
+        [sys.executable, "-c",
+         textwrap.dedent(prelude) + textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}"
+
+
+def test_fused_tp_col_bit_identical_to_unsharded():
+    """The col rule shards weight planes/scales over N and gathers outputs:
+    each shard computes the same exact integers, so the sharded fused op is
+    array_equal to the unsharded one (grouped included)."""
+    _run_tp("""
+        from repro.core import packing
+        from repro.dist import sharding as Sh
+        from repro.kernels import registry as kops
+        from repro.launch.mesh import make_cpu_mesh
+        mesh = make_cpu_mesh((8,), ("model",))
+        rng = np.random.default_rng(0)
+        bits, M, N, K, G = 2, 4, 64, 128, 32
+        x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+        idx = jnp.asarray(rng.integers(0, 4, (N, K)), jnp.uint8)
+        planes = packing.pack_bitplanes_signed(idx, bits)
+        for gs, sc_shape in ((None, (N,)), (G, (N, K // G))):
+            sc = jnp.asarray(rng.random(sc_shape) * 0.02 + 0.01, jnp.float32)
+            base = kops.dispatch("lut_gemm_bs_fused", x, planes, sc, None,
+                                 w_bits=bits, a_bits=8, group_size=gs,
+                                 backend="pallas_interpret")
+            def f(x, planes, sc):
+                with Sh.use_tp(mesh):
+                    return kops.dispatch("lut_gemm_bs_fused", x, planes, sc,
+                                         None, w_bits=bits, a_bits=8,
+                                         group_size=gs,
+                                         backend="pallas_interpret", tp="col")
+            got = jax.jit(f)(x, planes, sc)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+        # N that does not divide the axis falls back unsharded, never errors
+        idx6 = jnp.asarray(rng.integers(0, 4, (6, K)), jnp.uint8)
+        p6 = packing.pack_bitplanes_signed(idx6, bits)
+        sc6 = jnp.asarray(rng.random((6,)) * 0.02 + 0.01, jnp.float32)
+        base6 = kops.dispatch("lut_gemm_bs_fused", x, p6, sc6, None,
+                              w_bits=bits, a_bits=8,
+                              backend="pallas_interpret")
+        def g(x, p6, sc6):
+            with Sh.use_tp(mesh):
+                return kops.dispatch("lut_gemm_bs_fused", x, p6, sc6, None,
+                                     w_bits=bits, a_bits=8,
+                                     backend="pallas_interpret", tp="col")
+        np.testing.assert_array_equal(np.asarray(jax.jit(g)(x, p6, sc6)),
+                                      np.asarray(base6))
+        print("fused tp col OK")
+    """)
+
+
+def test_fused_row_role_keeps_two_step_route():
+    """Row-TP bitsliced leaves must NOT route through the fused op (the
+    fused prologue's whole-row amax cannot see a K-sharded row): dense_serve
+    keeps the two-step route, whose row rule psums exact integer partials."""
+    _run_tp("""
+        from repro.core.qlinear import QuantPolicy, dense_serve, \\
+            quantize_weight
+        from repro.dist import sharding as Sh
+        from repro.launch.mesh import make_cpu_mesh
+        from repro.obs import metrics as obs_metrics
+        mesh = make_cpu_mesh((8,), ("model",))
+        w = jax.random.normal(jax.random.PRNGKey(0), (128, 16))
+        pol = QuantPolicy(w_bits=2, a_bits=8, kernel="lut_gemm_bitsliced")
+        qrow = quantize_weight(w, pol, tp_role="row", tp_shards=8)
+        assert qrow.tp == "row"
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 128))
+        base = dense_serve(quantize_weight(w, pol), x,
+                           backend="pallas_interpret")
+        def f(x):
+            with Sh.use_tp(mesh):
+                return dense_serve(qrow, x, backend="pallas_interpret")
+        with obs_metrics.scoped() as reg:
+            got = jax.jit(f)(x)
+        c = reg.dispatch_counts()
+        assert c.get("lut_gemm_bitsliced", 0) == 1, c
+        assert c.get("lut_gemm_bs_fused", 0) == 0, c
+        np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                                   rtol=1e-5, atol=1e-5)
+        print("fused tp row fallback OK")
+    """)
+
+
+# --------------------------------------------------------------------------- #
+# Engine end to end on a fused plan (prefill / decode / spec)
+# --------------------------------------------------------------------------- #
+
+def _smoke_cfg(arch, plan):
+    cfg = reduce_for_smoke(get_config(arch))
+    return dataclasses.replace(cfg, quant=plan)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "gemma3-12b"])
+def test_engine_serves_fused_plan_deterministically(arch):
+    """w2a8_bs through the serving engine: prefill + decode run the fused
+    kernel (dispatch count > 0, two-step stays cold) and greedy output is
+    token-identical run to run."""
+    from repro.serving import Engine, Request
+    cfg = _smoke_cfg(arch, qplan.get_plan("w2a8_bs"))
+    params = lm.init_params(KEY, cfg, mode="plain")
+    qp = lm.quantize_tree(params, cfg)
+    rng = np.random.default_rng(0)
+    prompts = [np.asarray(rng.integers(0, cfg.vocab_size, (int(n),)),
+                          np.int32) for n in (5, 17, 9)]
+
+    def run_once():
+        eng = Engine(cfg, qp, n_slots=2, max_len=64, block_size=8,
+                     chunk_size=16)
+        reqs = [Request(uid=i, prompt=jnp.asarray(p), max_new=4)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            assert eng.submit(r)
+        eng.run()
+        assert all(r.done for r in reqs)
+        return [r.out for r in reqs]
+
+    with obs_metrics.scoped() as reg:
+        out1 = run_once()
+    c = reg.dispatch_counts()
+    assert c.get("lut_gemm_bs_fused", 0) > 0, c
+    assert c.get("lut_gemm_bitsliced", 0) == 0, c
+    out2 = run_once()
+    assert out1 == out2
+
+
+def test_greedy_spec_bit_identical_with_fused_drafter():
+    """Speculative decoding with a fused-w2a8_bs drafter keeps the greedy
+    output stream bit-identical to the non-spec engine (rejection sampling
+    only consults the target distribution on disagreement)."""
+    from repro.serving import Engine, Request
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    params = lm.init_params(KEY, cfg, mode="plain")
+    dcfg = dataclasses.replace(cfg, quant=qplan.get_plan("w2a8_bs"))
+    dparams = lm.quantize_tree(params, dcfg)
+    prompts = [jax.random.randint(jax.random.PRNGKey(i), (6 + 3 * i,),
+                                  0, cfg.vocab_size) for i in range(3)]
+
+    def run(spec):
+        kw = dict(spec_draft_params=dparams, spec_draft_cfg=dcfg,
+                  spec_k=3) if spec else {}
+        eng = Engine(cfg, params, n_slots=2, max_len=96, block_size=8,
+                     chunk_size=16, **kw)
+        reqs = [Request(uid=i, prompt=p, max_new=8)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_steps=100_000)
+        assert all(r.done for r in reqs)
+        return [r.out for r in reqs]
+
+    ref_out = run(spec=False)
+    with obs_metrics.scoped() as reg:
+        out = run(spec=True)
+    assert out == ref_out
+    assert reg.dispatch_counts().get("lut_gemm_bs_fused", 0) > 0

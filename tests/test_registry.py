@@ -1,8 +1,6 @@
 """KernelOp registry: the unified dispatch surface (backend resolution,
 trace-time counting, block overrides, optional-operand handling) and the
-deprecation shims the old kernels/ops wrappers left behind."""
-
-import warnings
+removal guards where the old kernels/ops deprecation shims used to live."""
 
 import jax
 import jax.numpy as jnp
@@ -26,9 +24,10 @@ def _lut_case(M=4, N=8, K=32, bits=2):
 
 def test_registry_lists_all_ops():
     names = registry.op_names()
-    for expected in ("lut_gemm", "lut_gemm_bitsliced", "dequant_matmul",
-                     "expert_dequant_matmul", "expert_lut_gemm",
-                     "lut65k_gemm", "kv_cache_attention", "paged_attention"):
+    for expected in ("lut_gemm", "lut_gemm_bitsliced", "lut_gemm_bs_fused",
+                     "dequant_matmul", "expert_dequant_matmul",
+                     "expert_lut_gemm", "lut65k_gemm", "kv_cache_attention",
+                     "paged_attention"):
         assert expected in names, names
     # every op declares a ref oracle; docs state the positional arity
     for n in names:
@@ -98,7 +97,8 @@ def test_none_operand_slots_are_reinserted():
 
 
 def test_tile_space_declared_for_matmul_ops():
-    for n in ("lut_gemm", "lut_gemm_bitsliced", "dequant_matmul"):
+    for n in ("lut_gemm", "lut_gemm_bitsliced", "lut_gemm_bs_fused",
+              "dequant_matmul"):
         space = registry.get(n).tile_space(1, 1024, 1024, {})
         assert space and all(len(b) == 3 for b in space)
         assert all(b[0] == 1 for b in space)    # GEMV candidates keep bm=M
@@ -111,73 +111,44 @@ def test_duplicate_registration_rejected():
 
 
 # --------------------------------------------------------------------------- #
-# Deprecation shims: old wrappers still work but warn, and route through
-# the registry (counters bump)
+# Removal guards: the PR 6/7 kernels/ops deprecation shims are GONE. Stale
+# imports must fail loudly at the first attribute access, with the error
+# pointing at registry.dispatch / obs.metrics — not silently half-work.
 # --------------------------------------------------------------------------- #
 
-def test_ops_shims_warn_and_match_registry():
+def test_ops_wrappers_removed_with_pointer():
+    for name in ("lut_gemm", "dequant_matmul", "lut65k_gemm",
+                 "expert_dequant_matmul", "expert_lut_gemm",
+                 "kv_cache_attention", "paged_attention"):
+        with pytest.raises(AttributeError, match="registry.dispatch"):
+            getattr(ops, name)
+
+
+def test_ops_counter_reexports_removed_with_pointer():
+    for name in ("DISPATCH_COUNTS", "dispatch_counts",
+                 "reset_dispatch_counts"):
+        with pytest.raises(AttributeError, match="obs.metrics"):
+            getattr(ops, name)
+    with pytest.raises(AttributeError, match="no attribute"):
+        ops.never_existed
+
+
+def test_registry_counter_shims_removed():
+    """The registry module no longer carries the global-counter mirror; the
+    obs metrics registry is the single source of dispatch counts (scoped
+    MetricsRegistry.dispatch_counts() is the supported read)."""
+    for name in ("DISPATCH_COUNTS", "dispatch_counts",
+                 "reset_dispatch_counts"):
+        assert not hasattr(registry, name), name
     ap, wp, plut = _lut_case()
     with obs_metrics.scoped() as reg:
-        with warnings.catch_warnings(record=True) as rec:
-            warnings.simplefilter("always")
-            old = ops.lut_gemm(ap, wp, plut, backend="pallas_interpret")
-    assert any(issubclass(w.category, DeprecationWarning) and
-               "lut_gemm" in str(w.message) for w in rec), \
-        [str(w.message) for w in rec]
-    assert reg.dispatch_counts().get("lut_gemm", 0) == 1
-    new = registry.dispatch("lut_gemm", ap, wp, plut.table, None,
-                            w_bits=plut.w_bits, a_bits=plut.a_bits,
-                            backend="pallas_interpret")
-    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
-
-
-def test_dequant_matmul_shim_warns():
-    bits = 2
-    a = jnp.asarray(RNG.normal(size=(4, 32)), jnp.float32)
-    wp = packing.pack(
-        jnp.asarray(RNG.integers(0, 4, (8, 32)), jnp.uint8), bits)
-    cb = quant.uniform_codebook(bits, signed=True)
-    sc = jnp.ones((8,), jnp.float32)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        old = ops.dequant_matmul(a, wp, cb.levels, sc, bits=bits,
-                                 backend="ref")
-    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
-    want = ref.ref_dequant_matmul(a, wp, cb.levels, sc, bits)
-    np.testing.assert_allclose(np.asarray(old), np.asarray(want), atol=1e-6)
-
-
-def test_ops_reexports_counters():
-    """Call sites that only imported the counters keep working unchanged."""
-    assert ops.DISPATCH_COUNTS is registry.DISPATCH_COUNTS
-    assert ops.dispatch_counts is registry.dispatch_counts
-    assert ops.reset_dispatch_counts is registry.reset_dispatch_counts
-
-
-def test_dispatch_count_shims_warn_and_mirror_registry():
-    """The module-level counter API is a deprecation shim over the obs
-    metrics registry: it warns, still returns the legacy dict shape, and
-    the legacy DISPATCH_COUNTS mirror stays consistent with the registry
-    view outside isolated scopes."""
-    ap, wp, plut = _lut_case()
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        registry.reset_dispatch_counts()
-    assert any(issubclass(w.category, DeprecationWarning) for w in rec), rec
-    registry.dispatch("lut_gemm", ap, wp, plut.table, None,
-                      w_bits=plut.w_bits, a_bits=plut.a_bits, backend="ref")
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        c = registry.dispatch_counts()
-    assert any(issubclass(w.category, DeprecationWarning) for w in rec), rec
-    assert c.get("lut_gemm") == 1 and c.get("lut_gemm:ref") == 1, c
-    assert dict(registry.DISPATCH_COUNTS) == c
-    # isolated scopes (the autotuner's probe mode) leak into neither view
-    with obs_metrics.scoped(isolate=True):
         registry.dispatch("lut_gemm", ap, wp, plut.table, None,
                           w_bits=plut.w_bits, a_bits=plut.a_bits,
                           backend="ref")
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore")
-        assert registry.dispatch_counts().get("lut_gemm") == 1
-        registry.reset_dispatch_counts()   # leave global state clean
+        # isolated scopes (the autotuner's probe mode) stay invisible
+        with obs_metrics.scoped(isolate=True):
+            registry.dispatch("lut_gemm", ap, wp, plut.table, None,
+                              w_bits=plut.w_bits, a_bits=plut.a_bits,
+                              backend="ref")
+    c = reg.dispatch_counts()
+    assert c.get("lut_gemm") == 1 and c.get("lut_gemm:ref") == 1, c

@@ -19,14 +19,16 @@ the split paged-attention oracle agreeing with the unsplit one.
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from _hyp_compat import given, settings, st  # noqa: E402
 
-from repro.kernels.paged_attention import merge_splitkv_partials  # noqa: E402
+from repro.kernels import registry  # noqa: E402
 from repro.kernels.ref import (  # noqa: E402
     ref_paged_attention,
     ref_paged_attention_splitkv,
 )
+from repro.kernels.paged_attention import merge_splitkv_partials  # noqa: E402
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
@@ -184,3 +186,107 @@ def test_split_paged_oracle_matches_unsplit(seed, nb, kv_splits):
                                       bits=8, kv_splits=kv_splits)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-6)
+
+
+# --------------------------------------------------------------------------- #
+# The Pallas split-KV decode kernel itself (interpret mode), against the
+# oracle above. The kernel folds a chunk block-by-block (online softmax)
+# where the oracle reduces it in one shot, so float agreement is allclose at
+# the unsplit paged kernel's tolerance — but the kernel is deterministic:
+# identical calls are BIT-identical.
+# --------------------------------------------------------------------------- #
+
+def _paged_case(seed, *, B=3, KV=2, G=2, hd=16, bs=8, nb=4,
+                lengths=(5, 19, 24)):
+    rng = np.random.default_rng(seed)
+    n_blocks = B * nb + 1
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), jnp.float32)
+    kp = jnp.asarray(rng.integers(-127, 128, (n_blocks, bs, KV, hd)),
+                     jnp.int8)
+    vp = jnp.asarray(rng.integers(-127, 128, (n_blocks, bs, KV, hd)),
+                     jnp.int8)
+    ksc = jnp.asarray(rng.random((n_blocks, bs, KV)) * 0.02 + 0.01,
+                      jnp.float32)
+    vsc = jnp.asarray(rng.random((n_blocks, bs, KV)) * 0.02 + 0.01,
+                      jnp.float32)
+    # disjoint shuffled tables; unused tail entries point at the null block
+    perm = rng.permutation(np.arange(1, n_blocks))
+    tables = np.zeros((B, nb), np.int32)
+    at = 0
+    for b in range(B):
+        used = -(-int(lengths[b]) // bs)
+        tables[b, :used] = perm[at:at + used]
+        at += used
+    return (q, kp, ksc, vp, vsc, jnp.asarray(tables),
+            jnp.asarray(lengths, jnp.int32))
+
+
+@pytest.mark.parametrize("kv_splits", [1, 2, 3, 5, 8])
+def test_splitkv_pallas_matches_oracle(kv_splits):
+    """Every split count — dividing (1, 2), non-dividing (3, 5) and larger
+    than the block count (8, all-null padded chunks) — matches both the
+    split oracle and the unsplit ref."""
+    args = _paged_case(31)
+    want = ref_paged_attention_splitkv(*args, bits=8, kv_splits=kv_splits)
+    got = registry.dispatch("paged_attention_splitkv", *args, bits=8,
+                            kv_splits=kv_splits, backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    flat = ref_paged_attention(*args, bits=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(flat),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_splitkv_pallas_matches_unsplit_kernel(bits):
+    """Split and unsplit Pallas kernels agree on the same pool (int8 and
+    packed-int4 dequant paths both), and the split kernel is run-to-run
+    bit-stable."""
+    q, kp, ksc, vp, vsc, tables, lengths = _paged_case(32)
+    if bits == 4:
+        kp = jnp.asarray(
+            np.random.default_rng(5).integers(0, 256, kp.shape[:-1]
+                                              + (kp.shape[-1] // 2,)),
+            jnp.uint8)
+        vp = jnp.asarray(
+            np.random.default_rng(6).integers(0, 256, vp.shape[:-1]
+                                              + (vp.shape[-1] // 2,)),
+            jnp.uint8)
+    args = (q, kp, ksc, vp, vsc, tables, lengths)
+    base = registry.dispatch("paged_attention", *args, bits=bits,
+                             backend="pallas_interpret")
+    got = registry.dispatch("paged_attention_splitkv", *args, bits=bits,
+                            kv_splits=2, backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=2e-4, atol=2e-4)
+    again = registry.dispatch("paged_attention_splitkv", *args, bits=bits,
+                              kv_splits=2, backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(again))
+
+
+def test_splitkv_pallas_all_masked_chunks_inert():
+    """Short sequences leave entire chunks past ``lengths`` (the second
+    chunk of every table is all null-block rows): those chunks' partials
+    must merge to exact zeros — finite outputs equal to the unsplit ref."""
+    args = _paged_case(33, lengths=(1, 3, 7))    # <= 1 block used each
+    got = registry.dispatch("paged_attention_splitkv", *args, bits=8,
+                            kv_splits=4, backend="pallas_interpret")
+    assert np.isfinite(np.asarray(got)).all()
+    want = ref_paged_attention(*args, bits=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_splitkv_ref_backend_dispatch():
+    """The registry's ref backend routes to the split oracle (tile override
+    threads kv_splits through the bn slot for the autotuner)."""
+    args = _paged_case(34)
+    want = ref_paged_attention_splitkv(*args, bits=8, kv_splits=3)
+    got = registry.dispatch("paged_attention_splitkv", *args, bits=8,
+                            kv_splits=3, backend="ref")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # block override: (bm, bn, bk) bn slot carries the split count
+    via_blk = registry.dispatch("paged_attention_splitkv", *args, bits=8,
+                                backend="pallas_interpret", block=(1, 3, 0))
+    np.testing.assert_allclose(np.asarray(via_blk), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
